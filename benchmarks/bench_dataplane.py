@@ -1,0 +1,137 @@
+"""Fig 7(a,b): latency + CPU of a single intra-node model-update
+transfer, REAL measurements of the three data planes:
+
+  LIFL — write once into the shared-memory object store, consumer maps a
+         zero-copy view (+ the fold touching the data once);
+  SF   — serverful gRPC-style: serialize → socketpair → deserialize
+         (one copy chain, no broker);
+  SL   — serverless: sidecar hop + message broker hop, each a
+         serialize/copy/deserialize through a local socket (the Fig 5
+         "basic serverless" pipeline: client → sidecar → broker →
+         sidecar → aggregator).
+
+Model sizes match the paper: ResNet-18 ≈ 44 MB, ResNet-34 ≈ 83 MB,
+ResNet-152 ≈ 232 MB (fp32).
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.gateway import deserialize_update, serialize_update
+from repro.core.objectstore import SharedMemoryObjectStore
+
+SIZES = {
+    "resnet18": 44 * 1024 * 1024 // 4,
+    "resnet34": 83 * 1024 * 1024 // 4,
+    "resnet152": 232 * 1024 * 1024 // 4,
+}
+
+
+def _socket_transfer(payload: bytes) -> bytes:
+    """One hop through a local socketpair (kernel networking path)."""
+    a, b = socket.socketpair()
+    received = bytearray()
+
+    def rx():
+        while len(received) < len(payload):
+            chunk = b.recv(1 << 20)
+            if not chunk:
+                break
+            received.extend(chunk)
+
+    t = threading.Thread(target=rx)
+    t.start()
+    view = memoryview(payload)
+    sent = 0
+    while sent < len(payload):
+        sent += a.send(view[sent : sent + (1 << 20)])
+    a.shutdown(socket.SHUT_WR)
+    t.join()
+    a.close()
+    b.close()
+    return bytes(received)
+
+
+def _consume(update: np.ndarray) -> float:
+    """The aggregator's fold (touch every element once)."""
+    return float(update.sum())
+
+
+def transfer_lifl(update: np.ndarray, store: SharedMemoryObjectStore) -> Tuple[float, float]:
+    t0 = time.perf_counter()
+    c0 = time.process_time()
+    key = store.put(update)               # gateway's one-time write
+    view = store.get(key)                 # zero-copy consume
+    _consume(view)
+    dt = time.perf_counter() - t0
+    ct = time.process_time() - c0
+    store.delete(key)
+    return dt, ct
+
+
+def transfer_serverful(update: np.ndarray) -> Tuple[float, float]:
+    t0 = time.perf_counter()
+    c0 = time.process_time()
+    payload = serialize_update(update, {"num_samples": 1})
+    raw = _socket_transfer(payload)       # direct channel (gRPC analogue)
+    out, _ = deserialize_update(raw)
+    _consume(out)
+    return time.perf_counter() - t0, time.process_time() - c0
+
+
+def transfer_serverless(update: np.ndarray) -> Tuple[float, float]:
+    t0 = time.perf_counter()
+    c0 = time.process_time()
+    payload = serialize_update(update, {"num_samples": 1})
+    hop1 = _socket_transfer(payload)      # -> sidecar
+    hop2 = _socket_transfer(hop1)         # sidecar -> broker (queued copy)
+    queued = bytes(hop2)                  # broker buffers the message
+    hop3 = _socket_transfer(queued)       # broker -> consumer sidecar
+    out, _ = deserialize_update(hop3)
+    _consume(out)
+    return time.perf_counter() - t0, time.process_time() - c0
+
+
+def run(fast: bool = True) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    sizes = dict(SIZES)
+    if fast:
+        sizes = {k: v // 8 for k, v in sizes.items()}  # scale, same ordering
+    with SharedMemoryObjectStore(capacity_bytes=1 << 31) as store:
+        for name, n in sizes.items():
+            update = rng.normal(size=(n,)).astype(np.float32)
+            reps = 3 if n < 30_000_000 else 1
+            for label, fn in (
+                ("lifl", lambda u: transfer_lifl(u, store)),
+                ("serverful", transfer_serverful),
+                ("serverless", transfer_serverless),
+            ):
+                lat = cpu = 0.0
+                for _ in range(reps):
+                    l, c = fn(update)
+                    lat += l / reps
+                    cpu += c / reps
+                rows.append({
+                    "bench": "dataplane_fig7",
+                    "case": f"{name}/{label}",
+                    "us_per_call": lat * 1e6,
+                    "derived": f"cpu_s={cpu:.4f};mbytes={n*4/1e6:.0f}",
+                })
+    # headline ratios (paper: SL ≈ 6× LIFL, SF ≈ 3× LIFL on ResNet-152)
+    lifl = next(r for r in rows if r["case"].endswith("resnet152/lifl") or r["case"] == "resnet152/lifl")
+    sf = next(r for r in rows if r["case"] == "resnet152/serverful")
+    sl = next(r for r in rows if r["case"] == "resnet152/serverless")
+    rows.append({
+        "bench": "dataplane_fig7",
+        "case": "resnet152/speedup",
+        "us_per_call": 0.0,
+        "derived": (f"sf_over_lifl={sf['us_per_call']/lifl['us_per_call']:.2f}x;"
+                    f"sl_over_lifl={sl['us_per_call']/lifl['us_per_call']:.2f}x"),
+    })
+    return rows

@@ -1,0 +1,43 @@
+"""Fig 4 / Fig 7(c): does hierarchy help, per data plane?
+
+NH (one aggregator, no hierarchy) vs WH (1 top + 4 leaves, same node)
+for 8 trainers × ResNet-152, over the serverful kernel-networking data
+plane vs LIFL's shared-memory plane.  Reproduces the paper's
+observation: WH ≈ NH on the slow data plane (57 vs 59.8 s —
+network contention eats the parallelism) while LIFL's plane lets the
+hierarchy pay off (44.9 s/round, §6.1).
+
+Round time = training (fixed ~42 s for the FEMNIST ResNet-152 clients,
+Fig 4) + transfer/aggregation span from the simulator's cost model.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import AggregatorPool, SimConfig, simulate_round
+from repro.core.simulation import DataPlaneCosts
+
+TRAIN_S = 42.0
+N_TRAINERS = 8
+
+
+def run(fast: bool = True) -> List[Dict]:
+    rows = []
+    for dataplane in ("serverful", "shm"):
+        for hierarchy, label in ((False, "NH"), (True, "WH")):
+            cfg = SimConfig(
+                n_nodes=1, mc_per_node=20, placement_policy="bestfit",
+                hierarchy=hierarchy, reuse=True, eager=hierarchy,
+                fan_in=2, dataplane=dataplane, costs=DataPlaneCosts(),
+            )
+            pool = AggregatorPool(cold_start_s=cfg.costs.t_cold_start)
+            simulate_round(N_TRAINERS, cfg, pool=pool, arrival_span_s=3.0)
+            res = simulate_round(N_TRAINERS, cfg, pool=pool, arrival_span_s=3.0)
+            round_s = TRAIN_S + res.act_s
+            rows.append({
+                "bench": "hierarchy_fig4",
+                "case": f"{dataplane}/{label}",
+                "us_per_call": round_s * 1e6,
+                "derived": f"round_s={round_s:.1f};agg_s={res.act_s:.1f}",
+            })
+    return rows

@@ -1,0 +1,76 @@
+"""Fig 8: LIFL's orchestration ablation — ACT, CPU, #aggregators and
+#nodes vs the number of concurrently-arriving model updates
+(20/60/100), stepping through the paper's additions:
+
+  SL-H      shared-memory data plane + Least-Connection (WorstFit)
+            spreading + lazy timing + no reuse (cold starts);
+  +(1)      locality-aware BestFit placement;
+  +(1,2,3)  + hierarchy planning + warm-aggregator reuse;
+  +(1..4)   + eager aggregation.
+
+Testbed constants mirror §6.1: 5 nodes, MC_i = 20, ResNet-152 updates,
+inter-node transfer 4.2 s.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import AggregatorPool, SimConfig, simulate_round
+from repro.core.simulation import DataPlaneCosts
+
+STEPS = {
+    "SL-H": dict(placement_policy="worstfit", hierarchy=True, reuse=False,
+                 eager=False),
+    "+1_placement": dict(placement_policy="bestfit", hierarchy=True,
+                         reuse=False, eager=False),
+    "+123_reuse": dict(placement_policy="bestfit", hierarchy=True,
+                       reuse=True, eager=False),
+    "+1234_eager": dict(placement_policy="bestfit", hierarchy=True,
+                        reuse=True, eager=True),
+}
+
+
+def run(fast: bool = True) -> List[Dict]:
+    rows = []
+    arrival_span = 6.0  # client updates spread over ~6 s (Fig 1 timing)
+    for n_updates in (20, 60, 100):
+        for label, kw in STEPS.items():
+            cfg = SimConfig(n_nodes=5, mc_per_node=20, dataplane="shm",
+                            costs=DataPlaneCosts(), **kw)
+            pool = AggregatorPool(cold_start_s=cfg.costs.t_cold_start)
+            if kw["reuse"]:
+                # warm pool from a previous round (steady state)
+                warm = simulate_round(n_updates, cfg, pool=pool,
+                                      arrival_span_s=arrival_span)
+            res = simulate_round(
+                n_updates, cfg,
+                pool=pool if kw["reuse"] else
+                AggregatorPool(cold_start_s=cfg.costs.t_cold_start),
+                arrival_span_s=arrival_span,
+            )
+            rows.append({
+                "bench": "orchestration_fig8",
+                "case": f"n{n_updates}/{label}",
+                "us_per_call": res.act_s * 1e6,
+                "derived": (f"act_s={res.act_s:.2f};cpu_s={res.cpu_s:.1f};"
+                            f"aggs={res.aggregators_created};"
+                            f"nodes={res.nodes_used};"
+                            f"inter_node={res.inter_node_transfers};"
+                            f"cold={res.cold_starts}"),
+            })
+    # paper-claim checks packed into one derived row
+    def act(n, label):
+        r = next(x for x in rows if x["case"] == f"n{n}/{label}")
+        return float(r["derived"].split("act_s=")[1].split(";")[0])
+
+    rows.append({
+        "bench": "orchestration_fig8",
+        "case": "claims",
+        "us_per_call": 0.0,
+        "derived": (
+            f"placement_speedup_n20={act(20,'SL-H')/act(20,'+1_placement'):.2f}x;"
+            f"reuse_speedup_n60={act(60,'+1_placement')/act(60,'+123_reuse'):.2f}x;"
+            f"eager_speedup_n60={act(60,'+123_reuse')/act(60,'+1234_eager'):.2f}x"
+        ),
+    })
+    return rows

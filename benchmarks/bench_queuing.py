@@ -1,0 +1,82 @@
+"""Fig 13 / App-F: message-queuing overheads for one client→aggregator
+update across the four Fig-5 pipelines — measured memory buffered along
+the pipeline, CPU time, and end-to-end delay.
+
+  SF-mono  — update lands directly in the aggregator's in-memory queue;
+  SF-micro — stateless microservice aggregator behind a broker;
+  SL-B     — basic serverless: sidecar + broker + sidecar;
+  LIFL     — gateway deserializes once into shared memory; aggregator
+             maps it in place (queue holds a 16-byte key).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.bench_dataplane import _consume, _socket_transfer
+from repro.core.gateway import deserialize_update, serialize_update
+from repro.core.objectstore import SharedMemoryObjectStore
+
+SIZES = {"M1_resnet18": 44 << 20, "M2_resnet34": 83 << 20, "M3_resnet152": 232 << 20}
+
+
+def _pipeline(update, kind: str, store) -> Dict[str, float]:
+    nbytes = update.nbytes
+    t0, c0 = time.perf_counter(), time.process_time()
+    mem = 0
+    if kind == "sf_mono":
+        q = update.copy()                  # in-memory queue inside the app
+        mem += q.nbytes
+        _consume(q)
+    elif kind == "sf_micro":
+        payload = serialize_update(update, {})
+        mem += len(payload)                # broker buffer
+        raw = _socket_transfer(payload)    # broker -> aggregator
+        out, _ = deserialize_update(raw)
+        mem += out.nbytes
+        _consume(out)
+    elif kind == "sl_basic":
+        payload = serialize_update(update, {})
+        hop1 = _socket_transfer(payload)   # -> sidecar
+        mem += len(hop1)                   # sidecar buffer
+        hop2 = _socket_transfer(hop1)      # -> broker
+        mem += len(hop2)                   # broker buffer
+        hop3 = _socket_transfer(hop2)      # -> consumer sidecar
+        mem += len(hop3)
+        out, _ = deserialize_update(hop3)
+        mem += out.nbytes
+        _consume(out)
+    elif kind == "lifl":
+        payload = serialize_update(update, {})
+        out, _ = deserialize_update(payload)  # gateway one-time processing
+        key = store.put(out)               # in-place queue (shared memory)
+        mem += out.nbytes                  # the only buffered copy
+        view = store.get(key)
+        _consume(view)
+        store.delete(key)
+    return {
+        "latency_s": time.perf_counter() - t0,
+        "cpu_s": time.process_time() - c0,
+        "mem_bytes": float(mem),
+    }
+
+
+def run(fast: bool = True) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(1)
+    with SharedMemoryObjectStore(capacity_bytes=1 << 31) as store:
+        for name, nbytes in SIZES.items():
+            n = (nbytes // 4) // (8 if fast else 1)
+            update = rng.normal(size=(n,)).astype(np.float32)
+            for kind in ("sf_mono", "sf_micro", "sl_basic", "lifl"):
+                m = _pipeline(update, kind, store)
+                rows.append({
+                    "bench": "queuing_fig13",
+                    "case": f"{name}/{kind}",
+                    "us_per_call": m["latency_s"] * 1e6,
+                    "derived": (f"cpu_s={m['cpu_s']:.4f};"
+                                f"mem_mb={m['mem_bytes']/1e6:.1f}"),
+                })
+    return rows

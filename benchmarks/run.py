@@ -1,0 +1,58 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract).  ``--full``
+uses paper-scale payloads (232 MB updates); default is a fast mode with
+scaled payloads that preserves every ordering/ratio claim.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only name]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (
+        bench_agg_kernel,
+        bench_control_overhead,
+        bench_dataplane,
+        bench_hierarchy,
+        bench_orchestration,
+        bench_queuing,
+        bench_tta,
+    )
+
+    suites = {
+        "dataplane_fig7": bench_dataplane.run,
+        "queuing_fig13": bench_queuing.run,
+        "hierarchy_fig4": bench_hierarchy.run,
+        "orchestration_fig8": bench_orchestration.run,
+        "control_overhead": bench_control_overhead.run,
+        "agg_kernel": bench_agg_kernel.run,
+        "tta_fig9": bench_tta.run,
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if args.only in k}
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            rows = fn(fast=fast)
+        except Exception as e:  # a failed suite must not hide the others
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            continue
+        for r in rows:
+            print(f"{r['bench']}/{r['case']},{r['us_per_call']:.1f},"
+                  f"{r['derived']}", flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Elastic scaling demo (Fig 10(a,b) shape): a varying client arrival
+rate drives the EWMA hierarchy planner; aggregator count tracks load
+(load-proportional resources), nodes can die mid-run, and the warm pool
+absorbs re-plans without cold starts.
+
+  PYTHONPATH=src python examples/elastic_scaling.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.core import NodeState
+from repro.runtime import ArrivalTrace, ElasticController
+
+
+def main():
+    nodes = {f"n{i}": NodeState(node=f"n{i}", max_capacity=20) for i in range(5)}
+    ec = ElasticController(nodes)
+    trace = ArrivalTrace(base_rate=40, variability=0.6, period_rounds=12)
+    print(f"{'round':>5} {'arrivals':>9} {'aggs':>5} {'nodes':>6} {'levels':>7}")
+    for r in range(30):
+        if r == 12:
+            ec.lose_node("n1", r)       # pod failure mid-run
+        if r == 20:
+            ec.join_node("n5", 20, r)   # replacement joins
+        rate = trace.rate(r)
+        st = ec.step(r, expected_updates=rate)
+        print(f"{r:5d} {rate:9.1f} {st['aggregators_planned']:5d} "
+              f"{st['nodes']:6d} {st['levels']:7d}")
+    print("\nevents:")
+    for e in ec.events[:12]:
+        print(f"  round {e.round_id}: {e.kind} {e.detail}")
+    print("elastic_scaling OK")
+
+
+if __name__ == "__main__":
+    main()

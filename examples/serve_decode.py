@@ -1,0 +1,77 @@
+"""Serving example: batched autoregressive decoding with ring KV caches
+(the path the decode_32k / long_500k dry-run cells lower).
+
+Prefills a batch of prompts on a tiny llama-family model, then decodes
+greedily with the ring-buffer cache, reporting per-step latency.
+
+  PYTHONPATH=src python examples/serve_decode.py [--steps 32]
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.data import TokenTaskStream
+from repro.models import ModelOptions, build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--steps", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced(dtype="float32")
+    total = args.prompt_len + args.steps
+    model = build_model(cfg, ModelOptions(
+        attn_impl="chunked", moe_impl="dense", block_kv=32, remat=False,
+        prefill_cache_capacity=total + 8,
+    ))
+    params = model.init(jax.random.PRNGKey(0))
+
+    stream = TokenTaskStream(cfg.vocab_size, args.prompt_len, seed=1)
+    prompts = jnp.asarray(stream.batch(args.batch)["tokens"])
+    batch = {"tokens": prompts}
+    if cfg.frontend:
+        batch["frontend"] = jnp.zeros(
+            (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+
+    t0 = time.perf_counter()
+    logits, caches = jax.jit(model.prefill)(params, batch)
+    logits.block_until_ready()
+    print(f"prefill {args.batch}x{args.prompt_len}: "
+          f"{(time.perf_counter()-t0)*1e3:.1f} ms")
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    lat = []
+    for i in range(args.steps):
+        pos = jnp.int32(args.prompt_len + i)
+        t0 = time.perf_counter()
+        logits, caches = decode(params, tok, caches, pos)
+        logits.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    out = jnp.concatenate(generated, axis=1)
+    lat = np.asarray(lat[1:]) * 1e3  # skip compile step
+    print(f"decoded {args.steps} tokens/seq; per-step "
+          f"p50={np.percentile(lat,50):.2f}ms p99={np.percentile(lat,99):.2f}ms")
+    # the synthetic task is affine-recurrent: a well-trained model would
+    # continue it; untrained output is random — we just show the plumbing
+    print("sample continuation:", np.asarray(out[0, :12]))
+    print("serve_decode OK")
+
+
+if __name__ == "__main__":
+    main()

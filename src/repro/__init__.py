@@ -1,0 +1,2 @@
+"""LIFL (MLSys'24) on TPU pods — JAX reproduction and scale-out."""
+__version__ = "1.0.0"

@@ -1,0 +1,23 @@
+from repro.analysis.hlo import CollectiveStats, collective_stats, count_op
+from repro.analysis.roofline import (
+    DCN_BW,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    from_compiled,
+    model_flops,
+)
+
+__all__ = [
+    "CollectiveStats",
+    "collective_stats",
+    "count_op",
+    "Roofline",
+    "from_compiled",
+    "model_flops",
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "ICI_BW",
+    "DCN_BW",
+]

@@ -1,0 +1,147 @@
+"""Post-SPMD HLO text analysis: collective-traffic accounting.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the
+optimized HLO (``compiled.as_text()``) and sum the result-shape bytes of
+every collective op, bucketed by kind and by tier:
+
+  * ``ici``  — replica groups stay within one pod (devices // 256 equal)
+  * ``dcn``  — any group spans pods (the slow tier LIFL minimizes)
+
+This intentionally counts *payload bytes at the collective boundary*
+(what crosses links at least once), not an algorithm-specific wire
+estimate; the roofline collective term divides by per-chip link bw.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a result type, possibly a tuple: '(f32[8,2]{..}, s8[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str) -> Optional[List[List[int]]]:
+    m = _GROUPS_RE.search(line)
+    if m:
+        groups = []
+        for g in re.findall(r"\{([^}]*)\}", m.group(1)):
+            ids = [int(x) for x in g.split(",") if x.strip()]
+            if ids:
+                groups.append(ids)
+        return groups or None
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ngroups, per = int(m.group(1)), int(m.group(2))
+        reshape = [int(x) for x in m.group(3).split(",")]
+        total = 1
+        for r in reshape:
+            total *= r
+        ids = list(range(total))
+        if m.group(4):
+            # iota transpose: reshape then permute dims then flatten
+            import numpy as np
+
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = list(np.arange(total).reshape(reshape).transpose(perm).reshape(-1))
+        return [ids[i * per : (i + 1) * per] for i in range(ngroups)]
+    m = _PAIRS_RE.search(line)
+    if m:  # collective-permute: each pair is its own "group"
+        pairs = re.findall(r"\{(\d+),(\d+)\}", m.group(0))
+        return [[int(a), int(b)] for a, b in pairs]
+    return None
+
+
+@dataclass
+class CollectiveStats:
+    by_kind: Dict[str, int] = field(default_factory=dict)
+    by_kind_count: Dict[str, int] = field(default_factory=dict)
+    ici_bytes: int = 0
+    dcn_bytes: int = 0
+    total_bytes: int = 0
+    ops: List[Tuple[str, int, str]] = field(default_factory=list)  # (kind, bytes, tier)
+
+    def to_dict(self):
+        return {
+            "by_kind": self.by_kind,
+            "by_kind_count": self.by_kind_count,
+            "ici_bytes": self.ici_bytes,
+            "dcn_bytes": self.dcn_bytes,
+            "total_bytes": self.total_bytes,
+        }
+
+
+def collective_stats(hlo_text: str, pod_size: int = 256) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        kind = None
+        for op in COLLECTIVE_OPS:
+            # match '= <type> op-name(' including variants like all-reduce-start
+            if f" {op}(" in s or f" {op}-start(" in s:
+                kind = op
+                break
+        if kind is None:
+            continue
+        lhs, _, rhs = s.partition("=")
+        # result type sits between '=' and the op name
+        type_str = rhs.split(kind)[0]
+        nbytes = _shape_bytes(type_str)
+        if nbytes == 0:
+            continue
+        groups = _parse_groups(s)
+        tier = "ici"
+        if groups:
+            for g in groups:
+                pods = {d // pod_size for d in g}
+                if len(pods) > 1:
+                    tier = "dcn"
+                    break
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0) + nbytes
+        stats.by_kind_count[kind] = stats.by_kind_count.get(kind, 0) + 1
+        stats.total_bytes += nbytes
+        if tier == "dcn":
+            stats.dcn_bytes += nbytes
+        else:
+            stats.ici_bytes += nbytes
+        stats.ops.append((kind, nbytes, tier))
+    return stats
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

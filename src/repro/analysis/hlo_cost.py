@@ -1,0 +1,454 @@
+"""Trip-count-aware cost extraction from post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` visits every computation exactly once, so a
+``lax.scan`` (compiled to a ``while`` with
+``backend_config={"known_trip_count":{"n":...}}``) under-counts its body
+by the trip count — a 28-layer scanned transformer reports ~1/28 of its
+FLOPs.  This module rebuilds the cost from the HLO text with call-graph
+multiplicities:
+
+  * ENTRY has multiplicity 1;
+  * ``while(condition=%c, body=%b)`` multiplies both by known_trip_count;
+  * fusion/call/to_apply propagate the caller's multiplicity;
+  * conditional branches count once (upper bound of a single taken path).
+
+Per computation we account:
+  * flops   — dot ops (2·prod(out)·prod(contracting)); convolutions
+              (2·prod(out)·kernel_elems·Cin/groups);
+  * bytes   — operands + outputs of *top-level* (non-fusion-body)
+              instructions, mirroring HloCostAnalysis' fusion handling;
+  * collectives — kind/bytes/tier (ICI vs DCN via replica groups),
+              scaled by multiplicity.
+
+All numbers are PER-DEVICE (post-partitioning shapes).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.hlo import _DTYPE_BYTES, _parse_groups
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP = re.compile(r'known_trip_count\D*(\d+)')
+_CALLED = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)"
+)
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _match_paren(s: str, i: int) -> int:
+    """Index of the ')' matching the '(' at s[i]."""
+    depth = 0
+    for j in range(i, len(s)):
+        if s[j] == "(":
+            depth += 1
+        elif s[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(s) - 1
+
+
+_OPC = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _split_rhs(rhs: str):
+    """'(T1, /*index=5*/T2) opcode(%a, %b), attrs' -> (type, opcode, args).
+
+    Tuple types may contain '=' inside /*index=N*/ comments, so this is a
+    paren-aware scanner, not a regex."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):
+        end = _match_paren(rhs, 0)
+        type_str = rhs[: end + 1]
+        rest = rhs[end + 1 :]
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return rhs, "", ""
+        type_str = rhs[:sp]
+        rest = rhs[sp:]
+    m = _OPC.match(rest)
+    if not m:
+        return type_str, "", ""
+    op = m.group(1)
+    i = rest.find("(", m.start(1))
+    j = _match_paren(rest, i)
+    return type_str, op, rest[i + 1 : j]
+
+
+def _result_type(rhs: str) -> str:
+    return _split_rhs(rhs)[0]
+
+
+def _opcode(rhs: str) -> str:
+    return _split_rhs(rhs)[1]
+
+
+def _operand_names(rhs: str) -> List[str]:
+    return re.findall(r"%([\w.\-]+)", _split_rhs(rhs)[2])
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes_: float = 0.0
+    transcendental: float = 0.0
+    collectives: List[Tuple[str, int, str]] = field(default_factory=list)
+    calls: List[Tuple[str, float]] = field(default_factory=list)  # (name, mult)
+    is_fusion_body: bool = False
+    attributions: List[Tuple[str, float]] = field(default_factory=list)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_: float = 0.0
+    coll_total: float = 0.0
+    coll_dcn: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+    byte_attribution: Dict[str, float] = field(default_factory=dict)
+
+    def to_dict(self):
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes_,
+            "coll_total": self.coll_total,
+            "coll_dcn": self.coll_dcn,
+            "coll_by_kind": self.coll_by_kind,
+            "coll_count": self.coll_count,
+        }
+
+
+_NEW_UNIT = re.compile(
+    r"^(\s*(ROOT\s+)?%[\w.\-]+\s*=\s*|ENTRY\b|%[\w.\-]+\s*\(|\s*\}\s*$)"
+)
+
+
+def _logical_lines(text: str):
+    """Join wrapped HLO lines (long tuples/param lists span lines)."""
+    cur: List[str] = []
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if _NEW_UNIT.match(line):
+            if cur:
+                yield " ".join(cur)
+            cur = [line]
+        else:
+            cur.append(line.strip())
+    if cur:
+        yield " ".join(cur)
+
+
+def parse_hlo_cost(text: str, pod_size: int = 256,
+                   attribute: bool = False) -> HloCost:
+    comps: Dict[str, CompCost] = {}
+    fusion_bodies = set()
+    entry: Optional[str] = None
+
+    # ---- pass 1: per-computation instruction index -----------------------
+    # Records (op, operands, result_type) per instruction, the unwrapped
+    # root opcode, and a per-fusion-parameter usage classification so the
+    # call site can charge sliced reads at slice size (HloCostAnalysis'
+    # fusion handling) instead of full-operand size.
+    _WRAPPERS = ("bitcast", "copy", "convert", "transpose", "reshape")
+    _SLICERS = ("dynamic-slice", "slice", "gather")
+    comp_root_op: Dict[str, str] = {}
+    comp_ops: Dict[str, Dict[str, Tuple[str, List[str], str]]] = {}
+    comp_root_name: Dict[str, str] = {}
+    comp_param_name: Dict[Tuple[str, int], str] = {}
+    cur: Optional[str] = None
+    for line in _logical_lines(text):
+        if (not line.startswith(" ") and line.endswith("{")
+                and (line.startswith("%") or line.startswith("ENTRY")) and "->" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comp_ops[cur] = {}
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is None or line.strip() == "}":
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        nm, rhs_ = mi.group(1), mi.group(2)
+        t_, op_, args_ = _split_rhs(rhs_)
+        comp_ops[cur][nm] = (op_, _operand_names(rhs_), t_)
+        if op_ == "parameter":
+            mp = re.match(r"\s*(\d+)", args_)
+            if mp:
+                comp_param_name[(cur, int(mp.group(1)))] = nm
+        if line.lstrip().startswith("ROOT"):
+            comp_root_name[cur] = nm
+    for cname, rootnm in comp_root_name.items():
+        ops = comp_ops[cname]
+        nm = rootnm
+        for _ in range(6):  # unwrap bitcast/copy/convert chains
+            op_, operands, _t = ops.get(nm, ("", [], ""))
+            if op_ in _WRAPPERS and operands:
+                nm = operands[0]
+            else:
+                break
+        comp_root_op[cname] = ops.get(nm, ("", [], ""))[0]
+
+    # classification: (comp, param_index) -> ("alias"|"sliced"|"full", bytes)
+    param_class: Dict[Tuple[str, int], Tuple[str, float]] = {}
+
+    def _classify(cname: str):
+        ops = comp_ops[cname]
+        uses: Dict[str, List[Tuple[str, str]]] = {}
+        for nm, (op_, operands, t_) in ops.items():
+            for on in operands:
+                uses.setdefault(on, []).append((op_, t_))
+        i = 0
+        while (cname, i) in comp_param_name:
+            pnm = comp_param_name[(cname, i)]
+            u = uses.get(pnm, [])
+            if not u:
+                param_class[(cname, i)] = ("sliced", 0.0)
+            elif all(op_ in _SLICERS for op_, _ in u):
+                b = max(_type_bytes(t_) for _, t_ in u)
+                param_class[(cname, i)] = ("sliced", float(b))
+            elif any(op_ == "dynamic-update-slice" for op_, _ in u):
+                # in-place target of the internal DUS: charge update size
+                upd = 0.0
+                for nm, (op_, operands, t_) in ops.items():
+                    if op_ == "dynamic-update-slice" and operands and \
+                            operands[0] == pnm and len(operands) > 1:
+                        ut = ops.get(operands[1], ("", [], ""))[2]
+                        upd = max(upd, float(_type_bytes(ut)))
+                param_class[(cname, i)] = ("alias", upd)
+            else:
+                param_class[(cname, i)] = ("full", 0.0)
+            i += 1
+
+    for cname in comp_ops:
+        _classify(cname)
+
+    # ---- pass 2: account ---------------------------------------------------
+    cur = None
+    shapes: Dict[str, str] = {}
+    for line in _logical_lines(text):
+        if (not line.startswith(" ") and line.endswith("{")
+                and (line.startswith("%") or line.startswith("ENTRY")) and "->" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = CompCost()
+                shapes = {}
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        rtype = _result_type(rhs)
+        shapes[name] = rtype
+        op = _opcode(rhs)
+        if not op:
+            continue
+        cc = comps[cur]
+        bytes_before = cc.bytes_
+
+        # ---- calls ---------------------------------------------------------
+        trip = 1.0
+        if op == "while":
+            mt = _TRIP.search(rhs)
+            trip = float(mt.group(1)) if mt else 1.0
+        for cm in _CALLED.finditer(rhs):
+            cc.calls.append((cm.group(1), trip))
+            if op == "fusion":
+                fusion_bodies.add(cm.group(1))
+        mb = _BRANCHES.search(rhs)
+        if mb:
+            for b in re.findall(r"%?([\w.\-]+)", mb.group(1)):
+                cc.calls.append((b, 1.0))
+
+        # ---- flops ---------------------------------------------------------
+        if op == "dot":
+            out_elems = 1
+            for _, dims in _shape_dims(rtype):
+                for d in dims:
+                    out_elems *= d
+            ops_names = _operand_names(rhs)
+            lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            contract = 1
+            if ops_names and lc and lc.group(1):
+                lhs_type = shapes.get(ops_names[0], "")
+                sd = _shape_dims(lhs_type)
+                if sd:
+                    dims = sd[0][1]
+                    for ci in lc.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(dims):
+                            contract *= dims[ci]
+            cc.flops += 2.0 * out_elems * contract
+        elif op == "convolution":
+            out_elems = 1
+            for _, dims in _shape_dims(rtype):
+                for d in dims:
+                    out_elems *= d
+            ops_names = _operand_names(rhs)
+            kern = shapes.get(ops_names[1], "") if len(ops_names) > 1 else ""
+            sd = _shape_dims(kern)
+            kelems = 1
+            if sd:
+                for d in sd[0][1]:
+                    kelems *= d
+                # kernel = spatial × Cin × Cout; flops = 2·out·spatial·Cin
+                cout = sd[0][1][-1] if sd[0][1] else 1
+                kelems = max(kelems // max(cout, 1), 1)
+            cc.flops += 2.0 * out_elems * kelems
+        elif op in ("exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                    "logistic", "sine", "cosine"):
+            out_elems = 1
+            for _, dims in _shape_dims(rtype):
+                for d in dims:
+                    out_elems *= d
+            cc.transcendental += out_elems
+
+        # ---- bytes ----------------------------------------------------------
+        # Mirrors HloCostAnalysis' data-movement special cases: slicing
+        # ops (and fusions rooted at them) touch only the slice, not the
+        # sliced-into buffer — naive operand counting charged a 256-step
+        # scan 256 full-array reads/writes of its ys/residual buffers.
+        if op == "fusion":
+            called = _CALLED.search(rhs)
+            body_name = called.group(1) if called else ""
+            root = comp_root_op.get(body_name, "")
+            b = 0.0
+            for i, on in enumerate(_operand_names(rhs)):
+                cls, bi = param_class.get((body_name, i), ("full", 0.0))
+                if cls == "alias":
+                    b += 2.0 * bi            # rmw of the updated region
+                elif cls == "sliced":
+                    b += bi                   # read only the slice(s)
+                else:
+                    b += _type_bytes(shapes.get(on, ""))
+            if root == "dynamic-update-slice":
+                pass                          # write charged via alias param
+            else:
+                b += _type_bytes(rtype)       # result write
+            cc.bytes_ += b
+        elif op in ("dynamic-slice", "slice", "gather"):
+            cc.bytes_ += 2.0 * _type_bytes(rtype)  # slice read + write
+        elif op == "dynamic-update-slice":
+            ops_names = _operand_names(rhs)
+            upd = _type_bytes(shapes.get(ops_names[1], "")) if len(ops_names) > 1 else 0
+            cc.bytes_ += 2.0 * upd
+        elif op in ("scatter", "scatter-add"):
+            ops_names = _operand_names(rhs)
+            upd = _type_bytes(shapes.get(ops_names[-1], "")) if ops_names else 0
+            cc.bytes_ += 3.0 * upd  # read updates + rmw touched region
+        elif op not in ("parameter", "constant", "tuple", "get-tuple-element",
+                        "bitcast", "copy-done", "all-reduce-done",
+                        "all-gather-done"):
+            b = _type_bytes(rtype)
+            for on in _operand_names(rhs):
+                b += _type_bytes(shapes.get(on, ""))
+            cc.bytes_ += b
+
+        if attribute:
+            delta_b = cc.bytes_ - bytes_before
+            if delta_b > 0:
+                mo = re.search(r'op_name="([^"]+)"', rhs)
+                tag = re.sub(r"\d+", "N", (mo.group(1) if mo else op))[-90:]
+                cc.attributions.append((f"{op}|{tag}", delta_b))
+
+        # ---- collectives -----------------------------------------------------
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in COLLECTIVES:
+            nb = _type_bytes(rtype)
+            groups = _parse_groups(rhs)
+            tier = "ici"
+            if groups:
+                for g in groups:
+                    if len({d // pod_size for d in g}) > 1:
+                        tier = "dcn"
+                        break
+            if nb:
+                cc.collectives.append((base_op, nb, tier))
+
+    # ---------------- multiplicity propagation (topological) ----------------
+    mult: Dict[str, float] = {}
+    if entry:
+        indeg: Dict[str, int] = {n: 0 for n in comps}
+        for cc in comps.values():
+            for callee, _ in cc.calls:
+                if callee in indeg:
+                    indeg[callee] += 1
+        mult = {n: 0.0 for n in comps}
+        mult[entry] = 1.0
+        stack = [n for n, d in indeg.items() if d == 0]
+        while stack:
+            n = stack.pop()
+            m = mult.get(n, 0.0)
+            for callee, trip in comps[n].calls:
+                if callee in indeg:
+                    mult[callee] = mult.get(callee, 0.0) + m * trip
+                    indeg[callee] -= 1
+                    if indeg[callee] == 0:
+                        stack.append(callee)
+    else:  # fallback: everything once
+        for n in comps:
+            mult[n] = 1.0
+
+    total = HloCost()
+    for name, cc in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        total.flops += cc.flops * m
+        if name not in fusion_bodies:
+            total.bytes_ += cc.bytes_ * m
+        if name not in fusion_bodies:
+            for tag, b in cc.attributions:
+                total.byte_attribution[tag] = (
+                    total.byte_attribution.get(tag, 0.0) + b * m
+                )
+        for kind, nb, tier in cc.collectives:
+            total.coll_total += nb * m
+            if tier == "dcn":
+                total.coll_dcn += nb * m
+            total.coll_by_kind[kind] = total.coll_by_kind.get(kind, 0.0) + nb * m
+            total.coll_count[kind] = total.coll_count.get(kind, 0) + int(m)
+    return total

@@ -1,0 +1,152 @@
+"""Three-term roofline model from a compiled dry-run cell.
+
+Hardware constants: TPU v5e-class target (assignment sheet):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s per ICI link.
+DCN (inter-pod) is modeled at 6.25 GB/s/chip (≈ 50 Gb/s NICs per chip
+share) — used only to split the collective term by tier; the headline
+collective term follows the assignment formula bytes/(chips·link_bw).
+
+  compute    = HLO_FLOPs   / (chips · 197e12)
+  memory     = HLO_bytes   / (chips · 819e9)
+  collective = coll_bytes  / (chips · 50e9)
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train cells
+(3 ·  fwd-only for prefill; decode uses 2·N·B per step fwd).
+The ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/rectangle
+waste (1.0 = every compiled flop is useful; >0.33 with full remat).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link (assignment constant)
+DCN_BW = 6.25e9          # B/s / chip (tier split only)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Useful FLOPs per step: 6·N_active·tokens (train) etc."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def model_bytes(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Minimum HBM bytes per step.  Decode is weight-read-bound: every
+    active param (bf16) must be read once per step regardless of batch —
+    the bandwidth floor that MODEL_FLOPS alone misses at batch ≤ 128."""
+    if shape.kind != "decode":
+        return 0.0
+    return 2.0 * cfg.active_param_count()
+
+
+@dataclass
+class Roofline:
+    """All byte/flop inputs are PER-DEVICE (post-SPMD module totals);
+    ``model_flops_`` is global and normalized by ``chips``."""
+
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    dcn_bytes: float
+    chips: int
+    model_flops_: float
+    model_bytes_: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dcn_s(self) -> float:
+        return self.dcn_bytes / DCN_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic no-overlap-free bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        per_chip_model = self.model_flops_ / self.chips
+        return per_chip_model / self.flops if self.flops else 0.0
+
+    @property
+    def ideal_s(self) -> float:
+        """Best achievable step time: useful FLOPs at peak, or the
+        weight-read bandwidth floor (decode), whichever binds."""
+        return max(
+            self.model_flops_ / (self.chips * PEAK_FLOPS),
+            self.model_bytes_ / (self.chips * HBM_BW),
+        )
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal_s / step_time — the score we hillclimb."""
+        return self.ideal_s / self.step_time_s if self.step_time_s else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "dcn_bytes": self.dcn_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops_,
+            "model_bytes": self.model_bytes_,
+            "ideal_s": self.ideal_s,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dcn_s": self.dcn_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def from_compiled(
+    cost: Dict[str, float],
+    coll_total: float,
+    coll_dcn: float,
+    chips: int,
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+) -> Roofline:
+    return Roofline(
+        flops=float(cost.get("flops", 0.0)),
+        hbm_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=float(coll_total),
+        dcn_bytes=float(coll_dcn),
+        chips=chips,
+        model_flops_=model_flops(cfg, shape),
+        model_bytes_=model_bytes(cfg, shape),
+    )

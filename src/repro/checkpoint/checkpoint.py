@@ -1,0 +1,152 @@
+"""Sharding-aware checkpointing (paper App-B).
+
+The LIFL agent checkpoints global model params to external persistent
+storage after the aggregation goal is met; checkpointing runs
+*asynchronously* so it never adds to the aggregation completion time.
+
+Format: one ``.npz`` per checkpoint with flattened path keys +
+a JSON manifest (step, model version, pytree structure).  Restore
+re-shards onto whatever mesh the restoring process runs (device count
+may differ — elastic restart).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            # npz has no bf16; fp32 holds every bf16 exactly (lossless),
+            # restore casts back to the target leaf dtype
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(
+    directory: str | Path,
+    step: int,
+    params: Any,
+    extra: Optional[Dict[str, Any]] = None,
+) -> Path:
+    """Synchronous save: gathers shards to host and writes npz + manifest."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f"ckpt_{step:08d}.npz.tmp"
+    final = directory / f"ckpt_{step:08d}.npz"
+    flat = _flatten(params)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    tmp.rename(final)  # atomic publish
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": sorted(flat.keys()),
+        "extra": extra or {},
+    }
+    (directory / f"ckpt_{step:08d}.json").write_text(json.dumps(manifest))
+    (directory / "LATEST").write_text(str(step))
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    marker = Path(directory) / "LATEST"
+    if not marker.exists():
+        return None
+    return int(marker.read_text().strip())
+
+
+def restore_checkpoint(
+    directory: str | Path,
+    like: Any,
+    step: Optional[int] = None,
+    shardings: Optional[Any] = None,
+) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a params pytree or
+    ShapeDtypeStructs); re-shards with ``shardings`` when given."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    data = np.load(directory / f"ckpt_{step:08d}.npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {key}: shape {arr.shape} != expected {leaf.shape}"
+            )
+        leaves.append(arr.astype(leaf.dtype))
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        restored = jax.device_put(restored, shardings)
+    return restored, step
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing (App-B): ``submit`` returns
+    immediately; the previous write is joined first so at most one write
+    is in flight and checkpoints commit in order."""
+
+    def __init__(self, directory: str | Path):
+        self.directory = Path(directory)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.completed: int = 0
+
+    def submit(self, step: int, params: Any,
+               extra: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        # snapshot to host *before* returning so the training step can
+        # donate/overwrite device buffers safely
+        host = _flatten(params)
+
+        def run():
+            try:
+                directory = self.directory
+                directory.mkdir(parents=True, exist_ok=True)
+                tmp = directory / f"ckpt_{step:08d}.npz.tmp"
+                final = directory / f"ckpt_{step:08d}.npz"
+                with open(tmp, "wb") as f:
+                    np.savez(f, **host)
+                tmp.rename(final)
+                manifest = {"step": step, "time": time.time(),
+                            "keys": sorted(host.keys()), "extra": extra or {}}
+                (directory / f"ckpt_{step:08d}.json").write_text(
+                    json.dumps(manifest)
+                )
+                (directory / "LATEST").write_text(str(step))
+                self.completed += 1
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,58 @@
+"""LIFL core: the paper's contribution as composable components.
+
+Data plane  — objectstore (shared-memory, immutable keyed objects),
+              gateway (in-place message queuing), routing + tag (sockmap
+              direct routing, TAG), aggregation (step-based eager/lazy
+              FedAvg); the in-XLA counterpart lives in repro.fl.round.
+Control     — placement (BestFit locality packing, RC/MC capacity),
+              hierarchy (EWMA planner), reuse (warm pool + executable
+              cache), coordinator (selector + round lifecycle), sidecar
+              (event-driven metrics).
+simulation  — event-driven cluster sim for the paper-figure benchmarks.
+"""
+from repro.core.aggregation import Aggregator, FedAvgState, fedavg_oracle
+from repro.core.coordinator import (
+    ClientInfo,
+    Coordinator,
+    RoundConfig,
+    RoundPlan,
+    Selector,
+)
+from repro.core.gateway import (
+    Gateway,
+    UpdateEnvelope,
+    deserialize_update,
+    serialize_update,
+)
+from repro.core.hierarchy import (
+    EWMA,
+    HierarchyPlan,
+    HierarchyPlanner,
+    NodePlan,
+    aggregation_completion_time,
+)
+from repro.core.objectstore import (
+    InProcObjectStore,
+    SharedMemoryObjectStore,
+    new_object_key,
+)
+from repro.core.placement import (
+    NodeState,
+    Placement,
+    choose_top_node,
+    inter_node_transfers,
+    measure_max_capacity,
+    place_updates,
+)
+from repro.core.reuse import AggregatorPool, ExecutableCache, Role, State
+from repro.core.routing import RoutingManager, SockMap, register_node, clear_registry
+from repro.core.sidecar import EventSidecar, MetricsMap, MetricsServer
+from repro.core.simulation import DataPlaneCosts, SimConfig, SimResult, simulate_round
+from repro.core.tag import (
+    CHANNEL_NET,
+    CHANNEL_SHM,
+    ROLE_AGGREGATOR,
+    ROLE_CLIENT,
+    TAG,
+    build_two_level_tag,
+)

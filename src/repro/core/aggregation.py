@@ -1,0 +1,140 @@
+"""The aggregator function itself: step-based processing (paper App-G).
+
+Multiple producers -> single consumer, three steps:
+  Recv — object keys arrive in a FIFO (payloads stay in shared memory);
+  Agg  — dequeue + fold (FedAvg cumulative averaging) until the
+         aggregation goal n is met; with *eager* timing Recv∥Agg overlap
+         (fold on arrival); *lazy* queues everything then folds;
+  Send — emit the intermediate/global update one level up.
+
+FedAvg (Eq. 1): w = Σ_k c_k·w_k / Σ_k c_k — implemented as a running
+(Σ c·w, Σ c) pair so eager and lazy are numerically identical (cumulative
+averaging is exact, §2.1).  The fold's hot loop is the fedavg kernel
+(kernels/fedavg: Pallas on TPU, numpy/jnp twin elsewhere).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.gateway import UpdateEnvelope
+from repro.core.objectstore import InProcObjectStore
+from repro.core.sidecar import EventSidecar
+
+
+@dataclass
+class FedAvgState:
+    """Running weighted sum — supports fold (one update) and merge
+    (combine two partial aggregates: the hierarchy's associativity)."""
+
+    acc: Optional[np.ndarray] = None
+    weight: float = 0.0
+    count: int = 0
+
+    def fold(self, update: np.ndarray, w: float) -> None:
+        contrib = update.astype(np.float32) * np.float32(w)
+        if self.acc is None:
+            self.acc = contrib
+        else:
+            self.acc += contrib  # in-place: the zero-copy consume
+        self.weight += w
+        self.count += 1
+
+    def merge(self, other: "FedAvgState") -> None:
+        if other.acc is None:
+            return
+        if self.acc is None:
+            self.acc = other.acc.copy()
+        else:
+            self.acc += other.acc
+        self.weight += other.weight
+        self.count += other.count
+
+    def result(self) -> Tuple[np.ndarray, float]:
+        assert self.acc is not None and self.weight > 0
+        return self.acc / np.float32(self.weight), self.weight
+
+
+class Aggregator:
+    """One LIFL aggregator instance (leaf/middle/top — homogenized)."""
+
+    def __init__(
+        self,
+        agg_id: str,
+        store,
+        goal: int,
+        *,
+        eager: bool = True,
+        sidecar: Optional[EventSidecar] = None,
+        on_complete: Optional[Callable[[np.ndarray, float], None]] = None,
+    ):
+        self.agg_id = agg_id
+        self.store = store
+        self.goal = goal
+        self.eager = eager
+        self.sidecar = sidecar
+        self.on_complete = on_complete
+        self.fifo: Deque[UpdateEnvelope] = deque()
+        self.state = FedAvgState()
+        self.done = False
+        self.result: Optional[Tuple[np.ndarray, float]] = None
+        self.agg_exec_s = 0.0
+
+    # ------------------------------------------------------------------
+    # Recv step — called by the sockmap notify hook (event-driven)
+    # ------------------------------------------------------------------
+    def recv(self, env: UpdateEnvelope) -> None:
+        self.fifo.append(env)
+        if self.sidecar:
+            self.sidecar.on_recv(
+                self.store.meta(env.object_key).nbytes
+                if hasattr(self.store, "meta") else 0,
+                time.perf_counter() - env.enqueue_ts,
+            )
+        if self.eager:
+            # Recv ∥ Agg: fold immediately (App-G)
+            self._drain()
+
+    # ------------------------------------------------------------------
+    # Agg step
+    # ------------------------------------------------------------------
+    def _fold_one(self, env: UpdateEnvelope) -> None:
+        t0 = time.perf_counter()
+        update = self.store.get(env.object_key)
+        self.state.fold(np.asarray(update), env.num_samples)
+        self.store.release(env.object_key)
+        dt = time.perf_counter() - t0
+        self.agg_exec_s += dt
+        if self.sidecar:
+            self.sidecar.on_aggregate(1, dt)
+
+    def _drain(self) -> None:
+        while self.fifo and not self.done:
+            self._fold_one(self.fifo.popleft())
+            if self.state.count >= self.goal:
+                self._send()
+
+    def flush(self) -> None:
+        """Lazy timing: called once the goal's worth of updates queued."""
+        self._drain()
+
+    # ------------------------------------------------------------------
+    # Send step
+    # ------------------------------------------------------------------
+    def _send(self) -> None:
+        self.done = True
+        self.result = self.state.result()
+        if self.sidecar:
+            self.sidecar.on_send(self.result[0].nbytes)
+        if self.on_complete:
+            self.on_complete(*self.result)
+
+
+def fedavg_oracle(updates: List[np.ndarray], weights: List[float]) -> np.ndarray:
+    """Reference weighted mean (tests compare every path against this)."""
+    num = sum(np.float32(w) * u.astype(np.float32) for u, w in zip(updates, weights))
+    return num / np.float32(sum(weights))

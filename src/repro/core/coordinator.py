@@ -1,0 +1,171 @@
+"""LIFL coordinator + selector: round lifecycle orchestration (Fig 3/6).
+
+Per round (§3, §5):
+  1. the selector picks a diverse cohort, over-provisioned beyond the
+     aggregation goal n (resilience: stragglers/failures just don't make
+     the goal — no round stall);
+  2. load balancing bin-packs the expected updates onto worker nodes
+     (BestFit, §5.1) — this *is* the client→node mapping that makes
+     in-place queuing locality-aware;
+  3. the hierarchy planner sizes each node's two-level tree from the
+     EWMA'd queue estimates (§5.2) and the pool acquires/reuses warm
+     aggregators (§5.3);
+  4. the routing manager installs the TAG; gateways feed leaf
+     aggregators; eager aggregation streams to the top (§5.4);
+  5. on goal: bump the global model version, trigger the async
+     checkpoint (App-B).
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hierarchy import HierarchyPlan, HierarchyPlanner
+from repro.core.placement import (
+    NodeState,
+    Placement,
+    choose_top_node,
+    inter_node_transfers,
+    place_updates,
+)
+from repro.core.reuse import AggregatorPool, Role
+from repro.core.tag import TAG, build_two_level_tag
+
+
+@dataclass
+class ClientInfo:
+    client_id: str
+    num_samples: int = 1
+    available: bool = True
+    last_selected_round: int = -1
+
+
+class Selector:
+    """Diversity-aware client selection + gateway mapping (paper §2.2).
+
+    Diversity heuristic: least-recently-selected first with random
+    tie-breaking — every client cycles through over time, matching the
+    representative-sampling role without modeling Oort-style utility."""
+
+    def __init__(self, clients: Sequence[ClientInfo], seed: int = 0):
+        self.clients = {c.client_id: c for c in clients}
+        self.rng = random.Random(seed)
+
+    def select(self, n: int, round_id: int) -> List[ClientInfo]:
+        pool = [c for c in self.clients.values() if c.available]
+        self.rng.shuffle(pool)
+        pool.sort(key=lambda c: c.last_selected_round)
+        chosen = pool[:n]
+        for c in chosen:
+            c.last_selected_round = round_id
+        return chosen
+
+
+@dataclass
+class RoundConfig:
+    aggregation_goal: int          # n in Eq. 1
+    over_provision: float = 1.3    # select n·factor clients (§3 resilience)
+    fan_in: int = 2                # leaf fan-in I (§5.2)
+    placement_policy: str = "bestfit"
+    eager: bool = True
+
+
+@dataclass
+class RoundPlan:
+    round_id: int
+    selected: List[ClientInfo]
+    placement: Placement
+    hierarchy: HierarchyPlan
+    tag: TAG
+    top_node: Optional[str]
+    cold_starts: int
+    reused: int
+
+    @property
+    def inter_node_updates(self) -> int:
+        return inter_node_transfers(self.placement.assignment, self.top_node or "")
+
+
+class Coordinator:
+    """Cluster-wide control-plane component (one per FL job)."""
+
+    def __init__(
+        self,
+        selector: Selector,
+        nodes: Dict[str, NodeState],
+        planner: Optional[HierarchyPlanner] = None,
+        pool: Optional[AggregatorPool] = None,
+    ):
+        self.selector = selector
+        self.nodes = nodes
+        self.planner = planner or HierarchyPlanner()
+        self.pool = pool or AggregatorPool()
+        self.model_version = 0
+        self.round_id = 0
+        self.history: List[RoundPlan] = []
+
+    # ------------------------------------------------------------------
+    def plan_round(self, cfg: RoundConfig) -> RoundPlan:
+        rid = self.round_id
+        n_select = int(np.ceil(cfg.aggregation_goal * cfg.over_provision))
+        selected = self.selector.select(n_select, rid)
+
+        # reset per-round assignment, keep k/E from metrics
+        for ns in self.nodes.values():
+            ns.assigned = 0.0
+        placement = place_updates(
+            len(selected), self.nodes, policy=cfg.placement_policy
+        )
+        top = choose_top_node(self.nodes, placement.assignment)
+
+        queue_by_node = {
+            node: float(len(idxs)) for node, idxs in placement.assignment.items()
+        }
+        hierarchy = self.planner.plan(queue_by_node, top_node=top)
+
+        # acquire aggregators (reuse warm ones first — §5.3)
+        cold = reused_before = self.pool.stats.reused
+        cold_before = self.pool.stats.cold_starts
+        for node, plan in hierarchy.per_node.items():
+            for _ in range(plan.num_leaves):
+                self.pool.acquire(node, Role.LEAF)
+            if plan.has_middle:
+                self.pool.acquire(node, Role.MIDDLE)
+        if top is not None:
+            self.pool.acquire(top, Role.TOP)
+        cold_starts = self.pool.stats.cold_starts - cold_before
+        reused = self.pool.stats.reused - reused_before
+
+        tag = build_two_level_tag(
+            {n: p.num_leaves for n, p in hierarchy.per_node.items()},
+            clients_per_leaf=cfg.fan_in,
+            top_node=top or next(iter(self.nodes)),
+        )
+        plan = RoundPlan(
+            round_id=rid, selected=selected, placement=placement,
+            hierarchy=hierarchy, tag=tag, top_node=top,
+            cold_starts=cold_starts, reused=reused,
+        )
+        self.history.append(plan)
+        return plan
+
+    # ------------------------------------------------------------------
+    def finish_round(self, checkpoint_fn: Optional[Callable] = None) -> int:
+        """Aggregation goal reached: release instances back to the warm
+        pool, bump model version, kick the async checkpoint (App-B)."""
+        for agg_id in list(self.pool.instances):
+            self.pool.release(agg_id)
+        self.model_version += 1
+        self.round_id += 1
+        if checkpoint_fn is not None:
+            checkpoint_fn(self.model_version)
+        return self.model_version
+
+    def scale_down(self) -> int:
+        """Terminate idle aggregators after load drops (load-proportional
+        resource use — what Fig 10(b) shows for LIFL vs SF)."""
+        return self.pool.terminate_idle()

@@ -1,0 +1,181 @@
+"""Shared-memory object store (paper §4.1) — the intra-node data plane.
+
+Immutable, keyed objects in ``multiprocessing.shared_memory`` segments:
+model updates are written once by the gateway and read zero-copy (numpy
+views over the shared segment) by any aggregator process on the node.
+Immutability removes locking (paper: "LIFL only allows immutable
+(read-only) objects to guarantee safe sharing").
+
+Object keys are 16-byte random strings, exactly as in Appendix-A.  The
+store also powers the paper-figure benchmarks: LIFL's zero-copy path vs
+the broker/sidecar copy chains (Fig 5 / Fig 7 / Fig 13).
+
+The single-process variant (``InProcObjectStore``) backs unit tests and
+the event-driven simulator without OS shared memory.
+"""
+from __future__ import annotations
+
+import secrets
+import threading
+from dataclasses import dataclass, field
+from multiprocessing import shared_memory
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+KEY_BYTES = 16
+
+
+def new_object_key() -> str:
+    """16-byte random object key (App-A)."""
+    return secrets.token_hex(KEY_BYTES // 2)
+
+
+@dataclass
+class ObjectMeta:
+    key: str
+    shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+    refcount: int = 0
+    sealed: bool = False
+
+
+class SharedMemoryObjectStore:
+    """Per-node object store over POSIX shared memory.
+
+    Lifecycle (managed by the LIFL agent, §4.1): allocate -> write ->
+    seal (immutable) -> get (zero-copy views) -> release -> destroy when
+    refcount drops and the object was recycled.
+    """
+
+    def __init__(self, node: str = "node0", capacity_bytes: int = 1 << 32):
+        self.node = node
+        self.capacity_bytes = capacity_bytes
+        self._segments: Dict[str, shared_memory.SharedMemory] = {}
+        self._meta: Dict[str, ObjectMeta] = {}
+        self._lock = threading.Lock()
+        self.bytes_in_use = 0
+        # stats (read by the metrics sidecar)
+        self.stats = {"puts": 0, "gets": 0, "zero_copy_gets": 0, "evictions": 0}
+
+    # ------------------------------------------------------------------
+    def put(self, array: np.ndarray, key: Optional[str] = None) -> str:
+        """Serialize-once write; returns the object key."""
+        key = key or new_object_key()
+        arr = np.ascontiguousarray(array)
+        with self._lock:
+            if self.bytes_in_use + arr.nbytes > self.capacity_bytes:
+                raise MemoryError(
+                    f"object store over capacity on {self.node}: "
+                    f"{self.bytes_in_use + arr.nbytes} > {self.capacity_bytes}"
+                )
+            seg = shared_memory.SharedMemory(create=True, size=max(arr.nbytes, 1))
+            view = np.ndarray(arr.shape, arr.dtype, buffer=seg.buf)
+            view[...] = arr
+            self._segments[key] = seg
+            self._meta[key] = ObjectMeta(
+                key=key, shape=arr.shape, dtype=str(arr.dtype),
+                nbytes=arr.nbytes, sealed=True,
+            )
+            self.bytes_in_use += arr.nbytes
+            self.stats["puts"] += 1
+        return key
+
+    def get(self, key: str) -> np.ndarray:
+        """Zero-copy read-only view of a sealed object."""
+        with self._lock:
+            meta = self._meta[key]
+            seg = self._segments[key]
+            meta.refcount += 1
+            self.stats["gets"] += 1
+            self.stats["zero_copy_gets"] += 1
+        view = np.ndarray(meta.shape, np.dtype(meta.dtype), buffer=seg.buf)
+        view.flags.writeable = False
+        return view
+
+    def release(self, key: str) -> None:
+        with self._lock:
+            if key in self._meta:
+                self._meta[key].refcount = max(0, self._meta[key].refcount - 1)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            meta = self._meta.pop(key, None)
+            seg = self._segments.pop(key, None)
+            if seg is not None:
+                seg.close()
+                seg.unlink()
+            if meta is not None:
+                self.bytes_in_use -= meta.nbytes
+                self.stats["evictions"] += 1
+
+    def contains(self, key: str) -> bool:
+        with self._lock:
+            return key in self._meta
+
+    def meta(self, key: str) -> ObjectMeta:
+        with self._lock:
+            return self._meta[key]
+
+    def close(self) -> None:
+        with self._lock:
+            for seg in self._segments.values():
+                try:
+                    seg.close()
+                    seg.unlink()
+                except FileNotFoundError:
+                    pass
+            self._segments.clear()
+            self._meta.clear()
+            self.bytes_in_use = 0
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class InProcObjectStore:
+    """Same interface, plain-dict backing (tests / simulator)."""
+
+    def __init__(self, node: str = "node0", capacity_bytes: int = 1 << 34):
+        self.node = node
+        self.capacity_bytes = capacity_bytes
+        self._objs: Dict[str, np.ndarray] = {}
+        self.bytes_in_use = 0
+        self.stats = {"puts": 0, "gets": 0, "zero_copy_gets": 0, "evictions": 0}
+
+    def put(self, array: np.ndarray, key: Optional[str] = None) -> str:
+        key = key or new_object_key()
+        arr = np.ascontiguousarray(array)
+        if self.bytes_in_use + arr.nbytes > self.capacity_bytes:
+            raise MemoryError(f"object store over capacity on {self.node}")
+        arr = arr.copy()
+        arr.flags.writeable = False  # immutable objects (paper §4.1)
+        self._objs[key] = arr
+        self.bytes_in_use += arr.nbytes
+        self.stats["puts"] += 1
+        return key
+
+    def get(self, key: str) -> np.ndarray:
+        self.stats["gets"] += 1
+        self.stats["zero_copy_gets"] += 1
+        return self._objs[key]
+
+    def release(self, key: str) -> None:
+        pass
+
+    def delete(self, key: str) -> None:
+        arr = self._objs.pop(key, None)
+        if arr is not None:
+            self.bytes_in_use -= arr.nbytes
+            self.stats["evictions"] += 1
+
+    def contains(self, key: str) -> bool:
+        return key in self._objs
+
+    def close(self) -> None:
+        self._objs.clear()
+        self.bytes_in_use = 0

@@ -1,0 +1,123 @@
+"""Locality-aware placement & load balancing (paper §5.1, App-E).
+
+Capacity model: node i at time t has residual capacity
+    RC_{i,t} = MC_i − k_{i,t}·E_{i,t}
+with MC_i measured offline (App-E: raise the arrival rate until E_i
+inflects; MC = k'·E'), k the arrival rate and E the mean aggregation
+execution time (both fed by the sidecar metrics).
+
+Load balancing = bin packing of client updates onto the fewest nodes
+within residual capacity.  BestFit (the paper's choice) concentrates
+load to maximize shared-memory locality; WorstFit reproduces Knative's
+"Least Connection" spreading (the SL-H baseline); FirstFit trades
+locality for O(1) search.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class NodeState:
+    node: str
+    max_capacity: float          # MC_i (updates aggregated concurrently)
+    arrival_rate: float = 0.0    # k_{i,t}
+    exec_time_s: float = 1.0     # E_{i,t}
+    assigned: float = 0.0        # updates placed this round
+
+    @property
+    def queue_estimate(self) -> float:
+        """Q_{i,t} = k_{i,t} · E_{i,t} (§5.1)."""
+        return self.arrival_rate * self.exec_time_s
+
+    @property
+    def residual_capacity(self) -> float:
+        """RC_{i,t} = MC_i − k·E − already-assigned."""
+        return self.max_capacity - self.queue_estimate - self.assigned
+
+
+def measure_max_capacity(exec_times: Sequence[Tuple[float, float]],
+                         inflection: float = 1.5) -> float:
+    """Offline MC estimation (App-E): walk (arrival_rate, E) pairs in
+    increasing rate order; when E jumps by ``inflection``× over the base,
+    the node is saturating — MC = k'·E' at that point."""
+    if not exec_times:
+        return 0.0
+    base = exec_times[0][1]
+    for k, e in exec_times:
+        if e > inflection * base:
+            return k * e
+    k, e = exec_times[-1]
+    return k * e
+
+
+@dataclass
+class Placement:
+    assignment: Dict[str, List[int]]  # node -> update indices
+    nodes_used: List[str]
+    overflow: List[int]               # updates no node could take
+
+    @property
+    def num_nodes_used(self) -> int:
+        return len(self.nodes_used)
+
+
+def _fit_nodes(nodes: List[NodeState], policy: str) -> List[NodeState]:
+    if policy == "bestfit":
+        # tightest feasible bin first -> fewest nodes, max shared memory
+        return sorted(nodes, key=lambda n: n.residual_capacity)
+    if policy == "worstfit":
+        # most headroom first -> spreads load (Knative Least Connection)
+        return sorted(nodes, key=lambda n: -n.residual_capacity)
+    if policy == "firstfit":
+        return nodes
+    raise ValueError(f"unknown placement policy {policy!r}")
+
+
+def place_updates(
+    num_updates: int,
+    nodes: Dict[str, NodeState],
+    policy: str = "bestfit",
+    weights: Optional[Sequence[float]] = None,
+) -> Placement:
+    """Bin-pack ``num_updates`` model updates onto worker nodes.
+
+    Each update consumes 1 unit (or ``weights[i]``) of residual
+    capacity.  Returns node -> update-index lists; inter-node traffic is
+    minimized because any (src,dst) node pair exchanges at most one
+    intermediate update per round (§5.1).
+    """
+    weights = list(weights) if weights is not None else [1.0] * num_updates
+    assignment: Dict[str, List[int]] = {}
+    overflow: List[int] = []
+    live = list(nodes.values())
+
+    for idx in range(num_updates):
+        w = weights[idx]
+        placed = False
+        for cand in _fit_nodes(live, policy):
+            if cand.residual_capacity >= w:
+                assignment.setdefault(cand.node, []).append(idx)
+                cand.assigned += w
+                placed = True
+                break
+        if not placed:
+            overflow.append(idx)
+
+    used = [n for n in assignment]
+    return Placement(assignment=assignment, nodes_used=used, overflow=overflow)
+
+
+def choose_top_node(nodes: Dict[str, NodeState],
+                    assignment: Dict[str, List[int]]) -> Optional[str]:
+    """Top aggregator goes to the busiest used node: the largest share of
+    intermediate updates is then already local to it (§5.2)."""
+    if not assignment:
+        return None
+    return max(assignment, key=lambda n: len(assignment[n]))
+
+
+def inter_node_transfers(assignment: Dict[str, List[int]], top_node: str) -> int:
+    """One intermediate update crosses the network per non-top node used."""
+    return sum(1 for n in assignment if n != top_node and assignment[n])

@@ -1,0 +1,103 @@
+"""Event-driven metrics sidecar (paper §4.3) — the eBPF analogue.
+
+The paper attaches eBPF programs to each aggregator's socket SKMSG hook:
+metrics collection runs *only* when a send() event fires and costs
+nothing when idle.  The host-side analogue here is a hook table invoked
+on aggregation events (no resident thread, no polling); metrics land in
+an in-memory ``MetricsMap`` (the eBPF map analogue) that the LIFL agent
+drains periodically toward the metrics server.
+
+The in-graph counterpart (update norms fused into the compiled step) is
+in fl/round.py::_metrics — together they mirror the two halves of C4.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class MetricsMap:
+    """In-kernel key-value table analogue (BPF_MAP_TYPE_HASH)."""
+
+    def __init__(self):
+        self._m: Dict[Tuple[str, str], float] = defaultdict(float)
+        self._count: Dict[Tuple[str, str], int] = defaultdict(int)
+        self._lock = threading.Lock()
+
+    def update(self, owner: str, metric: str, value: float) -> None:
+        with self._lock:
+            self._m[(owner, metric)] += value
+            self._count[(owner, metric)] += 1
+
+    def drain(self) -> Dict[Tuple[str, str], Tuple[float, int]]:
+        """Agent-side periodic retrieval; resets the map."""
+        with self._lock:
+            out = {k: (self._m[k], self._count[k]) for k in self._m}
+            self._m.clear()
+            self._count.clear()
+        return out
+
+    def peek(self, owner: str, metric: str) -> Tuple[float, int]:
+        with self._lock:
+            k = (owner, metric)
+            return self._m.get(k, 0.0), self._count.get(k, 0)
+
+
+@dataclass
+class EventSidecar:
+    """Per-aggregator sidecar: a set of hooks fired on events.
+
+    Strictly event-driven: zero activity (and zero cost) between events.
+    ``on_send`` mirrors the SKMSG attachment point.
+    """
+
+    owner_id: str
+    metrics: MetricsMap
+
+    invocations: int = 0
+
+    def on_send(self, nbytes: int) -> None:
+        self.invocations += 1
+        self.metrics.update(self.owner_id, "tx_bytes", float(nbytes))
+        self.metrics.update(self.owner_id, "tx_msgs", 1.0)
+
+    def on_recv(self, nbytes: int, queue_delay_s: float) -> None:
+        self.invocations += 1
+        self.metrics.update(self.owner_id, "rx_bytes", float(nbytes))
+        self.metrics.update(self.owner_id, "queue_delay_s", queue_delay_s)
+
+    def on_aggregate(self, n_updates: int, exec_time_s: float) -> None:
+        """Execution time of the aggregation task — feeds E_{i,t} for the
+        capacity model (§5.1) and hierarchy planner (§5.2)."""
+        self.invocations += 1
+        self.metrics.update(self.owner_id, "agg_updates", float(n_updates))
+        self.metrics.update(self.owner_id, "agg_exec_s", exec_time_s)
+
+
+class MetricsServer:
+    """Cluster-wide sink (serverless control plane, Fig 3): receives the
+    per-node agent's drained metrics; serves smoothed rates to the
+    autoscaler/planner."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.totals: Dict[Tuple[str, str], float] = defaultdict(float)
+        self.counts: Dict[Tuple[str, str], int] = defaultdict(int)
+
+    def push(self, drained: Dict[Tuple[str, str], Tuple[float, int]]) -> None:
+        with self._lock:
+            for k, (v, c) in drained.items():
+                self.totals[k] += v
+                self.counts[k] += c
+
+    def rate(self, owner: str, metric: str) -> Tuple[float, int]:
+        with self._lock:
+            k = (owner, metric)
+            return self.totals.get(k, 0.0), self.counts.get(k, 0)
+
+    def mean(self, owner: str, metric: str, default: float = 0.0) -> float:
+        tot, cnt = self.rate(owner, metric)
+        return tot / cnt if cnt else default

@@ -1,0 +1,14 @@
+from repro.data.loader import ClientDataset, CohortTokenLoader, build_client_datasets
+from repro.data.partition import ClientShard, client_sample_counts, dirichlet_partition
+from repro.data.synthetic import TokenTaskStream, synthetic_femnist
+
+__all__ = [
+    "ClientDataset",
+    "CohortTokenLoader",
+    "build_client_datasets",
+    "ClientShard",
+    "client_sample_counts",
+    "dirichlet_partition",
+    "TokenTaskStream",
+    "synthetic_femnist",
+]

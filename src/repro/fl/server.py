@@ -1,0 +1,79 @@
+"""Server-side optimizers (FedOpt family) — pure JAX, no optax.
+
+The server consumes the *aggregated* model update Δ (weighted mean of
+client/cohort updates; for fused local_steps=1 rounds Δ is the weighted
+mean gradient) and produces new global params:
+
+  fedavg  :  w ← w − η·Δ                  (McMahan et al., 2017)
+  fedavgm :  m ← β·m + Δ;  w ← w − η·m    (server momentum)
+  fedadam :  Adam on Δ                    (Reddi et al., 2020 — the paper
+                                           cites adaptive fed-opt)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_server_state(name: str, params: Any) -> Dict[str, Any]:
+    if name == "fedavg":
+        return {"step": jnp.zeros((), jnp.int32)}
+    if name == "fedavgm":
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "momentum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+    if name == "fedadam":
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "m": zeros(), "v": zeros()}
+    raise ValueError(f"unknown server optimizer {name!r}")
+
+
+def apply_server_opt(
+    name: str,
+    params: Any,
+    state: Dict[str, Any],
+    delta: Any,
+    *,
+    lr: float = 1.0,
+    beta: float = 0.9,
+    beta2: float = 0.99,
+    eps: float = 1e-8,
+) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    if name == "fedavg":
+        new = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) - lr * d.astype(jnp.float32)).astype(p.dtype),
+            params, delta,
+        )
+        return new, {"step": step}
+    if name == "fedavgm":
+        m = jax.tree.map(
+            lambda mm, d: beta * mm + d.astype(jnp.float32), state["momentum"], delta
+        )
+        new = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) - lr * mm).astype(p.dtype), params, m
+        )
+        return new, {"step": step, "momentum": m}
+    if name == "fedadam":
+        m = jax.tree.map(
+            lambda mm, d: beta * mm + (1 - beta) * d.astype(jnp.float32), state["m"], delta
+        )
+        v = jax.tree.map(
+            lambda vv, d: beta2 * vv + (1 - beta2) * jnp.square(d.astype(jnp.float32)),
+            state["v"], delta,
+        )
+        t = step.astype(jnp.float32)
+        bc1 = 1 - beta ** t
+        bc2 = 1 - beta2 ** t
+        new = jax.tree.map(
+            lambda p, mm, vv: (
+                p.astype(jnp.float32)
+                - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            ).astype(p.dtype),
+            params, m, v,
+        )
+        return new, {"step": step, "m": m, "v": v}
+    raise ValueError(f"unknown server optimizer {name!r}")

@@ -1,0 +1,15 @@
+from repro.kernels.fedavg.ops import (
+    eager_accumulate,
+    fedavg_reduce,
+    fedavg_reduce_tree,
+    flatten_update,
+    unflatten_update,
+)
+
+__all__ = [
+    "eager_accumulate",
+    "fedavg_reduce",
+    "fedavg_reduce_tree",
+    "flatten_update",
+    "unflatten_update",
+]

@@ -1,0 +1,95 @@
+"""Pallas TPU kernels for the FedAvg aggregation hot loop (paper §4.1).
+
+The aggregation data plane streams GB-scale flat update vectors; the two
+hot ops are:
+
+  * ``fedavg_reduce``  — K-way weighted reduce: (K, N) updates ×
+    (K,) weights -> (N,) weighted mean (lazy aggregation's batch fold,
+    and each tree level's combine);
+  * ``eager_accumulate`` — acc += w·u with ``input_output_aliasing`` so
+    the accumulator is updated *in place* (the kernel-level analogue of
+    LIFL's zero-copy shared-memory consume; eager timing, App-G).
+
+Memory-bound streaming: N is tiled into lane-aligned VMEM blocks
+(BLOCK_N = 64·128 elements = 32 KiB fp32 per operand slab); the K axis
+is kept resident per block so each update element is read exactly once
+and accumulation happens in fp32 VREGs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 64 * 128  # lane-aligned (8, 128)-tileable block
+
+
+def _reduce_kernel(w_ref, u_ref, o_ref, *, inv_total: float):
+    """One N-block: o = Σ_k w[k]·u[k, :] · inv_total."""
+    u = u_ref[...].astype(jnp.float32)          # (K, BLOCK_N)
+    w = w_ref[...].astype(jnp.float32)          # (K, 1)
+    o_ref[...] = (jnp.sum(u * w, axis=0) * inv_total).astype(o_ref.dtype)
+
+
+def fedavg_reduce_pallas(
+    updates: jnp.ndarray,   # (K, N)
+    weights: jnp.ndarray,   # (K,)
+    *,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Weighted mean over K updates; N tiled into VMEM blocks."""
+    K, N = updates.shape
+    block_n = min(block_n, N)
+    grid = (pl.cdiv(N, block_n),)
+    inv_total = 1.0  # weights pre-normalized by ops.py wrapper
+    w2 = weights.reshape(K, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_reduce_kernel, inv_total=inv_total),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),          # weights resident
+            pl.BlockSpec((K, block_n), lambda i: (0, i)),     # update slab
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(w2, updates)
+
+
+def _accum_kernel(acc_ref, u_ref, w_ref, o_ref):
+    """One N-block of acc += w·u (fp32 accumulate)."""
+    acc = acc_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    w = w_ref[0, 0]
+    o_ref[...] = (acc + w * u).astype(o_ref.dtype)
+
+
+def eager_accumulate_pallas(
+    acc: jnp.ndarray,      # (N,) fp32 running Σ w·u
+    update: jnp.ndarray,   # (N,) any float dtype
+    weight: jnp.ndarray,   # scalar
+    *,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """In-place eager fold: the output aliases ``acc`` (zero-copy)."""
+    N = acc.shape[0]
+    block_n = min(block_n, N)
+    grid = (pl.cdiv(N, block_n),)
+    w2 = jnp.asarray(weight, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), acc.dtype),
+        input_output_aliases={0: 0},  # acc consumed in place
+        interpret=interpret,
+    )(acc, update, w2)

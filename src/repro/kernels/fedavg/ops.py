@@ -1,0 +1,88 @@
+"""Jitted public wrappers for the fedavg kernels.
+
+``impl='auto'`` picks Pallas on TPU backends, the jnp twin elsewhere
+(CPU dry-run / tests); ``impl='pallas_interpret'`` runs the kernel body
+in Python for correctness tests.  Pytree helpers flatten an update
+pytree into the (K, N) layout the kernel streams.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg.fedavg import eager_accumulate_pallas, fedavg_reduce_pallas
+from repro.kernels.fedavg.ref import eager_accumulate_ref, fedavg_reduce_ref
+
+
+def _use_pallas(impl: str) -> Tuple[bool, bool]:
+    if impl == "auto":
+        return (jax.default_backend() == "tpu"), False
+    if impl == "pallas":
+        return True, False
+    if impl == "pallas_interpret":
+        return True, True
+    if impl == "jnp":
+        return False, False
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def fedavg_reduce(updates: jnp.ndarray, weights: jnp.ndarray,
+                  *, impl: str = "auto") -> jnp.ndarray:
+    """Weighted mean of K stacked flat updates: (K,N) × (K,) -> (N,)."""
+    wn = weights.astype(jnp.float32)
+    wn = wn / jnp.maximum(jnp.sum(wn), 1e-30)
+    pallas, interp = _use_pallas(impl)
+    if pallas:
+        return fedavg_reduce_pallas(updates, wn, interpret=interp)
+    return fedavg_reduce_ref(updates, wn)
+
+
+@partial(jax.jit, static_argnames=("impl",), donate_argnums=(0,))
+def eager_accumulate(acc: jnp.ndarray, update: jnp.ndarray, weight,
+                     *, impl: str = "auto") -> jnp.ndarray:
+    """acc += w·u, donated/aliased accumulator (zero-copy fold)."""
+    pallas, interp = _use_pallas(impl)
+    if pallas:
+        return eager_accumulate_pallas(acc, update, weight, interpret=interp)
+    return eager_accumulate_ref(acc, update, weight)
+
+
+# ---------------------------------------------------------------------------
+# pytree adapters (model updates are parameter pytrees)
+# ---------------------------------------------------------------------------
+
+
+def flatten_update(tree: Any) -> Tuple[jnp.ndarray, Any, List]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    meta = [(l.shape, l.dtype) for l in leaves]
+    return flat, treedef, meta
+
+
+def unflatten_update(flat: jnp.ndarray, treedef, meta) -> Any:
+    out = []
+    off = 0
+    for shape, dtype in meta:
+        n = 1
+        for d in shape:
+            n *= d
+        out.append(flat[off : off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def fedavg_reduce_tree(updates: Sequence[Any], weights: Sequence[float],
+                       *, impl: str = "auto") -> Any:
+    """Weighted mean of update pytrees via the flat kernel."""
+    flats, treedef, meta = None, None, None
+    rows = []
+    for u in updates:
+        f, treedef, meta = flatten_update(u)
+        rows.append(f)
+    stacked = jnp.stack(rows)
+    flat = fedavg_reduce(stacked, jnp.asarray(weights, jnp.float32), impl=impl)
+    return unflatten_update(flat, treedef, meta)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the fedavg kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fedavg_reduce_ref(updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """(K, N) × (K,) -> (N,) fp32 weighted sum (weights pre-normalized)."""
+    return jnp.sum(
+        updates.astype(jnp.float32) * weights.astype(jnp.float32)[:, None], axis=0
+    )
+
+
+def eager_accumulate_ref(acc: jnp.ndarray, update: jnp.ndarray,
+                         weight) -> jnp.ndarray:
+    return (
+        acc.astype(jnp.float32)
+        + jnp.float32(weight) * update.astype(jnp.float32)
+    ).astype(acc.dtype)

@@ -1,0 +1,136 @@
+"""Pallas TPU flash attention (forward) with explicit VMEM tiling.
+
+Grid (B, H, n_q, n_kv); the kv axis is innermost and sequential on TPU,
+so the online-softmax state (acc, m, l) lives in VMEM scratch that
+persists across kv steps of one (b, h, i) cell.  GQA is expressed in the
+BlockSpec index map — kv blocks are fetched from head ``h // group`` —
+so grouped heads share K/V bytes in HBM without materializing a
+repeated tensor.
+
+Block sizes default to (128, 512): MXU-aligned (multiples of 128 on the
+contracting/lane dims) and small enough that the working set
+(q 128×D + k/v 512×D + scores 128×512 fp32 + acc 128×D fp32) fits VMEM
+for every assigned head_dim (64…256).
+
+The backward pass reuses the flash custom-VJP in models/flash.py (its
+jnp twin has identical blocking); training on TPU would pair this
+forward with a Pallas backward — out of scope for the CPU container,
+noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+GLOBAL = -1
+_NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    window: int,
+    causal: bool,
+    bq: int,
+    bk: int,
+    seq_len: int,
+):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, Dv)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # (bq, bk)
+
+    rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = cols < seq_len
+    if causal:
+        mask &= rows >= cols
+    if window != GLOBAL:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd_pallas(
+    q: jnp.ndarray,   # (B, H, S, D)
+    k: jnp.ndarray,   # (B, K, S, D)
+    v: jnp.ndarray,   # (B, K, S, Dv)
+    *,
+    scale: float,
+    window: int = GLOBAL,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    Dv = v.shape[-1]
+    group = H // K
+    bq = min(bq, S)
+    bk = min(bk, S)
+    n_q = pl.cdiv(S, bq)
+    n_kv = pl.cdiv(S, bk)
+    grid = (B, H, n_q, n_kv)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel,
+        scale=scale, window=window, causal=causal,
+        bq=bq, bk=bk, seq_len=S,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, Dv), lambda b, h, i, j, g=group: (b, h // g, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, Dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dv), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Naive jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+GLOBAL = -1
+_NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,   # (B, H, S, D)
+    k: jnp.ndarray,   # (B, K, S, D)
+    v: jnp.ndarray,   # (B, K, S, Dv)
+    *,
+    scale: float,
+    window: int = GLOBAL,
+    causal: bool = True,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    g = H // K
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= rows >= cols
+    if window != GLOBAL:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(v.dtype)

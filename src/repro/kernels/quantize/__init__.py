@@ -1,0 +1,4 @@
+from repro.kernels.quantize.ops import dequantize, quantize
+from repro.kernels.quantize.quantize import QBLOCK
+
+__all__ = ["quantize", "dequantize", "QBLOCK"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the int8 block quantizer (matches
+fl/compression.py semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x_blocks: jnp.ndarray):
+    x = x_blocks.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jnp.ndarray, scales: jnp.ndarray, out_dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scales[:, None]).astype(out_dtype)

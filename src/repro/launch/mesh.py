@@ -1,0 +1,75 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so that
+importing this module never touches jax device state — smoke tests see
+one CPU device; only the dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first
+jax use.
+
+Mesh axes (DESIGN.md §5):
+  pod   — crosses DCN; LIFL's *inter-node* tier (top aggregator level)
+  data  — intra-pod ICI; client cohorts / FSDP; LIFL's *intra-node*
+          shared-memory tier (leaf aggregator level)
+  model — intra-pod ICI; TP / EP / sequence-sharded KV
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, found {len(devices)}; "
+            "launch via repro.launch.dryrun which forces 512 host devices"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(devices[:ndev]).reshape(shape), axes
+    )
+
+
+def make_debug_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Small mesh over however many (forced) host devices exist."""
+    import numpy as np
+
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()[:ndev]
+    if len(devices) < ndev:
+        raise RuntimeError(f"need {ndev} devices, have {len(jax.devices())}")
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh():
+    """1x1 (data, model) mesh on the single local device — lets every
+    code path that wants mesh axes (shard_map MoE, hierarchical
+    aggregation) run unchanged on CPU."""
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+    )
+
+
+def mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """Axes client cohorts / batch are sharded over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def pod_axis(mesh) -> Optional[str]:
+    return "pod" if "pod" in mesh.axis_names else None

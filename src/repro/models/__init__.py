@@ -1,0 +1,5 @@
+from repro.models.registry import LM, build_model
+from repro.models.resnet import ResNet, build_resnet
+from repro.models.transformer import ModelOptions
+
+__all__ = ["LM", "build_model", "ResNet", "build_resnet", "ModelOptions"]

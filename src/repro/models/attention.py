@@ -1,0 +1,307 @@
+"""Attention: GQA with RoPE, sliding windows, three interchangeable impls.
+
+* ``naive``   — full (S, S) score matrix; oracle for tests, small shapes.
+* ``chunked`` — blockwise online-softmax (flash-style) as a ``lax.scan``
+  over KV blocks; O(S·block) live memory.  This is the CPU-lowerable twin
+  of the Pallas kernel (same blocking), used by the dry-run.
+* ``pallas``  — kernels/flash_attention (TPU target; interpret=True in
+  tests).
+
+Decode uses a ring-buffer KV cache (capacity = context length; slot
+``pos % capacity`` is overwritten), a single einsum over the cache — the
+softmax reductions over a sequence-sharded cache become tiny (B, H)
+all-reduces under GSPMD (sequence parallelism for long contexts).
+
+Window convention: ``window == GLOBAL (-1)`` is full causal attention;
+otherwise query i attends keys j with ``i - window < j <= i``.  Windows
+are **static** per call (the transformer segments layers by window), so
+local layers statically skip out-of-window KV blocks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GLOBAL, ArchConfig
+from repro.models.layers import apply_rope, dense_init, rmsnorm_headwise
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, dtype, cross: bool = False) -> dict:
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(kq, (d, h * hd), dtype),
+        "wk": dense_init(kk, (d, kvh * hd), dtype),
+        "wv": dense_init(kv, (d, kvh * hd), dtype),
+        "wo": dense_init(ko, (h * hd, d), dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dtype=dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype=dtype)
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, params, xq, xkv, positions_q, positions_kv, rope: bool):
+    """-> q (B,Sq,K,G,D), k (B,Skv,K,D), v (B,Skv,K,D)."""
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    q = (xq @ params["wq"]).reshape(B, Sq, h, hd)
+    k = (xkv @ params["wk"]).reshape(B, Skv, kvh, hd)
+    v = (xkv @ params["wv"]).reshape(B, Skv, kvh, hd)
+    if "q_norm" in params:
+        q = rmsnorm_headwise(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_headwise(params["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions_q, cfg.rope_theta)
+        k = apply_rope(k, positions_kv, cfg.rope_theta)
+    q = q.reshape(B, Sq, kvh, g, hd)
+    return q, k, v
+
+
+def _band_mask(qpos, kpos, window: int, causal: bool):
+    """(…, Sq, Skv) bool mask: True = attend."""
+    diff = qpos[..., :, None] - kpos[..., None, :]
+    m = (diff >= 0) if causal else jnp.ones_like(diff, dtype=bool)
+    if window != GLOBAL:
+        m = m & (diff < window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# naive impl (oracle)
+# ---------------------------------------------------------------------------
+
+
+def _attend_naive(q, k, v, qpos, kpos, window, causal, scale):
+    # q: (B,Sq,K,G,D)  k,v: (B,Skv,K,D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    mask = _band_mask(qpos, kpos, window, causal)  # (Sq,Skv)
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunked impl (flash-style scan over KV blocks)
+# ---------------------------------------------------------------------------
+
+
+def _attend_chunked(q, k, v, qpos, kpos, window, causal, scale, block_kv: int):
+    """Online-softmax over KV blocks.  Static skipping for window layers:
+    only the last ceil(window/block)+1 KV blocks can be visible to any
+    query — but queries are processed together, so skipping applies when
+    the *entire* block is out of range for *all* queries; windows still
+    cut FLOPs ~(window+Sq)/Skv when Sq is a chunk of a long sequence.
+    For full causal self-attention this is the rectangle schedule
+    (triangle waste removed by the two-level schedule, see §Perf).
+    """
+    B, Sq, K, G, D = q.shape
+    Skv = k.shape[1]
+    bk = min(block_kv, Skv)
+    nkv = -(-Skv // bk)
+    pad = nkv * bk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-(10**9))
+
+    kb = k.reshape(B, nkv, bk, K, D).swapaxes(0, 1)      # (nkv,B,bk,K,D)
+    vb = v.reshape(B, nkv, bk, K, D).swapaxes(0, 1)
+    pb = kpos.reshape(nkv, bk)
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kc, vc, pc = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kc.astype(jnp.float32)) * scale
+        mask = _band_mask(qpos, pc, window, causal)  # (Sq,bk)
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, K, G, Sq, D), jnp.float32)
+    m0 = jnp.full((B, K, G, Sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B,K,G,Sq,D) -> (B,Sq,K,G,D)
+    return out.transpose(0, 3, 1, 2, 4).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public: training / prefill attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    cfg: ArchConfig,
+    params: dict,
+    x: jnp.ndarray,                       # (B, S, D)
+    positions: jnp.ndarray,               # (S,)
+    *,
+    window: int = GLOBAL,
+    causal: bool = True,
+    memory: Optional[jnp.ndarray] = None,  # cross-attention memory (B, Sm, D)
+    memory_positions: Optional[jnp.ndarray] = None,
+    impl: str = "chunked",
+    block_kv: int = 512,
+    dp_axes: tuple = (),
+    model_axis: str = "model",
+) -> jnp.ndarray:
+    cross = memory is not None
+    xkv = memory if cross else x
+    kpos = memory_positions if cross else positions
+    if cross:
+        kpos = kpos if kpos is not None else jnp.arange(xkv.shape[1])
+    q, k, v = _project_qkv(cfg, params, x, xkv, positions, kpos, rope=not cross)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    causal = causal and not cross
+    if impl == "naive":
+        out = _attend_naive(q, k, v, positions, kpos, window, causal, scale)
+    elif impl in ("chunked", "chunked_sp"):
+        if not cross:
+            # flash custom-VJP: O(S) residuals (out + lse), blockwise
+            # recompute in backward — positions are arange for self-attn.
+            # chunked_sp = context-parallel: q sequence-sharded over the
+            # model axis (head counts need not divide the mesh).
+            from repro.models.flash import (
+                flash_self_attention,
+                flash_self_attention_sp,
+            )
+
+            if impl == "chunked_sp":
+                out = flash_self_attention_sp(
+                    q, k, v, window, causal, scale,
+                    min(block_kv, k.shape[1]),
+                    dp_axes=dp_axes, model_axis=model_axis,
+                )
+            else:
+                out = flash_self_attention(
+                    q, k, v, window, causal, scale, min(block_kv, k.shape[1])
+                )
+        else:
+            out = _attend_chunked(
+                q, k, v, positions, kpos, window, causal, scale, block_kv
+            )
+    elif impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(
+            q, k, v, positions, kpos, window=window, causal=causal, scale=scale
+        )
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return out @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode with ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, capacity: int, window: int, dtype):
+    """Ring cache; local layers only keep ``window`` slots."""
+    cap = capacity if window == GLOBAL else min(window, capacity)
+    shape = (batch, cap, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def attention_decode(
+    cfg: ArchConfig,
+    params: dict,
+    x: jnp.ndarray,        # (B, 1, D) current token hidden
+    cache: dict,           # ring cache, fully valid (context length = capacity)
+    pos: jnp.ndarray,      # scalar int32: absolute position of current token
+    *,
+    window: int = GLOBAL,
+):
+    B = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    cap = cache["k"].shape[1]
+
+    q = (x @ params["wq"]).reshape(B, 1, h, hd)
+    k_new = (x @ params["wk"]).reshape(B, 1, kvh, hd)
+    v_new = (x @ params["wv"]).reshape(B, 1, kvh, hd)
+    if "q_norm" in params:
+        q = rmsnorm_headwise(params["q_norm"], q, cfg.norm_eps)
+        k_new = rmsnorm_headwise(params["k_norm"], k_new, cfg.norm_eps)
+    posv = jnp.asarray(pos)[None]
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k_new = apply_rope(k_new, posv, cfg.rope_theta)
+
+    # ring positions: slot s holds absolute position p such that
+    # p ≡ s (mod cap) and p in (pos - cap, pos].  The *current* token is
+    # written into slot pos % cap before attending.
+    slot = jnp.mod(pos, cap)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    slots = jnp.arange(cap)
+    abs_pos = pos - jnp.mod(slot - slots, cap)  # absolute position per slot
+
+    qg = q.reshape(B, kvh, g, hd)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    visible = abs_pos >= 0
+    if window != GLOBAL:
+        visible = visible & (pos - abs_pos < window)
+    scores = jnp.where(visible[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(jnp.float32))
+    out = out.reshape(B, 1, h * hd).astype(x.dtype)
+    return out @ params["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention decode (enc-dec): static memory K/V, no cache update
+# ---------------------------------------------------------------------------
+
+
+def init_cross_cache(cfg: ArchConfig, params: dict, memory: jnp.ndarray):
+    B, Sm, _ = memory.shape
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": (memory @ params["wk"]).reshape(B, Sm, kvh, hd),
+        "v": (memory @ params["wv"]).reshape(B, Sm, kvh, hd),
+    }
+
+
+def cross_attention_decode(cfg: ArchConfig, params: dict, x: jnp.ndarray, cross_cache: dict):
+    B = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    q = (x @ params["wq"]).reshape(B, kvh, g, hd)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs",
+        q.astype(jnp.float32),
+        cross_cache["k"].astype(jnp.float32),
+    ) / math.sqrt(hd)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cross_cache["v"].astype(jnp.float32))
+    out = out.reshape(B, 1, h * hd).astype(x.dtype)
+    return out @ params["wo"]

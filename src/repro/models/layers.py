@@ -1,0 +1,166 @@
+"""Core pure-JAX layers: norms, RoPE, SwiGLU, embeddings, init helpers.
+
+No flax/haiku — params are nested dicts of jnp arrays, every layer is a
+pair of ``init_*`` / ``apply`` functions.  All inits are shape-driven so
+``jax.eval_shape`` can abstract them for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    orig = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(orig)
+
+
+def rmsnorm_headwise(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6):
+    """QK-norm: normalize over the trailing head_dim."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) rotated pairwise; positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    if head_dim % 2:  # odd head dims (e.g. reduced configs) skip the tail lane
+        tail = x[..., -1:]
+        body = apply_rope(x[..., :-1], positions, theta)
+        return jnp.concatenate([body, tail], axis=-1)
+    freqs = rope_frequencies(head_dim, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin = jnp.sin(angles)[..., None, :]  # (..., S, 1, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(kg, (d_model, d_ff), dtype),
+        "up": dense_init(ku, (d_model, d_ff), dtype),
+        "down": dense_init(kd, (d_ff, d_model), dtype),
+    }
+
+
+def ffn(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jnp.ndarray:
+    # σ = 1/√d pairs with the √d embedding multiplier (unit-variance
+    # activations) and keeps tied-unembedding logits O(1) at init.
+    return dense_init(key, (vocab, d_model), dtype, scale=d_model ** -0.5)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jnp.ndarray, x: jnp.ndarray, tied: bool) -> jnp.ndarray:
+    """Project hidden states to vocab logits (fp32)."""
+    w = table_or_head.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    if tied:
+        return xf @ w.T
+    return xf @ w
+
+
+# ---------------------------------------------------------------------------
+# Chunked (sequence-blocked) cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def chunked_lm_loss(
+    hidden: jnp.ndarray,       # (B, S, D)
+    unembed_w: jnp.ndarray,    # (V, D) if tied else (D, V)
+    labels: jnp.ndarray,       # (B, S) int32, -1 = ignore
+    tied: bool,
+    chunk: int = 256,
+):
+    """Cross-entropy without ever materializing the full (B, S, V) logits.
+
+    ``lax.scan`` over sequence chunks, each chunk rematerialized in the
+    backward pass (``jax.checkpoint``) so the residual is O(B·chunk·V)
+    instead of O(B·S·V) — essential for vocab 262k at 1M tokens.
+    """
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    @jax.checkpoint
+    def chunk_loss(h_c, y_c):
+        logits = unembed(unembed_w, h_c, tied)  # (B, c, V) fp32
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        tok = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (y_c >= 0).astype(jnp.float32)
+        return jnp.sum((logz - tok) * valid), jnp.sum(valid)
+
+    def body(carry, xs):
+        h_c, y_c = xs
+        l, c = chunk_loss(h_c, y_c)
+        return (carry[0] + l, carry[1] + c), None
+
+    hs = hidden[:, : n * chunk].reshape(B, n, chunk, D).swapaxes(0, 1)
+    ys = labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ys))
+    if rem:
+        l, c = chunk_loss(hidden[:, n * chunk :], labels[:, n * chunk :])
+        total, count = total + l, count + c
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,174 @@
+"""Multi-head Latent Attention (DeepSeek-V2), pure JAX.
+
+Train/prefill path decompresses the latent per KV position; the decode
+path uses the *absorption* trick (W_UK folded into the query, W_UV into
+the output) so the per-step cache read is the compressed latent
+(kv_lora + rope_dim per token) — the MLA memory win shows up directly in
+the roofline memory term for decode cells.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense_init, rmsnorm
+
+_NEG_INF = -1e30
+
+
+def init_mla(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], (d, m.q_lora_rank), dtype)
+        p["q_a_norm"] = jnp.ones((m.q_lora_rank,), dtype=dtype)
+        p["wq_b"] = dense_init(ks[1], (m.q_lora_rank, h * qk_head), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], (d, h * qk_head), dtype)
+    # down-projection to compressed latent + decoupled rope key
+    p["wkv_a"] = dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype)
+    p["kv_a_norm"] = jnp.ones((m.kv_lora_rank,), dtype=dtype)
+    # up-projection (decompression): latent -> per-head (k_nope | v)
+    p["wkv_b"] = dense_init(
+        ks[3], (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)), dtype
+    )
+    p["wo"] = dense_init(ks[4], (h * m.v_head_dim, d), dtype)
+    return p
+
+
+def _queries(cfg: ArchConfig, params, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.q_lora_rank:
+        qa = rmsnorm({"scale": params["q_a_norm"]}, x @ params["wq_a"], cfg.norm_eps)
+        q = (qa @ params["wq_b"]).reshape(B, S, h, qk_head)
+    else:
+        q = (x @ params["wq"]).reshape(B, S, h, qk_head)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(cfg: ArchConfig, params, x, positions):
+    """Compressed latent c (B,S,R) and shared rope key (B,S,Dr)."""
+    m = cfg.mla
+    kv = x @ params["wkv_a"]
+    c = rmsnorm({"scale": params["kv_a_norm"]}, kv[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank :][:, :, None, :]  # (B,S,1,Dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c, k_rope
+
+
+def mla_attention(
+    cfg: ArchConfig,
+    params: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    causal: bool = True,
+    impl: str = "naive",
+    block_kv: int = 512,
+    dp_axes: tuple = (),
+    model_axis: str = "model",
+) -> jnp.ndarray:
+    """Train/prefill: decompress the latent, then standard attention with
+    concatenated (nope | rope) head dims — so MLA reuses the flash core
+    (scores = q_nope·k_nope + q_rope·k_rope in one contraction)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _queries(cfg, params, x, positions)
+    c, k_rope = _latent(cfg, params, x, positions)
+    wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c, wkv_b[..., : m.qk_nope_head_dim])
+    v = jnp.einsum("bsr,rhd->bshd", c, wkv_b[..., m.qk_nope_head_dim :])
+
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]  # K=h,G=1
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, h, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    if impl == "naive":
+        from repro.models.attention import _attend_naive
+
+        out = _attend_naive(q_cat, k_cat, v, positions, positions, -1, causal, scale)
+    else:
+        from repro.models.flash import flash_self_attention, flash_self_attention_sp
+
+        bk = min(block_kv, S)
+        if impl == "chunked_sp":
+            out = flash_self_attention_sp(
+                q_cat, k_cat, v, -1, causal, scale, bk,
+                dp_axes=dp_axes, model_axis=model_axis,
+            )
+        else:
+            out = flash_self_attention(q_cat, k_cat, v, -1, causal, scale, bk)
+    out = out.reshape(B, S, h * m.v_head_dim)
+    return out @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode with compressed-latent cache + absorption
+# ---------------------------------------------------------------------------
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, capacity: int, dtype):
+    m = cfg.mla
+    return {
+        "c": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(
+    cfg: ArchConfig,
+    params: dict,
+    x: jnp.ndarray,    # (B, 1, D)
+    cache: dict,
+    pos: jnp.ndarray,  # scalar
+):
+    m = cfg.mla
+    B = x.shape[0]
+    h = cfg.num_heads
+    cap = cache["c"].shape[1]
+    posv = jnp.asarray(pos)[None]
+
+    q_nope, q_rope = _queries(cfg, params, x, posv)   # (B,1,h,·)
+    c_new, kr_new = _latent(cfg, params, x, posv)     # (B,1,R), (B,1,Dr)
+
+    slot = jnp.mod(pos, cap)
+    c = jax.lax.dynamic_update_slice(cache["c"], c_new.astype(cache["c"].dtype), (0, slot, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, slot, 0)
+    )
+
+    wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., : m.qk_nope_head_dim]   # (R,h,Dn)
+    w_uv = wkv_b[..., m.qk_nope_head_dim :]   # (R,h,Dv)
+
+    # absorb W_UK into the query: q_c (B,h,R) — score via latent directly
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = jnp.einsum("bhr,bsr->bhs", q_c.astype(jnp.float32), c.astype(jnp.float32))
+    s = s + jnp.einsum(
+        "bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32), kr.astype(jnp.float32)
+    )
+    s = s * scale
+    # ring-slot validity: slot j holds absolute position pos - ((slot-j) mod cap)
+    slots = jnp.arange(cap)
+    abs_pos = pos - jnp.mod(slot - slots, cap)
+    s = jnp.where((abs_pos >= 0)[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", p, c.astype(jnp.float32))  # latent-space output
+    out = jnp.einsum("bhr,rhd->bhd", o_c.astype(x.dtype), w_uv)  # absorb W_UV
+    out = out.reshape(B, 1, h * m.v_head_dim)
+    return out @ params["wo"], {"c": c, "k_rope": kr}

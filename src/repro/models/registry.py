@@ -1,0 +1,167 @@
+"""Model facade: builds a uniform LM interface for every assigned arch.
+
+``LM`` exposes exactly the functions the FL round / serving / dry-run
+layers need:
+
+  init(key) -> params
+  loss(params, batch) -> (scalar loss, aux dict)           [train_4k]
+  prefill(params, batch) -> (last-token logits, caches)    [prefill_32k]
+  init_decode(batch, capacity) -> caches
+  decode_step(params, tokens, caches, pos) -> (logits, caches)  [decode_*]
+
+Batches are plain dicts:
+  train:   {"tokens": (B,S) i32, "labels": (B,S) i32, "frontend": (B,F,D)?}
+  prefill: {"tokens": (B,S) i32, "frontend": (B,F,D)?}
+  decode:  tokens (B,1) i32 + caches + pos scalar
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+from repro.models.layers import dense_init, init_embedding, init_rmsnorm, rmsnorm
+from repro.models.sharded_vocab import (
+    chunked_lm_loss_sharded,
+    decode_logits,
+    embed_lookup,
+    padded_vocab,
+)
+from repro.models.transformer import ModelOptions
+
+MOE_AUX_WEIGHT = 0.01
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, opts: Optional[ModelOptions] = None):
+        self.cfg = cfg
+        self.opts = opts or ModelOptions()
+        self.specs = tfm.layer_specs(cfg)
+        self.enc_specs = tfm.encoder_specs(cfg) if cfg.encoder_layers else []
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_emb, k_dec, k_enc, k_head, k_fp = jax.random.split(key, 5)
+        vp = padded_vocab(cfg.vocab_size)
+        params: Dict[str, Any] = {
+            "embed": init_embedding(k_emb, vp, cfg.d_model, self.dtype),
+            "segments": tfm.init_stack(k_dec, cfg, self.specs, self.dtype),
+            "final_norm": init_rmsnorm(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k_head, (cfg.d_model, vp), self.dtype)
+        if self.enc_specs:
+            params["encoder"] = {
+                "segments": tfm.init_stack(k_enc, cfg, self.enc_specs, self.dtype),
+                "final_norm": init_rmsnorm(cfg.d_model, self.dtype),
+            }
+        if cfg.frontend:
+            params["frontend_proj"] = dense_init(
+                k_fp, (cfg.d_model, cfg.d_model), self.dtype
+            )
+        return params
+
+    # ------------------------------------------------------------------
+    def _unembed_w(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"], True
+        return params["lm_head"], False
+
+    def _encode(self, params, frontend):
+        """Enc-dec encoder over stub frame embeddings -> memory (B,F,D)."""
+        x = frontend.astype(self.dtype) @ params["frontend_proj"]
+        positions = jnp.arange(x.shape[1])
+        x, _, _ = tfm.apply_stack(
+            self.cfg, params["encoder"]["segments"], self.enc_specs, self.opts,
+            x, positions,
+        )
+        return rmsnorm(params["encoder"]["final_norm"], x, self.cfg.norm_eps)
+
+    def _embed_inputs(self, params, tokens, frontend):
+        """Token embeddings, with VLM patch embeddings prepended."""
+        cfg = self.cfg
+        x = embed_lookup(
+            params["embed"], tokens, self.opts.vocab_axis
+        ) * math.sqrt(cfg.d_model)
+        x = x.astype(self.dtype)
+        n_front = 0
+        if cfg.frontend and not self.enc_specs:  # decoder-only multimodal
+            fx = frontend.astype(self.dtype) @ params["frontend_proj"]
+            x = jnp.concatenate([fx, x], axis=1)
+            n_front = frontend.shape[1]
+        return x, n_front
+
+    def _forward(self, params, tokens, frontend, collect_cache=False):
+        memory = None
+        if self.enc_specs:
+            memory = self._encode(params, frontend)
+        x, n_front = self._embed_inputs(params, tokens, frontend)
+        positions = jnp.arange(x.shape[1])
+        x, aux, caches = tfm.apply_stack(
+            self.cfg, params["segments"], self.specs, self.opts,
+            x, positions, memory=memory, collect_cache=collect_cache,
+        )
+        x = rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        return x, aux, caches, n_front
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        hidden, aux, _, n_front = self._forward(
+            params, batch["tokens"], batch.get("frontend")
+        )
+        if n_front:
+            hidden = hidden[:, n_front:]
+        w, tied = self._unembed_w(params)
+        ce = chunked_lm_loss_sharded(
+            hidden, w, batch["labels"],
+            vocab=self.cfg.vocab_size, tied=tied,
+            model_axis=self.opts.vocab_axis, chunk=self.opts.loss_chunk,
+        )
+        total = ce + MOE_AUX_WEIGHT * aux
+        return total, {"ce": ce, "moe_aux": aux}
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch):
+        hidden, _, caches, _ = self._forward(
+            params, batch["tokens"], batch.get("frontend"), collect_cache=True
+        )
+        w, tied = self._unembed_w(params)
+        logits = decode_logits(
+            hidden[:, -1:], w, vocab=self.cfg.vocab_size, tied=tied,
+            model_axis=self.opts.vocab_axis,
+        )
+        return logits, caches
+
+    # ------------------------------------------------------------------
+    def init_decode(self, batch: int, capacity: int):
+        mem_len = self.cfg.frontend_tokens if self.enc_specs else 0
+        return tfm.init_stack_cache(
+            self.cfg, self.specs, batch, capacity, mem_len, self.dtype
+        )
+
+    def decode_step(self, params, tokens, caches, pos):
+        """tokens (B,1) -> (logits (B,1,V), new caches)."""
+        x = embed_lookup(
+            params["embed"], tokens, self.opts.vocab_axis
+        ) * math.sqrt(self.cfg.d_model)
+        x = x.astype(self.dtype)
+        x, new_caches = tfm.decode_stack(
+            self.cfg, params["segments"], self.specs, self.opts, x, caches, pos
+        )
+        x = rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        w, tied = self._unembed_w(params)
+        logits = decode_logits(
+            x, w, vocab=self.cfg.vocab_size, tied=tied,
+            model_axis=self.opts.vocab_axis,
+        )
+        return logits, new_caches
+
+
+def build_model(cfg: ArchConfig, opts: Optional[ModelOptions] = None) -> LM:
+    return LM(cfg, opts)

@@ -1,0 +1,146 @@
+"""ResNet-18/152 in pure JAX — the paper's own FL workload (FEMNIST).
+
+GroupNorm replaces BatchNorm: FedAvg over running batch statistics is
+ill-defined across non-IID clients, and stateless normalization is
+standard practice in FL reproductions (noted in DESIGN.md §8).  The
+model-update sizes (the quantity LIFL's data plane cares about) match
+the paper's ~44 MB / ~232 MB fp32 updates.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet import ResNetConfig
+
+
+def _conv_init(key, k, cin, cout):
+    fan_in = k * k * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (k, k, cin, cout), jnp.float32) * std
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _init_gn(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _gn(p, x, groups=8):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    x = xg.reshape(B, H, W, C)
+    return x * p["scale"] + p["bias"]
+
+
+def _init_basic(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(ks[0], 3, cin, cout), "gn1": _init_gn(cout),
+        "conv2": _conv_init(ks[1], 3, cout, cout), "gn2": _init_gn(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[2], 1, cin, cout)
+        p["gn_proj"] = _init_gn(cout)
+    return p
+
+
+def _basic(p, x, stride):
+    h = jax.nn.relu(_gn(p["gn1"], _conv(x, p["conv1"], stride)))
+    h = _gn(p["gn2"], _conv(h, p["conv2"]))
+    sc = x
+    if "proj" in p:
+        sc = _gn(p["gn_proj"], _conv(x, p["proj"], stride))
+    return jax.nn.relu(h + sc)
+
+
+def _init_bottleneck(key, cin, cmid, stride):
+    cout = cmid * 4
+    ks = jax.random.split(key, 4)
+    p = {
+        "conv1": _conv_init(ks[0], 1, cin, cmid), "gn1": _init_gn(cmid),
+        "conv2": _conv_init(ks[1], 3, cmid, cmid), "gn2": _init_gn(cmid),
+        "conv3": _conv_init(ks[2], 1, cmid, cout), "gn3": _init_gn(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[3], 1, cin, cout)
+        p["gn_proj"] = _init_gn(cout)
+    return p
+
+
+def _bottleneck(p, x, stride):
+    h = jax.nn.relu(_gn(p["gn1"], _conv(x, p["conv1"])))
+    h = jax.nn.relu(_gn(p["gn2"], _conv(h, p["conv2"], stride)))
+    h = _gn(p["gn3"], _conv(h, p["conv3"]))
+    sc = x
+    if "proj" in p:
+        sc = _gn(p["gn_proj"], _conv(x, p["proj"], stride))
+    return jax.nn.relu(h + sc)
+
+
+class ResNet:
+    def __init__(self, cfg: ResNetConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        params = {
+            "stem": _conv_init(ks[0], 3, cfg.in_channels, cfg.width),
+            "gn_stem": _init_gn(cfg.width),
+            "stages": [],
+        }
+        cin = cfg.width
+        expansion = 4 if cfg.block == "bottleneck" else 1
+        for si, nblocks in enumerate(cfg.stage_blocks):
+            cmid = cfg.width * (2 ** si)
+            stage = []
+            for bi in range(nblocks):
+                k = jax.random.fold_in(ks[1], si * 100 + bi)
+                stride = 2 if (bi == 0 and si > 0) else 1
+                if cfg.block == "basic":
+                    stage.append(_init_basic(k, cin, cmid, stride))
+                    cin = cmid
+                else:
+                    stage.append(_init_bottleneck(k, cin, cmid, stride))
+                    cin = cmid * expansion
+            params["stages"].append(stage)
+        params["head"] = jax.random.normal(ks[2], (cin, cfg.num_classes)) * (cin ** -0.5)
+        params["head_b"] = jnp.zeros((cfg.num_classes,))
+        return params
+
+    def apply(self, params, images):
+        """images: (B, H, W, C) -> logits (B, num_classes)."""
+        cfg = self.cfg
+        x = jax.nn.relu(_gn(params["gn_stem"], _conv(images, params["stem"])))
+        for si, stage in enumerate(params["stages"]):
+            for bi, bp in enumerate(stage):
+                stride = 2 if (bi == 0 and si > 0) else 1
+                x = (_basic if cfg.block == "basic" else _bottleneck)(bp, x, stride)
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ params["head"] + params["head_b"]
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch["images"])
+        labels = batch["labels"]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        tok = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        loss = jnp.mean(logz - tok)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return loss, {"accuracy": acc}
+
+
+def build_resnet(cfg: ResNetConfig) -> ResNet:
+    return ResNet(cfg)

@@ -1,0 +1,420 @@
+"""Generic decoder stack covering every assigned family.
+
+Layers are grouped into *segments*: maximal runs of layers with an
+identical static :class:`LayerSpec` (attention window, MoE flag, block
+kind).  Each segment is a single ``lax.scan`` over its stacked params —
+compile time stays O(#distinct specs), not O(num_layers), which keeps
+the 512-device dry-run tractable (61-layer kimi-k2 lowers two scan
+bodies).  Static specs also mean sliding-window layers get *static*
+window sizes (bounded decode caches, statically-pruned KV loops).
+
+Param pytree:
+  {"embed": (V,D), "frontend_proj": (D,D)?, "segments": [stacked pytree],
+   "final_norm": {...}, "lm_head": (D,V)? }
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GLOBAL, ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    chunked_lm_loss,
+    dense_init,
+    embed,
+    ffn,
+    init_embedding,
+    init_ffn,
+    init_rmsnorm,
+    rmsnorm,
+)
+
+
+class LayerSpec(NamedTuple):
+    kind: str      # 'attn' | 'ssm' | 'hybrid'
+    window: int    # GLOBAL or static window size (attn/hybrid only)
+    moe: bool
+    cross: bool    # decoder layer with cross-attention (enc-dec)
+    causal: bool   # False for encoder self-attention
+
+
+@dataclass(frozen=True)
+class ModelOptions:
+    """Execution options — orthogonal to the architecture config."""
+
+    attn_impl: str = "chunked"          # naive | chunked | pallas
+    moe_impl: str = "dense"             # dense | ep
+    mesh: Any = None                     # required for moe_impl='ep'
+    dp_axes: Tuple[str, ...] = ()        # mesh axes tokens are sharded over
+    model_axis: str = "model"
+    vocab_axis: Any = None  # mesh axis for vocab sharding ('model') or None
+    ssm_impl: str = "chunked"  # chunked | sharded (shard_map, §Perf F1)
+    ssm_chunk: int = 256
+    loss_chunk: int = 256
+    block_kv: int = 512
+    remat: bool = True
+    decode_capacity_factor: float = 4.0
+    # ring-cache capacity built by prefill; None -> prefill length (the
+    # dry-run decode cells use exactly seq_len); tests use > prefill
+    # length so no slot is evicted and decode matches the full forward.
+    prefill_cache_capacity: int = 0  # 0 -> prefill length
+
+
+def layer_specs(cfg: ArchConfig, *, decoder: bool = True) -> List[LayerSpec]:
+    windows = cfg.layer_windows()
+    moe_flags = cfg.moe_layer_flags()
+    cross = decoder and cfg.encoder_layers > 0
+    out = []
+    for i in range(cfg.num_layers):
+        if cfg.attention_free:
+            out.append(LayerSpec("ssm", GLOBAL, False, False, True))
+        elif cfg.hybrid_parallel_ssm:
+            out.append(LayerSpec("hybrid", windows[i], moe_flags[i], cross, True))
+        else:
+            out.append(LayerSpec("attn", windows[i], moe_flags[i], cross, True))
+    return out
+
+
+def encoder_specs(cfg: ArchConfig) -> List[LayerSpec]:
+    return [
+        LayerSpec("attn", GLOBAL, False, False, False)
+        for _ in range(cfg.encoder_layers)
+    ]
+
+
+def segment_specs(specs: List[LayerSpec]) -> List[Tuple[int, LayerSpec]]:
+    """Run-length encode consecutive identical specs."""
+    segs: List[Tuple[int, LayerSpec]] = []
+    for s in specs:
+        if segs and segs[-1][1] == s:
+            segs[-1] = (segs[-1][0] + 1, s)
+        else:
+            segs.append((1, s))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig, spec: LayerSpec, dtype) -> dict:
+    ks = iter(jax.random.split(key, 8))
+    p: dict = {}
+    d = cfg.d_model
+    if spec.kind == "ssm" and not cfg.hybrid_parallel_ssm:
+        p["ln1"] = init_rmsnorm(d, dtype)
+        p["ssm"] = ssm_mod.init_ssm(next(ks), cfg, d, dtype)
+        return p
+    p["ln1"] = init_rmsnorm(d, dtype)
+    if cfg.mla is not None:
+        p["attn"] = mla_mod.init_mla(next(ks), cfg, dtype)
+    else:
+        p["attn"] = attn_mod.init_attention(next(ks), cfg, dtype)
+    if spec.kind == "hybrid":
+        p["ssm"] = ssm_mod.init_ssm(next(ks), cfg, d, dtype)
+        p["branch_norm_attn"] = init_rmsnorm(d, dtype)
+        p["branch_norm_ssm"] = init_rmsnorm(d, dtype)
+    if spec.cross:
+        p["ln_cross"] = init_rmsnorm(d, dtype)
+        p["cross"] = attn_mod.init_attention(next(ks), cfg, dtype, cross=True)
+    p["ln2"] = init_rmsnorm(d, dtype)
+    if spec.moe:
+        p["moe"] = moe_mod.init_moe(next(ks), cfg, dtype)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and not spec.moe:
+            d_ff = cfg.moe.dense_d_ff
+        p["ffn"] = init_ffn(next(ks), d, d_ff, dtype)
+    return p
+
+
+def init_stack(key, cfg: ArchConfig, specs: List[LayerSpec], dtype):
+    """-> list of stacked per-segment param pytrees."""
+    segs = segment_specs(specs)
+    seg_params = []
+    for count, spec in segs:
+        keys = jax.random.split(jax.random.fold_in(key, len(seg_params)), count)
+        seg_params.append(
+            jax.vmap(lambda k: _init_block(k, cfg, spec, dtype))(keys)
+        )
+    return seg_params
+
+
+# ---------------------------------------------------------------------------
+# Block apply (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    opts: ModelOptions,
+    params: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    memory: Optional[jnp.ndarray],
+    collect_cache: bool,
+):
+    """-> (x, aux, cache_ys_or_None)."""
+    aux = jnp.float32(0.0)
+    cache_out = None
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+
+    if spec.kind == "ssm" and not cfg.hybrid_parallel_ssm:
+        y = ssm_mod.ssm_block(
+            cfg, params["ssm"], h, chunk=opts.ssm_chunk,
+            dp_axes=opts.dp_axes, model_axis=opts.model_axis,
+            sharded=opts.ssm_impl == "sharded",
+        )
+        x = x + y
+        if collect_cache:
+            cache_out = _ssm_cache_from_prefill(cfg, params["ssm"], h)
+        return x, aux, cache_out
+
+    if cfg.mla is not None:
+        a = mla_mod.mla_attention(
+            cfg, params["attn"], h, positions, causal=spec.causal,
+            impl=opts.attn_impl, block_kv=opts.block_kv,
+            dp_axes=opts.dp_axes, model_axis=opts.model_axis,
+        )
+    else:
+        a = attn_mod.attention(
+            cfg, params["attn"], h, positions,
+            window=spec.window, causal=spec.causal,
+            impl=opts.attn_impl, block_kv=opts.block_kv,
+            dp_axes=opts.dp_axes, model_axis=opts.model_axis,
+        )
+    if spec.kind == "hybrid":
+        s = ssm_mod.ssm_block(
+            cfg, params["ssm"], h, chunk=opts.ssm_chunk,
+            dp_axes=opts.dp_axes, model_axis=opts.model_axis,
+            sharded=opts.ssm_impl == "sharded",
+        )
+        a = 0.5 * (
+            rmsnorm(params["branch_norm_attn"], a, cfg.norm_eps)
+            + rmsnorm(params["branch_norm_ssm"], s, cfg.norm_eps)
+        )
+    x = x + a
+
+    if spec.cross:
+        hc = rmsnorm(params["ln_cross"], x, cfg.norm_eps)
+        x = x + attn_mod.attention(
+            cfg, params["cross"], hc, positions,
+            memory=memory, impl="naive" if memory.shape[1] <= 1024 else opts.attn_impl,
+        )
+
+    h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if spec.moe:
+        y, aux = moe_mod.moe_block(
+            cfg, params["moe"], h2,
+            impl=opts.moe_impl, mesh=opts.mesh,
+            dp_axes=opts.dp_axes, model_axis=opts.model_axis,
+        )
+    else:
+        y = ffn(params["ffn"], h2)
+    x = x + y
+
+    if collect_cache:
+        cap = opts.prefill_cache_capacity or h.shape[1]
+        cache_out = _attn_cache_from_prefill(cfg, spec, params, h, positions, memory, cap)
+        if spec.kind == "hybrid":
+            cache_out["ssm"] = _ssm_cache_from_prefill(cfg, params["ssm"], h)
+    return x, aux, cache_out
+
+
+def _ring_place(t: jnp.ndarray, cap: int):
+    """Scatter (B, S, ...) sequence into a ring cache of ``cap`` slots.
+
+    Position p lands in slot p % cap; when S > cap only the trailing
+    ``cap`` positions survive (ring eviction, matching decode)."""
+    B, S = t.shape[:2]
+    keep = min(S, cap)
+    pos_tail = jnp.arange(S - keep, S)
+    out = jnp.zeros((B, cap) + t.shape[2:], t.dtype)
+    return out.at[:, pos_tail % cap].set(t[:, S - keep :])
+
+
+def _attn_cache_from_prefill(cfg, spec, params, h, positions, memory, cap):
+    """Recompute (cheap projections) the roped K/V for the decode cache."""
+    out = {}
+    if cfg.mla is not None:
+        c, k_rope = mla_mod._latent(cfg, params["attn"], h, positions)
+        out["c"] = _ring_place(c, cap)
+        out["k_rope"] = _ring_place(k_rope, cap)
+    else:
+        _, k, v = attn_mod._project_qkv(
+            cfg, params["attn"], h, h, positions, positions, rope=True
+        )
+        cap_w = cap if spec.window == GLOBAL else min(spec.window, cap)
+        out["k"] = _ring_place(k, cap_w)
+        out["v"] = _ring_place(v, cap_w)
+    if spec.cross:
+        out["cross"] = attn_mod.init_cross_cache(cfg, params["cross"], memory)
+    return out
+
+
+def _ssm_cache_from_prefill(cfg, ssm_params, h):
+    d_in = ssm_params["dt_proj"].shape[1]
+    B, S, _ = h.shape
+    xz = h @ ssm_params["in_proj"]
+    raw = xz[..., :d_in]
+    u = jax.nn.silu(ssm_mod._causal_conv(raw, ssm_params["conv_w"]))
+    h0 = jnp.zeros((B, d_in, cfg.ssm.d_state), jnp.float32)
+    _, h_final = ssm_mod.ssm_scan_chunked(cfg, ssm_params, u, h0, chunk=min(256, S))
+    conv = raw[:, -(cfg.ssm.d_conv - 1) :, :]
+    return {"h": h_final, "conv": conv}
+
+
+# ---------------------------------------------------------------------------
+# Block decode
+# ---------------------------------------------------------------------------
+
+
+def _decode_block(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    opts: ModelOptions,
+    params: dict,
+    x: jnp.ndarray,   # (B, 1, D)
+    cache: dict,
+    pos: jnp.ndarray,
+):
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+
+    if spec.kind == "ssm" and not cfg.hybrid_parallel_ssm:
+        y, new_ssm = ssm_mod.ssm_decode(cfg, params["ssm"], h, cache)
+        return x + y, new_ssm
+
+    if cfg.mla is not None:
+        a, upd = mla_mod.mla_decode(
+            cfg, params["attn"], h, {"c": cache["c"], "k_rope": cache["k_rope"]}, pos
+        )
+        new_cache.update(upd)
+    else:
+        a, upd = attn_mod.attention_decode(
+            cfg, params["attn"], h, {"k": cache["k"], "v": cache["v"]}, pos,
+            window=spec.window,
+        )
+        new_cache.update(upd)
+    if spec.kind == "hybrid":
+        s, new_ssm = ssm_mod.ssm_decode(cfg, params["ssm"], h, cache["ssm"])
+        new_cache["ssm"] = new_ssm
+        a = 0.5 * (
+            rmsnorm(params["branch_norm_attn"], a, cfg.norm_eps)
+            + rmsnorm(params["branch_norm_ssm"], s, cfg.norm_eps)
+        )
+    x = x + a
+
+    if spec.cross:
+        hc = rmsnorm(params["ln_cross"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_attention_decode(cfg, params["cross"], hc, cache["cross"])
+
+    h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if spec.moe:
+        y, _ = moe_mod.moe_block(
+            cfg, params["moe"], h2,
+            impl=opts.moe_impl, mesh=opts.mesh,
+            dp_axes=opts.dp_axes, model_axis=opts.model_axis,
+        )
+    else:
+        y = ffn(params["ffn"], h2)
+    return x + y, new_cache
+
+
+def init_block_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, capacity: int,
+                     memory_len: int, dtype):
+    if spec.kind == "ssm" and not cfg.hybrid_parallel_ssm:
+        return ssm_mod.init_ssm_cache(cfg, cfg.d_model, batch, dtype)
+    if cfg.mla is not None:
+        c = mla_mod.init_mla_cache(cfg, batch, capacity, dtype)
+    else:
+        c = attn_mod.init_kv_cache(cfg, batch, capacity, spec.window, dtype)
+    if spec.kind == "hybrid":
+        c["ssm"] = ssm_mod.init_ssm_cache(cfg, cfg.d_model, batch, dtype)
+    if spec.cross:
+        c["cross"] = {
+            "k": jnp.zeros((batch, memory_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, memory_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Stack apply
+# ---------------------------------------------------------------------------
+
+
+def apply_stack(
+    cfg: ArchConfig,
+    seg_params: List[Any],
+    specs: List[LayerSpec],
+    opts: ModelOptions,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    memory: Optional[jnp.ndarray] = None,
+    collect_cache: bool = False,
+):
+    """-> (x, aux, caches_per_segment | None)."""
+    segs = segment_specs(specs)
+    aux_total = jnp.float32(0.0)
+    caches = [] if collect_cache else None
+
+    for sp, (count, spec) in zip(seg_params, segs):
+
+        def body(carry, layer_params, spec=spec):
+            xx, aux = carry
+            xx, a, cache = _apply_block(
+                cfg, spec, opts, layer_params, xx, positions, memory, collect_cache
+            )
+            return (xx, aux + a), cache
+
+        if opts.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), seg_cache = jax.lax.scan(body, (x, aux_total), sp)
+        if collect_cache:
+            caches.append(seg_cache)
+    return x, aux_total, caches
+
+
+def decode_stack(
+    cfg: ArchConfig,
+    seg_params: List[Any],
+    specs: List[LayerSpec],
+    opts: ModelOptions,
+    x: jnp.ndarray,          # (B, 1, D)
+    caches: List[Any],
+    pos: jnp.ndarray,
+):
+    segs = segment_specs(specs)
+    new_caches = []
+    for sp, cache, (count, spec) in zip(seg_params, caches, segs):
+
+        def body(xx, xs, spec=spec):
+            layer_params, layer_cache = xs
+            xx, new_cache = _decode_block(cfg, spec, opts, layer_params, xx, layer_cache, pos)
+            return xx, new_cache
+
+        x, seg_new = jax.lax.scan(body, x, (sp, cache))
+        new_caches.append(seg_new)
+    return x, new_caches
+
+
+def init_stack_cache(cfg, specs, batch, capacity, memory_len, dtype):
+    segs = segment_specs(specs)
+    caches = []
+    for count, spec in segs:
+        one = init_block_cache(cfg, spec, batch, capacity, memory_len, dtype)
+        caches.append(
+            jax.tree.map(lambda a: jnp.broadcast_to(a, (count,) + a.shape), one)
+        )
+    return caches

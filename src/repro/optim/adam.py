@@ -1,0 +1,53 @@
+"""Adam / AdamW (pure JAX) for the LM training examples."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params: Any) -> Dict:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"step": jnp.zeros((), jnp.int32), "m": zeros(), "v": zeros()}
+
+
+def adam_apply(
+    params: Any,
+    grads: Any,
+    state: Dict,
+    *,
+    lr: float,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, Dict]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    m = jax.tree.map(
+        lambda mm, g: beta1 * mm + (1 - beta1) * g.astype(jnp.float32),
+        state["m"], grads,
+    )
+    v = jax.tree.map(
+        lambda vv, g: beta2 * vv + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads,
+    )
+    bc1 = 1 - beta1 ** t
+    bc2 = 1 - beta2 ** t
+
+    def upd(p, mm, vv):
+        u = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new = jax.tree.map(upd, params, m, v)
+    return new, {"step": step, "m": m, "v": v}
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)

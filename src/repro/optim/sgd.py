@@ -1,0 +1,35 @@
+"""Client-side optimizers (pure JAX).  The paper's clients run plain SGD
+(lr 0.01, batch 32, one local epoch — §6.2)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params: Any) -> Dict:
+    return {}
+
+
+def sgd_apply(params: Any, grads: Any, state: Dict, *, lr: float) -> Tuple[Any, Dict]:
+    new = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads,
+    )
+    return new, state
+
+
+def momentum_init(params: Any) -> Dict:
+    return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def momentum_apply(params: Any, grads: Any, state: Dict, *, lr: float,
+                   beta: float = 0.9) -> Tuple[Any, Dict]:
+    m = jax.tree.map(
+        lambda mm, g: beta * mm + g.astype(jnp.float32), state["m"], grads
+    )
+    new = jax.tree.map(
+        lambda p, mm: (p.astype(jnp.float32) - lr * mm).astype(p.dtype), params, m
+    )
+    return new, {"m": m}

@@ -1,0 +1,15 @@
+from repro.runtime.elastic import ArrivalTrace, ElasticController, ElasticEvent
+from repro.runtime.trainer import (
+    ClientRuntime,
+    FederatedTrainer,
+    FusedFLTrainer,
+)
+
+__all__ = [
+    "ArrivalTrace",
+    "ElasticController",
+    "ElasticEvent",
+    "ClientRuntime",
+    "FederatedTrainer",
+    "FusedFLTrainer",
+]

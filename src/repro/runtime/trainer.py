@@ -1,0 +1,334 @@
+"""Training runtimes.
+
+``FederatedTrainer`` — the paper-faithful engine: real per-client local
+SGD (diverged mode), LIFL hierarchical aggregation through the actual
+control-plane objects (selector → BestFit placement → EWMA hierarchy →
+warm pool → gateways/sockmap routing → eager aggregation), failure
+handling via over-provisioning + aggregation goal, async checkpoints.
+
+``FusedFLTrainer`` — the large-model engine: one jitted fused round step
+(fl/round.py) per round on a mesh; cohort data from the federated
+pipeline; checkpoint/restart; straggler masking; elastic round sizing
+through the warm-executable cache (re-plan ⇒ cache lookup, not a
+recompile, when the signature matches — LIFL C8).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.core import (
+    Aggregator,
+    AggregatorPool,
+    ClientInfo,
+    Coordinator,
+    EventSidecar,
+    Gateway,
+    InProcObjectStore,
+    MetricsMap,
+    NodeState,
+    RoundConfig,
+    Selector,
+    SockMap,
+    fedavg_oracle,
+)
+from repro.core.reuse import ExecutableCache
+from repro.fl.round import AggregationConfig, build_train_step
+from repro.fl.server import apply_server_opt, init_server_state
+from repro.optim import sgd_apply
+
+
+# ===========================================================================
+# paper-faithful engine (diverged clients, host aggregation tree)
+# ===========================================================================
+
+
+@dataclass
+class ClientRuntime:
+    """A training client: local SGD for ``epochs`` over its shard."""
+
+    info: ClientInfo
+    dataset: Any                      # ClientDataset
+    hibernate_s: Tuple[float, float] = (0.0, 0.0)  # mobile availability (§6.2)
+    failure_prob: float = 0.0
+
+    def local_update(self, model, params, *, lr: float, batch_size: int,
+                     epochs: int, rng: np.random.Generator
+                     ) -> Optional[Tuple[Any, float]]:
+        """-> (delta pytree, num_samples) or None if the client fails."""
+        if rng.random() < self.failure_prob:
+            return None  # detected by missing heartbeat; goal absorbs it
+        p = params
+        n = 0
+        for batch in self.dataset.batches(batch_size, epochs=epochs,
+                                          seed=int(rng.integers(1 << 30))):
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            (_, _), grads = jax.value_and_grad(model.loss, has_aux=True)(p, jb)
+            p, _ = sgd_apply(p, grads, {}, lr=lr)
+            n += len(batch["labels"])
+        if n == 0:
+            return None
+        delta = jax.tree.map(
+            lambda new, old: np.asarray(new, np.float32) - np.asarray(old, np.float32),
+            p, params,
+        )
+        return delta, float(self.dataset.num_samples)
+
+
+class FederatedTrainer:
+    """LIFL rounds over real clients with the host aggregation tree."""
+
+    def __init__(
+        self,
+        model,                       # .loss(params, batch) -> (loss, aux)
+        params: Any,
+        clients: Sequence[ClientRuntime],
+        *,
+        nodes: Optional[Dict[str, NodeState]] = None,
+        round_cfg: Optional[RoundConfig] = None,
+        server_opt: str = "fedavg",
+        server_lr: float = 1.0,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 5,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.clients = {c.info.client_id: c for c in clients}
+        self.nodes = nodes or {
+            f"node{i}": NodeState(node=f"node{i}", max_capacity=20.0)
+            for i in range(5)
+        }
+        self.round_cfg = round_cfg or RoundConfig(aggregation_goal=8)
+        self.server_opt = server_opt
+        self.server_lr = server_lr
+        self.server_state = init_server_state(server_opt, params)
+        self.coordinator = Coordinator(
+            Selector([c.info for c in clients], seed=seed), self.nodes
+        )
+        self.metrics = MetricsMap()
+        self.rng = np.random.default_rng(seed)
+        self.ckpt = AsyncCheckpointer(checkpoint_dir) if checkpoint_dir else None
+        self.checkpoint_every = checkpoint_every
+        self.log: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def run_round(self, *, lr: float = 0.01, batch_size: int = 32,
+                  epochs: int = 1) -> Dict[str, float]:
+        t0 = time.perf_counter()
+        plan = self.coordinator.plan_round(self.round_cfg)
+        goal = self.round_cfg.aggregation_goal
+
+        # --- build the aggregation tree from the plan -------------------
+        stores = {n: InProcObjectStore(n) for n in plan.hierarchy.nodes_used}
+        top_node = plan.top_node or next(iter(stores))
+        stores.setdefault(top_node, InProcObjectStore(top_node))
+        top_state: Dict[str, Any] = {}
+
+        def on_top(result, weight):
+            top_state["delta"] = result
+            top_state["weight"] = weight
+
+        top = Aggregator(
+            f"top@{top_node}", stores[top_node],
+            goal=len(plan.hierarchy.nodes_used),
+            eager=self.round_cfg.eager,
+            sidecar=EventSidecar("top", self.metrics),
+            on_complete=on_top,
+        )
+
+        # per-node middle aggregators feeding the top
+        mids: Dict[str, Aggregator] = {}
+        per_node_goal: Dict[str, int] = {}
+        assignment = plan.placement.assignment
+        for node, idxs in assignment.items():
+            per_node_goal[node] = len(idxs)
+
+            def make_mid(node=node):
+                def done(result, weight):
+                    env = Gateway(node, stores[node]).put_local(
+                        result, plan.round_id, f"mid@{node}", weight
+                    )
+                    # intermediate update to the top (one per node, §5.2)
+                    tkey = stores[top_node].put(np.asarray(result))
+                    env.object_key = tkey
+                    top.recv(env)
+
+                return Aggregator(
+                    f"mid@{node}", stores[node], per_node_goal[node],
+                    eager=self.round_cfg.eager,
+                    sidecar=EventSidecar(f"mid@{node}", self.metrics),
+                    on_complete=done,
+                )
+
+            mids[node] = make_mid()
+
+        # --- clients train; updates land at their node's middle ---------
+        selected = plan.selected
+        client_nodes: Dict[str, str] = {}
+        for node, idxs in assignment.items():
+            for i in idxs:
+                if i < len(selected):
+                    client_nodes[selected[i].client_id] = node
+
+        losses = []
+        accepted = 0
+        for cid, node in client_nodes.items():
+            if accepted >= goal:
+                break  # aggregation goal reached; stragglers ignored
+            cr = self.clients[cid]
+            out = cr.local_update(
+                self.model, self.params, lr=lr, batch_size=batch_size,
+                epochs=epochs, rng=self.rng,
+            )
+            if out is None:
+                continue  # failed/hibernating client — over-provisioning absorbs
+            delta, weight = out
+            flat, _, _ = _flatten_tree(delta)
+            key = stores[node].put(flat)
+            from repro.core.gateway import UpdateEnvelope
+
+            env = UpdateEnvelope(key, plan.round_id, cid, weight,
+                                 enqueue_ts=time.perf_counter())
+            mids[node].recv(env)
+            accepted += 1
+
+        # close out mids that got fewer than planned (stragglers)
+        for node, mid in mids.items():
+            if not mid.done and mid.state.count > 0:
+                mid.goal = mid.state.count
+                mid.flush()
+                mid._send()
+        if not top.done and top.state.count > 0:
+            top.goal = top.state.count
+            top.flush()
+            top._send()
+
+        # --- server applies the aggregated update -----------------------
+        if "delta" in top_state:
+            delta_tree = _unflatten_like(top_state["delta"], self.params)
+            self.params, self.server_state = apply_server_opt(
+                self.server_opt, self.params, self.server_state, delta_tree,
+                lr=-self.server_lr,  # delta = new - old, so apply +lr·delta
+            )
+        version = self.coordinator.finish_round()
+        if self.ckpt and version % self.checkpoint_every == 0:
+            self.ckpt.submit(version, self.params)
+
+        rec = {
+            "round": plan.round_id,
+            "updates": float(accepted),
+            "nodes_used": float(len(assignment)),
+            "inter_node": float(plan.inter_node_updates),
+            "cold_starts": float(plan.cold_starts),
+            "reused": float(plan.reused),
+            "wall_s": time.perf_counter() - t0,
+        }
+        self.log.append(rec)
+        return rec
+
+    # ------------------------------------------------------------------
+    def evaluate(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, aux = self.model.loss(self.params, jb)
+        out = {"loss": float(loss)}
+        out.update({k: float(v) for k, v in aux.items()})
+        return out
+
+
+def _flatten_tree(tree: Any) -> Tuple[np.ndarray, Any, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    meta = [(np.shape(l), np.asarray(l).dtype) for l in leaves]
+    flat = np.concatenate([np.asarray(l, np.float32).reshape(-1) for l in leaves])
+    return flat, treedef, meta
+
+
+def _unflatten_like(flat: np.ndarray, like: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(like)
+    out = []
+    off = 0
+    for l in leaves:
+        n = int(np.prod(np.shape(l))) if np.shape(l) else 1
+        out.append(
+            jnp.asarray(flat[off : off + n].reshape(np.shape(l)), jnp.float32)
+            .astype(l.dtype)
+        )
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+# ===========================================================================
+# fused engine (large models, one XLA program per round)
+# ===========================================================================
+
+
+class FusedFLTrainer:
+    def __init__(
+        self,
+        cfg,                          # ArchConfig
+        mesh,
+        agg: AggregationConfig,
+        *,
+        opts=None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 20,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.agg = agg
+        step, model = build_train_step(cfg, mesh, agg, opts=opts)
+        self.model = model
+        self._cache = ExecutableCache(lambda **sig: jax.jit(
+            step, donate_argnums=(0, 1)
+        ))
+        self.step_fn = self._cache.get(
+            batch=agg.num_microbatches, opt=agg.server_opt
+        )
+        self.params = None
+        self.server_state = None
+        self.ckpt = AsyncCheckpointer(checkpoint_dir) if checkpoint_dir else None
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.round_id = 0
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def init(self, seed: int = 0) -> None:
+        with jax.set_mesh(self.mesh):
+            self.params = self.model.init(jax.random.PRNGKey(seed))
+            self.server_state = init_server_state(self.agg.server_opt, self.params)
+
+    def maybe_restore(self) -> bool:
+        """Checkpoint/restart: resume from the latest checkpoint if any."""
+        if not self.checkpoint_dir or latest_step(self.checkpoint_dir) is None:
+            return False
+        like = self.params if self.params is not None else jax.eval_shape(
+            self.model.init, jax.random.PRNGKey(0)
+        )
+        self.params, step = restore_checkpoint(self.checkpoint_dir, like)
+        self.server_state = init_server_state(self.agg.server_opt, self.params)
+        self.round_id = step
+        return True
+
+    # ------------------------------------------------------------------
+    def train_round(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
+        assert self.params is not None, "call init() or maybe_restore() first"
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        with jax.set_mesh(self.mesh):
+            self.params, self.server_state, metrics = self.step_fn(
+                self.params, self.server_state, jb
+            )
+        self.round_id += 1
+        rec = {k: float(v) for k, v in metrics.items()}
+        rec["round"] = self.round_id
+        self.history.append(rec)
+        if self.ckpt and self.round_id % self.checkpoint_every == 0:
+            self.ckpt.submit(self.round_id, self.params)
+        return rec

@@ -1,0 +1,15 @@
+from repro.sharding.rules import (
+    batch_specs,
+    cache_specs,
+    divisibility_fix,
+    param_specs,
+    to_named,
+)
+
+__all__ = [
+    "batch_specs",
+    "cache_specs",
+    "divisibility_fix",
+    "param_specs",
+    "to_named",
+]

@@ -1,0 +1,189 @@
+"""Logical sharding rules: param/batch/cache pytrees -> PartitionSpecs.
+
+Policy (DESIGN.md §5):
+  * TP over ``model``: attention heads, FFN hidden, vocab, d_inner (SSM),
+    MoE expert axis (EP).
+  * FSDP over ``fsdp_axes`` (default ``('data',)``; the flat multi-pod
+    policy may add ``'pod'``): the d_model axis of every large matrix.
+  * Extra leading axes (layer-stack inside scanned segments) are
+    unsharded.
+  * Small vectors (norm scales, biases) are replicated.
+
+Rules are name-keyed on the *last* path components, mirroring the
+models/* param trees exactly; unseen names fall back to replication
+with a loud error in strict mode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Fsdp = Tuple[str, ...]
+
+
+def _base_spec(path: Tuple[str, ...], ndim_base_hint: int, fsdp, model: str):
+    """Return (base_rank, spec tuple) for a param identified by path."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+
+    F = fsdp if fsdp else None
+    # --- embeddings / heads -------------------------------------------------
+    if name == "embed":
+        return 2, (model, None)  # vocab-sharded; lookup is mask+psum
+    if name == "lm_head":
+        return 2, (None, model)
+    if name == "frontend_proj":
+        return 2, (F, model)
+    # --- attention -----------------------------------------------------------
+    if name in ("wq", "wk", "wv", "wq_a", "wq_b", "wkv_a"):
+        return 2, (F, model)
+    if name == "wkv_b":  # (R, h*(dn+dv)) — latent small, heads sharded
+        return 2, (None, model)
+    if name == "wo":
+        return 2, (model, F)
+    if name in ("q_norm", "k_norm"):
+        return 1, (None,)
+    # --- MoE -----------------------------------------------------------------
+    if parent == "experts" and name in ("gate", "up"):
+        return 3, (model, F, None)
+    if parent == "experts" and name == "down":
+        return 3, (model, None, F)
+    if name == "router":
+        return 2, (F, None)
+    # --- dense FFN (incl. shared experts) -----------------------------------
+    if name in ("gate", "up"):
+        return 2, (F, model)
+    if name == "down":
+        return 2, (model, F)
+    # --- SSM -----------------------------------------------------------------
+    if name == "in_proj":
+        return 2, (F, model)
+    if name == "conv_w":
+        return 2, (None, model)
+    if name == "x_proj":
+        return 2, (model, None)
+    if name == "dt_proj":
+        return 2, (None, model)
+    if name in ("dt_bias", "D"):
+        return 1, (model,)
+    if name == "A_log":
+        return 2, (model, None)
+    if name == "out_proj":
+        return 2, (model, F)
+    # --- norms / scalars ------------------------------------------------------
+    if name == "scale" or name.startswith("ln") or "norm" in name:
+        return 1, (None,)
+    # ResNet leaves (small) and anything unknown: replicate.
+    return 0, ()
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            names.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(str(k.name))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_specs(params: Any, *, fsdp: Fsdp = ("data",), model: str = "model") -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        ndim = len(leaf.shape)
+        base_rank, base = _base_spec(names, ndim, fsdp, model)
+        extra = ndim - base_rank
+        if extra < 0:  # rule expects more dims than present (reduced configs)
+            base = base[-ndim:] if ndim else ()
+            extra = 0
+        spec = (None,) * extra + tuple(base)
+        # never shard an axis the array can't divide — drop to replicated
+        fixed = []
+        for size, ax in zip(leaf.shape, spec):
+            if ax is None:
+                fixed.append(None)
+            else:
+                fixed.append(ax)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def divisibility_fix(specs: Any, shapes: Any, mesh) -> Any:
+    """Replace any axis assignment that doesn't divide evenly with None.
+
+    (GSPMD requires divisibility; reduced smoke configs and odd dims like
+    danube's head_dim=120 shard only where legal.)"""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec: P, leaf):
+        out = []
+        for i, ax in enumerate(tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            out.append(ax if leaf.shape[i] % total == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, shapes)
+
+
+def batch_specs(batch: Any, dp: Tuple[str, ...]) -> Any:
+    """Shard the leading (batch) dim of every batch leaf over dp axes."""
+
+    def leaf(x):
+        if x.ndim == 0:
+            return P()
+        return P(dp, *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_specs(caches: Any, dp: Tuple[str, ...], model: str = "model") -> Any:
+    """Decode-cache sharding: batch over dp, sequence/capacity over model
+    (sequence parallelism for long contexts); SSM state d_inner over model.
+
+    Cache leaves (per segment, layer-stacked):
+      k/v      (L, B, cap, KVh, hd)   -> (None, dp, model, None, None)
+      c        (L, B, cap, R)         -> (None, dp, model, None)
+      k_rope   (L, B, cap, Dr)        -> (None, dp, model, None)
+      h (ssm)  (L, B, d_in, N)        -> (None, dp, model, None)
+      conv     (L, B, K-1, d_in)      -> (None, dp, None, model)
+      cross k/v(L, B, M, KVh, hd)     -> (None, dp, None, None, None)
+    """
+
+    def leaf(path, x):
+        names = _path_names(path)
+        name = names[-1]
+        parent = names[-2] if len(names) >= 2 else ""
+        if name == "conv":
+            return P(None, dp, None, model)
+        if name == "h":
+            return P(None, dp, model, None)
+        if parent == "cross":
+            return P(None, dp, *([None] * (x.ndim - 3)))
+        # k/v/c/k_rope ring caches: capacity dim sharded over model
+        return P(None, dp, model, *([None] * (x.ndim - 3)))
+
+    return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+def to_named(specs: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

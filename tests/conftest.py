@@ -1,0 +1,31 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+the single real CPU device; multi-device tests spawn subprocesses."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_opts(**over):
+    from repro.models.transformer import ModelOptions
+
+    base = dict(
+        attn_impl="naive", moe_impl="dense", ssm_chunk=8, loss_chunk=16,
+        block_kv=8, remat=False,
+    )
+    base.update(over)
+    return ModelOptions(**base)

@@ -1,0 +1,102 @@
+"""HLO cost parser + roofline model unit tests."""
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_cost import (
+    _logical_lines,
+    _operand_names,
+    _opcode,
+    _result_type,
+    _shape_dims,
+    _type_bytes,
+    parse_hlo_cost,
+)
+from repro.analysis.roofline import Roofline, model_flops
+from repro.configs import get_arch, get_shape
+
+
+def test_split_rhs_with_index_comments():
+    rhs = ("(s32[], f32[8,4]{1,0}, /*index=2*/f32[2]{0}) while(%t), "
+           "condition=%c.1, body=%b.2, backend_config={\"known_trip_count\":{\"n\":\"7\"}}")
+    assert _opcode(rhs) == "while"
+    assert _type_bytes(_result_type(rhs)) == 4 + 8 * 4 * 4 + 2 * 4
+    assert _operand_names(rhs) == ["t"]
+
+
+def test_type_bytes_dtypes():
+    assert _type_bytes("bf16[2,3]{1,0}") == 12
+    assert _type_bytes("s8[10]") == 10
+    assert _type_bytes("(f32[2], pred[3])") == 11
+    assert _type_bytes("token[]") == 0
+
+
+_MINI_HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %d = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4,4]{1,0} all-reduce(%d), replica_groups={{0,1},{2,3}}, to_apply=%add.9
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4,4]{1,0}) tuple(%i2, %ar)
+}
+
+%add.9 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%cond.2 (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+  %x = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4,4]{1,0}) tuple(%z, %x)
+  %w = (s32[], f32[4,4]{1,0}) while(%t0), condition=%cond.2, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_hlo_trip_count_scaling():
+    hc = parse_hlo_cost(_MINI_HLO, pod_size=2)
+    # 5 iterations × one 4x4x4 dot = 5 · 2·4·4·4 = 640 flops
+    assert hc.flops == pytest.approx(640.0)
+    # all-reduce result 64B × 5 trips
+    assert hc.coll_by_kind["all-reduce"] == pytest.approx(320.0)
+    # groups {0,1},{2,3} with pod_size=2 -> intra-pod (ici)
+    assert hc.coll_dcn == 0.0
+    hc2 = parse_hlo_cost(_MINI_HLO, pod_size=1)
+    assert hc2.coll_dcn == pytest.approx(320.0)  # every group spans pods
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=50e9 * 0.5,
+                 dcn_bytes=0, chips=256, model_flops_=197e12 * 256 * 0.5)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.dominant == "memory"
+    assert r.roofline_fraction == pytest.approx(0.25)
+
+
+def test_model_flops_conventions():
+    llama = get_arch("llama3.2-3b")
+    t = get_shape("train_4k")
+    assert model_flops(llama, t) == pytest.approx(
+        6.0 * llama.active_param_count() * t.global_batch * t.seq_len)
+    kimi = get_arch("kimi-k2-1t-a32b")
+    # MoE uses ACTIVE params
+    assert model_flops(kimi, t) < 6.0 * kimi.param_count() * t.global_batch * t.seq_len / 10
+    d = get_shape("decode_32k")
+    assert model_flops(llama, d) == pytest.approx(
+        2.0 * llama.active_param_count() * d.global_batch)

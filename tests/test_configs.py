@@ -1,0 +1,78 @@
+"""Config registry + analytical param counts vs real pytrees."""
+import jax
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape, grid, shape_applicable
+from repro.models import build_model
+
+
+def test_all_archs_present():
+    assert set(ARCHS) == {
+        "seamless-m4t-large-v2", "h2o-danube-3-4b", "gemma3-4b", "gemma3-12b",
+        "llama3.2-3b", "hymba-1.5b", "internvl2-26b", "kimi-k2-1t-a32b",
+        "deepseek-v2-lite-16b", "falcon-mamba-7b",
+    }
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+
+
+def test_grid_is_40_cells():
+    cells = grid()
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    # 5 pure-full-attention archs skip long_500k
+    assert len(runnable) == 35
+
+
+@pytest.mark.parametrize("name,lo,hi", [
+    ("llama3.2-3b", 3.0e9, 3.5e9),
+    ("gemma3-4b", 3.5e9, 4.4e9),
+    ("gemma3-12b", 11.0e9, 12.5e9),
+    ("h2o-danube-3-4b", 3.6e9, 4.3e9),
+    ("falcon-mamba-7b", 6.8e9, 7.8e9),
+    ("hymba-1.5b", 1.3e9, 1.8e9),
+    ("deepseek-v2-lite-16b", 14.5e9, 16.5e9),
+    ("kimi-k2-1t-a32b", 0.95e12, 1.1e12),
+    ("internvl2-26b", 18.5e9, 21.0e9),  # LM backbone of the 26B VLM
+    ("seamless-m4t-large-v2", 1.5e9, 2.1e9),
+])
+def test_param_counts_match_advertised_size(name, lo, hi):
+    n = get_arch(name).param_count()
+    assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_kimi_active_params_near_32b():
+    cfg = get_arch("kimi-k2-1t-a32b")
+    assert 30e9 <= cfg.active_param_count() <= 38e9
+
+
+def test_long_500k_applicability():
+    assert shape_applicable(get_arch("falcon-mamba-7b"), get_shape("long_500k"))[0]
+    assert shape_applicable(get_arch("hymba-1.5b"), get_shape("long_500k"))[0]
+    assert shape_applicable(get_arch("gemma3-4b"), get_shape("long_500k"))[0]
+    assert not shape_applicable(get_arch("llama3.2-3b"), get_shape("long_500k"))[0]
+    assert not shape_applicable(get_arch("kimi-k2-1t-a32b"), get_shape("long_500k"))[0]
+
+
+def test_analytic_count_matches_real_tree():
+    """The analytic formula must track the actual init'd pytree."""
+    for name in ("llama3.2-3b", "deepseek-v2-lite-16b", "falcon-mamba-7b",
+                 "hymba-1.5b", "seamless-m4t-large-v2"):
+        cfg = get_arch(name).reduced()
+        model = build_model(cfg)
+        aparams = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        real = sum(
+            int(__import__("numpy").prod(l.shape))
+            for l in jax.tree.leaves(aparams)
+        )
+        analytic = cfg.param_count()
+        assert abs(real - analytic) / real < 0.06, (
+            f"{name}: real {real} vs analytic {analytic}"
+        )
+
+
+def test_layer_windows_gemma_pattern():
+    cfg = get_arch("gemma3-4b")
+    w = cfg.layer_windows()
+    assert len(w) == 34
+    assert w[:6] == (1024,) * 5 + (-1,)
+    assert sum(1 for x in w if x == -1) == 5  # globals at 5,11,17,23,29

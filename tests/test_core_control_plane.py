@@ -1,0 +1,281 @@
+"""Unit tests for the LIFL control plane (placement, hierarchy, reuse,
+routing, gateway, object store, sidecar, coordinator)."""
+import numpy as np
+import pytest
+
+import repro.core as core
+
+
+# ---------------------------------------------------------------------------
+# object store + gateway
+# ---------------------------------------------------------------------------
+
+def test_object_store_roundtrip_and_immutability():
+    store = core.InProcObjectStore()
+    x = np.random.default_rng(0).normal(size=(100,)).astype(np.float32)
+    key = store.put(x)
+    got = store.get(key)
+    np.testing.assert_array_equal(got, x)
+    with pytest.raises(ValueError):
+        got[0] = 1.0  # immutable (paper §4.1)
+    store.delete(key)
+    assert not store.contains(key)
+    assert store.bytes_in_use == 0
+
+
+def test_shared_memory_store_zero_copy():
+    store = core.SharedMemoryObjectStore(capacity_bytes=1 << 24)
+    try:
+        x = np.arange(1024, dtype=np.float32)
+        key = store.put(x)
+        a = store.get(key)
+        b = store.get(key)
+        np.testing.assert_array_equal(a, x)
+        # both views alias the same shared segment (zero-copy)
+        assert a.__array_interface__["data"][0] == b.__array_interface__["data"][0]
+        assert store.stats["zero_copy_gets"] == 2
+    finally:
+        store.close()
+
+
+def test_store_capacity_enforced():
+    store = core.InProcObjectStore(capacity_bytes=100)
+    with pytest.raises(MemoryError):
+        store.put(np.zeros(1000, np.float32))
+
+
+def test_gateway_serialize_once_and_queue():
+    store = core.InProcObjectStore()
+    gw = core.Gateway("node0", store)
+    seen = []
+    gw.subscribe(seen.append)
+    u = np.random.default_rng(1).normal(size=(50,)).astype(np.float32)
+    payload = core.serialize_update(u, {"num_samples": 3.0})
+    env = gw.receive_from_client(payload, round_id=0, sender_id="c0")
+    assert gw.queue_length() == 1
+    assert seen and seen[0].object_key == env.object_key
+    np.testing.assert_allclose(store.get(env.object_key), u)
+    assert env.num_samples == 3.0
+
+
+def test_inter_node_gateway_transfer():
+    s0, s1 = core.InProcObjectStore("n0"), core.InProcObjectStore("n1")
+    g0, g1 = core.Gateway("n0", s0), core.Gateway("n1", s1)
+    g0.connect_peer(g1)
+    u = np.ones((32,), np.float32)
+    env = g0.put_local(u, 0, "agg", 2.0)
+    env2 = g0.send_to_node(env, "n1")
+    np.testing.assert_array_equal(s1.get(env2.object_key), u)
+    assert g0.stats["tx_updates"] == 1
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+def _nodes(caps):
+    return {
+        f"node{i}": core.NodeState(node=f"node{i}", max_capacity=c)
+        for i, c in enumerate(caps)
+    }
+
+
+def test_bestfit_concentrates_worstfit_spreads():
+    best = core.place_updates(20, _nodes([20] * 5), policy="bestfit")
+    worst = core.place_updates(20, _nodes([20] * 5), policy="worstfit")
+    assert best.num_nodes_used == 1      # fully packed (paper Fig 8(d))
+    assert worst.num_nodes_used == 5     # Least-Connection spreading
+
+
+def test_placement_respects_capacity():
+    p = core.place_updates(100, _nodes([20] * 5), policy="bestfit")
+    assert p.num_nodes_used == 5
+    assert not p.overflow
+    counts = {n: len(v) for n, v in p.assignment.items()}
+    assert all(c <= 20 for c in counts.values())
+    p2 = core.place_updates(101, _nodes([20] * 5), policy="bestfit")
+    assert p2.overflow  # beyond total capacity
+
+
+def test_residual_capacity_model():
+    ns = core.NodeState(node="n", max_capacity=20, arrival_rate=4, exec_time_s=2.0)
+    assert ns.queue_estimate == 8.0
+    assert ns.residual_capacity == 12.0
+
+
+def test_measure_max_capacity_inflection():
+    # E flat at 1.0 until overload at k=10 where E doubles
+    obs = [(2, 1.0), (5, 1.0), (8, 1.1), (10, 2.2), (12, 4.0)]
+    mc = core.measure_max_capacity(obs)
+    assert mc == pytest.approx(22.0)  # k'·E' at inflection
+
+
+def test_inter_node_transfers_counts_non_top_nodes():
+    p = core.place_updates(60, _nodes([20] * 5), policy="bestfit")
+    top = core.choose_top_node(_nodes([20] * 5), p.assignment)
+    assert core.inter_node_transfers(p.assignment, top) == p.num_nodes_used - 1
+
+
+# ---------------------------------------------------------------------------
+# hierarchy planner
+# ---------------------------------------------------------------------------
+
+def test_ewma_alpha_07():
+    e = core.EWMA(alpha=0.7)
+    assert e.update(10) == 10
+    assert e.update(20) == pytest.approx(0.7 * 10 + 0.3 * 20)
+
+
+def test_planner_two_level_tree():
+    planner = core.HierarchyPlanner(fan_in=2)
+    plan = planner.plan({"node0": 8.0, "node1": 3.0}, smooth=False)
+    assert plan.per_node["node0"].num_leaves == 4
+    assert plan.per_node["node0"].has_middle
+    assert plan.per_node["node1"].num_leaves == 2
+    assert plan.top_node == "node0"
+    assert plan.total_aggregators == 4 + 1 + 2 + 1 + 1
+
+
+def test_planner_diff_creates_and_terminates():
+    planner = core.HierarchyPlanner(fan_in=2)
+    planner.plan({"a": 8.0}, smooth=False)
+    new = planner.plan({"a": 2.0}, smooth=False)
+    # EWMA smoothing off: 8 -> 2 updates means fewer aggregators
+    diff = planner.diff(new)
+    assert all(v <= 0 for v in diff.values()) or not diff
+
+
+def test_eager_beats_lazy_in_act_model():
+    planner = core.HierarchyPlanner(fan_in=2)
+    plan = planner.plan({"n0": 10.0, "n1": 10.0}, smooth=False)
+    kw = dict(t_agg=0.5, t_intra=0.7, t_inter=4.2)
+    eager = core.aggregation_completion_time(20, plan, eager=True, **kw)
+    lazy = core.aggregation_completion_time(20, plan, eager=False, **kw)
+    assert eager < lazy
+
+
+# ---------------------------------------------------------------------------
+# reuse pool
+# ---------------------------------------------------------------------------
+
+def test_pool_reuse_and_promotion():
+    pool = core.AggregatorPool(cold_start_s=2.0)
+    inst, delay = pool.acquire("node0", core.Role.LEAF)
+    assert delay == 2.0 and pool.stats.cold_starts == 1
+    pool.release(inst.agg_id)
+    inst2, delay2 = pool.acquire("node0", core.Role.MIDDLE)
+    assert inst2.agg_id == inst.agg_id      # same warm runtime
+    assert delay2 == 0.0                     # no cold start
+    assert inst2.role == core.Role.MIDDLE    # promoted (§5.3)
+    assert pool.stats.promoted == 1
+
+
+def test_pool_no_cross_node_reuse():
+    pool = core.AggregatorPool()
+    a, _ = pool.acquire("node0", core.Role.LEAF)
+    pool.release(a.agg_id)
+    b, _ = pool.acquire("node1", core.Role.LEAF)
+    assert b.agg_id != a.agg_id
+
+
+def test_terminate_idle_scales_down():
+    pool = core.AggregatorPool()
+    ids = [pool.acquire("node0", core.Role.LEAF)[0].agg_id for _ in range(4)]
+    for i in ids:
+        pool.release(i)
+    assert pool.terminate_idle() == 4
+    assert pool.count() == 0
+
+
+def test_executable_cache_hit_on_same_signature():
+    builds = []
+    cache = core.ExecutableCache(lambda **sig: builds.append(sig) or len(builds))
+    cache.get(shape=(10,), fan_in=2)
+    cache.get(shape=(10,), fan_in=2)
+    cache.get(shape=(20,), fan_in=2)
+    assert cache.hits == 1 and cache.misses == 2
+
+
+# ---------------------------------------------------------------------------
+# TAG + routing
+# ---------------------------------------------------------------------------
+
+def test_tag_single_rooted_and_groups():
+    tag = core.build_two_level_tag({"n0": 2, "n1": 1}, 2, "n0")
+    assert tag.validate_single_rooted()
+    groups = tag.groups()
+    assert "n0" in groups and "n1" in groups
+    assert len(tag.leaves()) == 3
+
+
+def test_routing_intra_vs_inter():
+    core.clear_registry()
+    stores = {n: core.InProcObjectStore(n) for n in ("n0", "n1")}
+    gws = {n: core.Gateway(n, stores[n]) for n in stores}
+    gws["n0"].connect_peer(gws["n1"])
+    sms = {n: core.SockMap() for n in stores}
+    mgrs = {n: core.RoutingManager(n, gws[n], sms[n]) for n in stores}
+    for m in mgrs.values():
+        core.register_node(m)
+    tag = core.build_two_level_tag({"n0": 1, "n1": 1}, 2, "n0")
+    for m in mgrs.values():
+        m.install_tag(tag)
+    sms["n0"].register("mid@n0")
+    sms["n0"].register("top@n0")
+
+    u = np.ones((16,), np.float32)
+    env = gws["n0"].put_local(u, 0, "leaf0@n0", 1.0)
+    assert mgrs["n0"].send("leaf0@n0", env)           # intra-node hop
+    assert mgrs["n0"].stats["intra_node_sends"] == 1
+    env1 = gws["n1"].put_local(u, 0, "mid@n1", 1.0)
+    assert mgrs["n1"].send("mid@n1", env1)            # inter-node hop
+    assert mgrs["n1"].stats["inter_node_sends"] == 1
+    assert len(sms["n0"].mailbox("top@n0")) == 1
+
+
+# ---------------------------------------------------------------------------
+# sidecar (event-driven)
+# ---------------------------------------------------------------------------
+
+def test_sidecar_event_driven_zero_idle():
+    mm = core.MetricsMap()
+    sc = core.EventSidecar("agg1", mm)
+    assert sc.invocations == 0            # no events -> no activity
+    sc.on_aggregate(3, 0.5)
+    assert sc.invocations == 1
+    total, count = mm.peek("agg1", "agg_exec_s")
+    assert total == pytest.approx(0.5) and count == 1
+    drained = mm.drain()
+    assert ("agg1", "agg_exec_s") in drained
+    assert mm.peek("agg1", "agg_exec_s") == (0.0, 0)  # map reset
+
+
+def test_metrics_server_mean():
+    mm, ms = core.MetricsMap(), core.MetricsServer()
+    sc = core.EventSidecar("a", mm)
+    for t in (0.2, 0.4):
+        sc.on_aggregate(1, t)
+    ms.push(mm.drain())
+    assert ms.mean("a", "agg_exec_s") == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+# coordinator
+# ---------------------------------------------------------------------------
+
+def test_coordinator_round_lifecycle():
+    clients = [core.ClientInfo(f"c{i}", num_samples=10) for i in range(30)]
+    nodes = _nodes([20] * 3)
+    coord = core.Coordinator(core.Selector(clients), nodes)
+    cfg = core.RoundConfig(aggregation_goal=10, over_provision=1.2)
+    plan = coord.plan_round(cfg)
+    assert len(plan.selected) == 12           # over-provisioned
+    assert plan.tag.validate_single_rooted()
+    v = coord.finish_round()
+    assert v == 1
+    plan2 = coord.plan_round(cfg)
+    assert plan2.reused > 0                    # warm pool reused next round
+    # selector diversity: round 2 prefers clients not picked in round 1
+    first = {c.client_id for c in plan.selected}
+    second = {c.client_id for c in plan2.selected}
+    assert first.isdisjoint(second)

@@ -1,0 +1,191 @@
+"""Integration: end-to-end FL training, checkpoint/restart, failure
+injection, elastic scaling, data pipeline."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_opts
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.configs import ARCHS
+from repro.configs.resnet import RESNET18
+from repro.core import ClientInfo, NodeState, RoundConfig
+from repro.data import (
+    CohortTokenLoader,
+    build_client_datasets,
+    dirichlet_partition,
+    synthetic_femnist,
+)
+from repro.fl.round import AggregationConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model, build_resnet
+from repro.runtime import (
+    ArrivalTrace,
+    ClientRuntime,
+    ElasticController,
+    FederatedTrainer,
+    FusedFLTrainer,
+)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_partition_covers_all_samples():
+    labels = np.random.default_rng(0).integers(0, 10, size=500)
+    shards = dirichlet_partition(labels, 20, alpha=0.3)
+    all_idx = np.concatenate([s.indices for s in shards])
+    assert sorted(all_idx.tolist()) == list(range(500))
+
+
+def test_dirichlet_is_non_iid():
+    labels = np.random.default_rng(0).integers(0, 10, size=2000)
+    shards = dirichlet_partition(labels, 10, alpha=0.1)
+    # at alpha=0.1 the per-client label histograms should be skewed
+    skews = []
+    for s in shards:
+        if s.num_samples < 10:
+            continue
+        hist = np.bincount(labels[s.indices], minlength=10) / s.num_samples
+        skews.append(hist.max())
+    assert np.mean(skews) > 0.4
+
+
+def test_cohort_token_loader_layout():
+    loader = CohortTokenLoader(vocab_size=97, seq_len=16, n_cohorts=4)
+    b = loader.round_batch(16, round_id=0)
+    assert b["tokens"].shape == (16, 16)
+    assert b["labels"].shape == (16, 16)
+    assert (b["labels"][:, -1] == -1).all()
+
+
+def test_token_task_is_learnable_structure():
+    loader = CohortTokenLoader(vocab_size=31, seq_len=32, n_cohorts=1)
+    b = loader.round_batch(8, 0)
+    toks, labels = b["tokens"], b["labels"]
+    pred = (5 * toks + 17) % 31
+    agree = (pred[:, :-1] == labels[:, :-1]).mean()
+    assert agree > 0.85  # 5% noise
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+              "b": [jnp.ones((4,), jnp.bfloat16)]}
+    save_checkpoint(tmp_path, 3, params)
+    got, step = restore_checkpoint(tmp_path, params)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(params["a"]))
+    assert got["b"][0].dtype == jnp.bfloat16
+
+
+def test_async_checkpointer_ordered(tmp_path):
+    ck = AsyncCheckpointer(tmp_path)
+    for s in (1, 2, 3):
+        ck.submit(s, {"w": jnp.full((8,), float(s))})
+    ck.wait()
+    assert latest_step(tmp_path) == 3
+    got, _ = restore_checkpoint(tmp_path, {"w": jnp.zeros((8,))})
+    np.testing.assert_array_equal(np.asarray(got["w"]), 3.0)
+
+
+def test_fused_trainer_checkpoint_restart(tmp_path):
+    cfg = ARCHS["llama3.2-3b"].reduced(dtype="float32")
+    mesh = make_host_mesh()
+    agg = AggregationConfig(hierarchy="flat", num_microbatches=2)
+    loader = CohortTokenLoader(cfg.vocab_size, 16, 2)
+
+    tr = FusedFLTrainer(cfg, mesh, agg, opts=tiny_opts(vocab_axis=None),
+                        checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    tr.init(seed=0)
+    for r in range(4):
+        tr.train_round(loader.round_batch(8, r))
+    tr.ckpt.wait()
+    params_after_4 = jax.tree.map(np.asarray, tr.params)
+
+    # crash + restart: a fresh trainer restores the round-4 checkpoint
+    tr2 = FusedFLTrainer(cfg, mesh, agg, opts=tiny_opts(vocab_axis=None),
+                         checkpoint_dir=str(tmp_path))
+    tr2.init(seed=99)  # different init, must be overwritten by restore
+    assert tr2.maybe_restore()
+    assert tr2.round_id == 4
+    for a, b in zip(jax.tree.leaves(tr2.params), jax.tree.leaves(params_after_4)):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+# ---------------------------------------------------------------------------
+# failure injection + straggler handling
+# ---------------------------------------------------------------------------
+
+def _mk_fl_trainer(failure_prob, seed=0, goal=6):
+    cfg = RESNET18.reduced()
+    model = build_resnet(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    imgs, labels = synthetic_femnist(400, num_classes=10, seed=0)
+    shards = dirichlet_partition(labels, 12, alpha=0.5)
+    dsets = build_client_datasets(imgs, labels, shards)
+    clients = [
+        ClientRuntime(ClientInfo(d.client_id, d.num_samples), d,
+                      failure_prob=failure_prob)
+        for d in dsets
+    ]
+    return FederatedTrainer(
+        model, params, clients,
+        round_cfg=RoundConfig(aggregation_goal=goal, over_provision=1.8),
+        seed=seed,
+    ), imgs, labels
+
+
+def test_round_completes_despite_client_failures():
+    tr, imgs, labels = _mk_fl_trainer(failure_prob=0.3)
+    rec = tr.run_round(lr=0.05, batch_size=32)
+    assert rec["updates"] >= 1  # over-provisioning absorbed failures
+    # training still progresses
+    pre = tr.evaluate({"images": imgs[:128], "labels": labels[:128]})
+    for _ in range(3):
+        tr.run_round(lr=0.05, batch_size=32)
+    post = tr.evaluate({"images": imgs[:128], "labels": labels[:128]})
+    assert post["loss"] < pre["loss"]
+
+
+def test_aggregator_reuse_across_rounds():
+    tr, *_ = _mk_fl_trainer(failure_prob=0.0)
+    r1 = tr.run_round(lr=0.01, batch_size=32)
+    r2 = tr.run_round(lr=0.01, batch_size=32)
+    assert r2["reused"] > 0
+    assert r2["cold_starts"] <= r1["cold_starts"]
+
+
+# ---------------------------------------------------------------------------
+# elastic scaling
+# ---------------------------------------------------------------------------
+
+def test_elastic_controller_scales_and_survives_node_loss():
+    nodes = {f"n{i}": NodeState(node=f"n{i}", max_capacity=20) for i in range(4)}
+    ec = ElasticController(nodes)
+    low = ec.step(0, expected_updates=8)
+    high = ec.step(1, expected_updates=64)
+    assert high["aggregators_planned"] > low["aggregators_planned"]
+    ec.lose_node("n0", 2)
+    after = ec.step(2, expected_updates=64)
+    assert after["nodes"] == 3
+    kinds = [e.kind for e in ec.events]
+    assert "node_lost" in kinds and "scale_up" in kinds
+
+
+def test_arrival_trace_varies():
+    tr = ArrivalTrace(base_rate=10, variability=0.5)
+    rates = [tr.rate(r) for r in range(40)]
+    assert max(rates) > 1.5 * min(rates)
