@@ -7,14 +7,20 @@ per-system aggregation costs (simulator, §6.1 constants).  The learning
 trajectory is identical across systems — exactly the paper's setup,
 where only the aggregation service differs — so time-to-accuracy
 differences come purely from ACT and cold-start behavior.
+
+LIFL's simulated fold cost uses the blocked aggregation engine
+(core/engine.py); SF/SL keep the naive scalar fold.  The blocked/naive
+throughput ratio is *measured live* on this host (fold_calibration row,
+old-vs-new GB/s) and fed into ``DataPlaneCosts.agg_engine_speedup``.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import jax
 import numpy as np
 
+from benchmarks.engine_probe import fold_gbps
 from repro.configs.resnet import RESNET18
 from repro.core import AggregatorPool, ClientInfo, RoundConfig, SimConfig, simulate_round
 from repro.core.simulation import DataPlaneCosts
@@ -23,12 +29,20 @@ from repro.models import build_resnet
 from repro.runtime import ClientRuntime, FederatedTrainer
 
 SYSTEMS = {
-    # (dataplane, placement, reuse, eager, fresh_pool_every_round)
-    "lifl": ("shm", "bestfit", True, True),
-    "sf": ("serverful", "bestfit", True, False),   # always-on serverful
-    "sl": ("serverless", "worstfit", False, False),  # cold starts + broker
+    # (dataplane, placement, reuse, eager, agg_engine)
+    "lifl": ("shm", "bestfit", True, True, "blocked"),
+    "sf": ("serverful", "bestfit", True, False, "naive"),   # always-on serverful
+    "sl": ("serverless", "worstfit", False, False, "naive"),  # cold starts + broker
 }
 TRAIN_S_PER_ROUND = 30.0  # client-side training span (masked by arrivals)
+
+
+def _measure_fold_gbps(n: int = 4 << 20) -> Tuple[float, float]:
+    """Live old-vs-new fold throughput (GB/s of update consumed)."""
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(n,)).astype(np.float32)
+    u.flags.writeable = False
+    return fold_gbps("naive", u)[0], fold_gbps("blocked", u)[0]
 
 
 def run(fast: bool = True) -> List[Dict]:
@@ -59,11 +73,25 @@ def run(fast: bool = True) -> List[Dict]:
         accs.append(tr.evaluate(test)["accuracy"])
 
     # --- per-system round costs ------------------------------------------
+    # calibrate the engine speedup from a live fold measurement
+    naive_gbps, blocked_gbps = _measure_fold_gbps()
+    measured_speedup = max(1.0, blocked_gbps / naive_gbps)
+    rows.append({
+        "bench": "tta_fig9",
+        "case": "fold_calibration",
+        "us_per_call": 0.0,
+        "derived": (f"fold_gbps_naive={naive_gbps:.2f};"
+                    f"fold_gbps_blocked={blocked_gbps:.2f};"
+                    f"speedup={measured_speedup:.2f}x"),
+    })
+
     n_updates = 10
-    for name, (dp, policy, reuse, eager) in SYSTEMS.items():
+    for name, (dp, policy, reuse, eager, engine) in SYSTEMS.items():
+        costs = DataPlaneCosts()
+        costs.agg_engine_speedup["blocked"] = measured_speedup
         sim_cfg = SimConfig(n_nodes=5, mc_per_node=20, placement_policy=policy,
                             hierarchy=True, reuse=reuse, eager=eager,
-                            dataplane=dp, costs=DataPlaneCosts())
+                            dataplane=dp, agg_engine=engine, costs=costs)
         pool = AggregatorPool(cold_start_s=sim_cfg.costs.t_cold_start)
         wall = cpu = 0.0
         reached = None

@@ -1,0 +1,55 @@
+"""Shared fold-throughput probe for the aggregation engines.
+
+One measurement loop used by bench_agg_kernel, bench_dataplane and
+bench_tta so the calibrated speedups fed into ``DataPlaneCosts`` and the
+rows recorded in BENCH_agg.json come from the same procedure (warm the
+scratch, then average ``reps`` timed folds).
+
+``fold GB/s`` = bytes of update consumed per second — the
+apples-to-apples number across engines (the naive engine moves ~7×
+that in DRAM traffic; the blocked engine ~3×; that asymmetry is the
+point).
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import AggregationEngine, make_engine
+
+
+def fold_gbps(engine, update: np.ndarray, *, reps: int = 3,
+              weight: float = 1.7) -> Tuple[float, float]:
+    """(GB/s of update consumed, seconds per fold) for one engine."""
+    eng = engine if isinstance(engine, AggregationEngine) else make_engine(engine)
+    acc = eng.begin(update.size)
+    # rebind every fold: the jnp/pallas engines donate the accumulator,
+    # so the old handle is dead after each call
+    acc = eng.fold(acc, update, weight)    # warm scratch/accumulator
+    eng.sync(acc)                          # async engines: drain dispatch
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        acc = eng.fold(acc, update, weight)
+    eng.sync(acc)
+    dt = (time.perf_counter() - t0) / reps
+    eng.recycle(acc)
+    return update.nbytes / 1e9 / dt, dt
+
+
+def fold_many_gbps(engine, updates: Sequence[np.ndarray],
+                   weights: Sequence[float], *, reps: int = 3
+                   ) -> Tuple[float, float]:
+    """(per-update GB/s, seconds per K-way burst) for a batched fold."""
+    eng = engine if isinstance(engine, AggregationEngine) else make_engine(engine)
+    acc = eng.begin(updates[0].size)
+    acc = eng.fold_many(acc, updates, weights)   # warm (donating engines
+    eng.sync(acc)                                # invalidate old handles)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        acc = eng.fold_many(acc, updates, weights)
+    eng.sync(acc)
+    dt = (time.perf_counter() - t0) / reps
+    eng.recycle(acc)
+    return sum(u.nbytes for u in updates) / 1e9 / dt, dt

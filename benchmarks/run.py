@@ -4,19 +4,37 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract).  ``--full``
 uses paper-scale payloads (232 MB updates); default is a fast mode with
 scaled payloads that preserves every ordering/ratio claim.
 
+``--json PATH`` additionally writes the agg-kernel + dataplane rows
+(the perf-trajectory benchmarks: fold GB/s old vs new) as a JSON list,
+so future PRs have a baseline to regress against (see BENCH_agg.json).
+
   PYTHONPATH=src python -m benchmarks.run [--full] [--only name]
+                                          [--json BENCH_agg.json]
 """
 import argparse
+import json
+import os
 import sys
 import time
+
+# suites whose rows land in the --json perf-trajectory file
+JSON_SUITES = ("agg_kernel", "dataplane_fig7")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write agg-kernel + dataplane rows to PATH as JSON")
     args = ap.parse_args()
     fast = not args.full
+    if args.json:  # fail on an unwritable path now, not after the run —
+        # without creating an empty file a no-row run would leave behind
+        target = args.json if os.path.exists(args.json) else (
+            os.path.dirname(os.path.abspath(args.json)))
+        if not os.access(target, os.W_OK):
+            ap.error(f"--json path not writable: {args.json}")
 
     from benchmarks import (
         bench_agg_kernel,
@@ -40,6 +58,7 @@ def main() -> None:
     if args.only:
         suites = {k: v for k, v in suites.items() if args.only in k}
 
+    json_rows = []
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         t0 = time.time()
@@ -51,7 +70,22 @@ def main() -> None:
         for r in rows:
             print(f"{r['bench']}/{r['case']},{r['us_per_call']:.1f},"
                   f"{r['derived']}", flush=True)
+        if name in JSON_SUITES:
+            json_rows.extend(rows)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        if json_rows:
+            with open(args.json, "w") as f:
+                json.dump({"mode": "full" if args.full else "fast",
+                           "rows": json_rows}, f, indent=2)
+            print(f"# wrote {len(json_rows)} rows to {args.json}",
+                  file=sys.stderr)
+        else:
+            # never clobber an existing perf baseline with an empty run
+            # (e.g. --only filtered out both JSON suites)
+            print(f"# no {'/'.join(JSON_SUITES)} rows produced; "
+                  f"left {args.json} untouched", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,14 @@ Control     — placement (BestFit locality packing, RC/MC capacity),
 simulation  — event-driven cluster sim for the paper-figure benchmarks.
 """
 from repro.core.aggregation import Aggregator, FedAvgState, fedavg_oracle
+from repro.core.engine import (
+    AggregationEngine,
+    BlockedNumpyEngine,
+    ENGINE_NAMES,
+    JaxEngine,
+    NaiveEngine,
+    make_engine,
+)
 from repro.core.coordinator import (
     ClientInfo,
     Coordinator,

@@ -9,18 +9,23 @@ Multiple producers -> single consumer, three steps:
 
 FedAvg (Eq. 1): w = Σ_k c_k·w_k / Σ_k c_k — implemented as a running
 (Σ c·w, Σ c) pair so eager and lazy are numerically identical (cumulative
-averaging is exact, §2.1).  The fold's hot loop is the fedavg kernel
-(kernels/fedavg: Pallas on TPU, numpy/jnp twin elsewhere).
+averaging is exact, §2.1).  The fold's hot loop is delegated to a
+pluggable aggregation *engine* (core/engine.py): blocked numpy tiles on
+hosts, the kernels/fedavg Pallas path on TPU, with the seed's scalar
+path kept as the ``naive`` baseline.  ``_drain`` dequeues bursts of up
+to ``batch_k`` pending envelopes and folds them in one K-way pass, so a
+burst of arrivals costs ~one read of the accumulator rather than K.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.engine import AggregationEngine, make_engine
 from repro.core.gateway import UpdateEnvelope
 from repro.core.objectstore import InProcObjectStore
 from repro.core.sidecar import EventSidecar
@@ -28,35 +33,52 @@ from repro.core.sidecar import EventSidecar
 
 @dataclass
 class FedAvgState:
-    """Running weighted sum — supports fold (one update) and merge
-    (combine two partial aggregates: the hierarchy's associativity)."""
+    """Running weighted sum — supports fold (one update), fold_many (a
+    K-way burst) and merge (combine two partial aggregates: the
+    hierarchy's associativity).  The arithmetic is the engine's."""
 
-    acc: Optional[np.ndarray] = None
+    acc: Optional[Any] = None
     weight: float = 0.0
     count: int = 0
+    engine: Any = None
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.engine, AggregationEngine):
+            # bare FedAvgState() keeps the seed's scalar semantics
+            self.engine = make_engine(self.engine or "naive")
+
+    def _ensure_acc(self, n: int) -> None:
+        if self.acc is None:
+            self.acc = self.engine.begin(n)
 
     def fold(self, update: np.ndarray, w: float) -> None:
-        contrib = update.astype(np.float32) * np.float32(w)
-        if self.acc is None:
-            self.acc = contrib
-        else:
-            self.acc += contrib  # in-place: the zero-copy consume
+        self._ensure_acc(update.size)
+        self.acc = self.engine.fold(self.acc, update, w)
         self.weight += w
         self.count += 1
+
+    def fold_many(self, updates: List[np.ndarray], weights: List[float]) -> None:
+        if not updates:
+            return
+        self._ensure_acc(updates[0].size)
+        self.acc = self.engine.fold_many(self.acc, updates, weights)
+        self.weight += float(sum(weights))
+        self.count += len(updates)
 
     def merge(self, other: "FedAvgState") -> None:
         if other.acc is None:
             return
+        partial = other.engine.to_numpy(other.acc)
         if self.acc is None:
-            self.acc = other.acc.copy()
-        else:
-            self.acc += other.acc
+            self.acc = self.engine.begin(partial.size)
+        self.acc = self.engine.add_partial(self.acc, partial)
         self.weight += other.weight
         self.count += other.count
 
     def result(self) -> Tuple[np.ndarray, float]:
         assert self.acc is not None and self.weight > 0
-        return self.acc / np.float32(self.weight), self.weight
+        acc = self.engine.to_numpy(self.acc)
+        return acc / np.float32(self.weight), self.weight
 
 
 class Aggregator:
@@ -71,6 +93,8 @@ class Aggregator:
         eager: bool = True,
         sidecar: Optional[EventSidecar] = None,
         on_complete: Optional[Callable[[np.ndarray, float], None]] = None,
+        engine: Any = "auto",
+        batch_k: int = 8,
     ):
         self.agg_id = agg_id
         self.store = store
@@ -78,8 +102,10 @@ class Aggregator:
         self.eager = eager
         self.sidecar = sidecar
         self.on_complete = on_complete
+        self.engine = make_engine(engine)
+        self.batch_k = max(1, int(batch_k))
         self.fifo: Deque[UpdateEnvelope] = deque()
-        self.state = FedAvgState()
+        self.state = FedAvgState(engine=self.engine)
         self.done = False
         self.result: Optional[Tuple[np.ndarray, float]] = None
         self.agg_exec_s = 0.0
@@ -91,8 +117,7 @@ class Aggregator:
         self.fifo.append(env)
         if self.sidecar:
             self.sidecar.on_recv(
-                self.store.meta(env.object_key).nbytes
-                if hasattr(self.store, "meta") else 0,
+                self.store.meta(env.object_key).nbytes,
                 time.perf_counter() - env.enqueue_ts,
             )
         if self.eager:
@@ -102,19 +127,31 @@ class Aggregator:
     # ------------------------------------------------------------------
     # Agg step
     # ------------------------------------------------------------------
-    def _fold_one(self, env: UpdateEnvelope) -> None:
-        t0 = time.perf_counter()
-        update = self.store.get(env.object_key)
-        self.state.fold(np.asarray(update), env.num_samples)
-        self.store.release(env.object_key)
-        dt = time.perf_counter() - t0
-        self.agg_exec_s += dt
-        if self.sidecar:
-            self.sidecar.on_aggregate(1, dt)
-
     def _drain(self) -> None:
+        """Dequeue-and-fold in K-way bursts through the engine layer.
+
+        Under eager timing arrivals trickle in and bursts are usually
+        size 1; under lazy timing (or an arrival burst outpacing the
+        fold) up to ``batch_k`` queued envelopes are folded in a single
+        pass over the accumulator."""
         while self.fifo and not self.done:
-            self._fold_one(self.fifo.popleft())
+            k = min(len(self.fifo), self.batch_k, self.goal - self.state.count)
+            if k <= 0:
+                break
+            envs = [self.fifo.popleft() for _ in range(k)]
+            t0 = time.perf_counter()
+            views = [np.asarray(self.store.get(e.object_key)) for e in envs]
+            if k == 1:
+                self.state.fold(views[0], envs[0].num_samples)
+            else:
+                self.state.fold_many(views, [e.num_samples for e in envs])
+            for e in envs:
+                self.store.release(e.object_key)
+            self.engine.sync(self.state.acc)  # async engines: the timed
+            dt = time.perf_counter() - t0     # fold must have executed
+            self.agg_exec_s += dt
+            if self.sidecar:
+                self.sidecar.on_aggregate(k, dt)
             if self.state.count >= self.goal:
                 self._send()
 

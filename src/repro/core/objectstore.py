@@ -176,6 +176,13 @@ class InProcObjectStore:
     def contains(self, key: str) -> bool:
         return key in self._objs
 
+    def meta(self, key: str) -> ObjectMeta:
+        arr = self._objs[key]
+        return ObjectMeta(
+            key=key, shape=arr.shape, dtype=str(arr.dtype),
+            nbytes=arr.nbytes, sealed=True,
+        )
+
     def close(self) -> None:
         self._objs.clear()
         self.bytes_in_use = 0

@@ -43,6 +43,14 @@ class AggregatorInstance:
     cold_starts: int = 0
     promotions: int = 0
     tasks_done: int = 0
+    # the instance's aggregation engine (core/engine.py): created
+    # lazily via AggregatorPool.engine_for and kept resident across
+    # release/acquire, so a warm aggregator re-enters a round with its
+    # accumulator/scratch buffers already allocated — the fold-level
+    # half of the §5.3 reuse benefit.  (FederatedTrainer's aggregators
+    # are not pool-managed; it keys warm engines by tree position
+    # itself — see trainer._warm_engine.)
+    engine: Optional[Any] = None
 
 
 @dataclass
@@ -57,8 +65,9 @@ class PoolStats:
 class AggregatorPool:
     """Per-cluster registry of aggregator instances with reuse policy."""
 
-    def __init__(self, cold_start_s: float = 1.0):
+    def __init__(self, cold_start_s: float = 1.0, engine: str = "auto"):
         self.cold_start_s = cold_start_s
+        self.engine_spec = engine
         self.instances: Dict[str, AggregatorInstance] = {}
         self.stats = PoolStats()
         self._counter = 0
@@ -88,11 +97,27 @@ class AggregatorPool:
         self.stats.cold_starts += 1
         return inst, self.cold_start_s
 
+    def engine_for(self, inst: AggregatorInstance):
+        """The instance's warm aggregation engine, created on first use
+        (simulated cold starts never pay for one) and handed to the
+        ``Aggregator`` driving this instance: ``Aggregator(...,
+        engine=pool.engine_for(inst))``."""
+        if inst.engine is None:
+            from repro.core.engine import make_engine
+
+            inst.engine = make_engine(self.engine_spec)
+        return inst.engine
+
     def release(self, agg_id: str) -> None:
         inst = self.instances.get(agg_id)
         if inst is not None:
             inst.state = State.IDLE
             inst.tasks_done += 1
+            if inst.engine is not None:
+                # round over: hand the accumulator back to the warm
+                # buffer pool (invalidates the old handle; result() has
+                # already copied out)
+                inst.engine.recycle()
 
     def terminate(self, agg_id: str) -> None:
         if self.instances.pop(agg_id, None) is not None:

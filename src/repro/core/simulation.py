@@ -42,10 +42,34 @@ class DataPlaneCosts:
     cpu_intra_serverful: float = 0.8
     cpu_intra_serverless: float = 2.4
     cpu_inter_node: float = 1.0
-    t_agg: float = 0.55        # fold one ResNet-152 update
+    t_agg: float = 0.55        # fold one ResNet-152 update (naive engine)
     cpu_agg: float = 0.55
     t_cold_start: float = 2.0  # container cold start
     cpu_cold_start: float = 1.0
+    # Relative fold throughput of the aggregation engines (core/engine.py)
+    # vs the naive scalar baseline.  Defaults from benchmarks/
+    # bench_agg_kernel.py on the dev host (see BENCH_agg.json); bench_tta
+    # re-calibrates from a live measurement before simulating.
+    agg_engine_speedup: Dict[str, float] = field(default_factory=lambda: {
+        "naive": 1.0, "blocked": 4.0, "jnp": 2.0, "pallas": 8.0,
+    })
+
+    def _speedup(self, engine: str) -> float:
+        if engine == "auto":
+            from repro.core.engine import _auto_name
+            engine = _auto_name()
+        if engine not in self.agg_engine_speedup:
+            raise ValueError(
+                f"no fold-speedup calibration for engine {engine!r} "
+                f"(known: {sorted(self.agg_engine_speedup)}); add it to "
+                f"DataPlaneCosts.agg_engine_speedup")
+        return self.agg_engine_speedup[engine]
+
+    def t_agg_for(self, engine: str) -> float:
+        return self.t_agg / self._speedup(engine)
+
+    def cpu_agg_for(self, engine: str) -> float:
+        return self.cpu_agg / self._speedup(engine)
 
 
 @dataclass
@@ -58,6 +82,7 @@ class SimConfig:
     eager: bool = True
     fan_in: int = 2
     dataplane: str = "shm"             # shm | serverful | serverless
+    agg_engine: str = "naive"          # fold engine (core/engine.py)
     costs: DataPlaneCosts = field(default_factory=DataPlaneCosts)
     seed: int = 0
 
@@ -98,6 +123,8 @@ def simulate_round(
     """
     rng = random.Random(cfg.seed)
     c = cfg.costs
+    t_agg = c.t_agg_for(cfg.agg_engine)
+    cpu_agg = c.cpu_agg_for(cfg.agg_engine)
     t_intra, cpu_intra = _transfer_cost(cfg)
     pool = pool if pool is not None else AggregatorPool(cold_start_s=c.t_cold_start)
 
@@ -145,20 +172,20 @@ def simulate_round(
         if cfg.eager:
             # arrivals (and the cold start) overlap aggregation; only the
             # last update's transfer+fold is exposed (§5.4)
-            leaf_t = max(arrival_span_s, cold_delay) + per_leaf * (t_intra + c.t_agg)
+            leaf_t = max(arrival_span_s, cold_delay) + per_leaf * (t_intra + t_agg)
         else:
             # lazy: wait for all arrivals, then aggregate the batch
-            leaf_t = cold_delay + arrival_span_s + per_leaf * (t_intra + c.t_agg)
-        cpu += n_node * (cpu_intra + c.cpu_agg)
+            leaf_t = cold_delay + arrival_span_s + per_leaf * (t_intra + t_agg)
+        cpu += n_node * (cpu_intra + cpu_agg)
 
         mid_t = 0.0
         if has_middle:
             mid_in = n_leaves
             if cfg.eager:
-                mid_t = t_intra + mid_in * c.t_agg
+                mid_t = t_intra + mid_in * t_agg
             else:
-                mid_t = mid_in * t_intra + mid_in * c.t_agg
-            cpu += mid_in * (cpu_intra + c.cpu_agg)
+                mid_t = mid_in * t_intra + mid_in * t_agg
+            cpu += mid_in * (cpu_intra + cpu_agg)
         node_times.append(leaf_t + mid_t)
         if node != top:
             inter_transfers += 1
@@ -169,10 +196,10 @@ def simulate_round(
     remote = max(0, n_used - 1)
     t_in_top = c.t_inter_node if remote else t_intra
     if cfg.eager:
-        top_t = t_in_top + n_used * c.t_agg
+        top_t = t_in_top + n_used * t_agg
     else:
-        top_t = remote * c.t_inter_node + t_intra + n_used * c.t_agg
-    cpu += remote * (c.cpu_inter_node + c.cpu_agg) + c.cpu_agg
+        top_t = remote * c.t_inter_node + t_intra + n_used * t_agg
+    cpu += remote * (c.cpu_inter_node + cpu_agg) + cpu_agg
     cpu += cpu_intra * 1
 
     act = (max(node_times) if node_times else 0.0) + top_t + (

@@ -1,5 +1,6 @@
 from repro.kernels.fedavg.ops import (
     eager_accumulate,
+    fedavg_accumulate_k,
     fedavg_reduce,
     fedavg_reduce_tree,
     flatten_update,
@@ -8,6 +9,7 @@ from repro.kernels.fedavg.ops import (
 
 __all__ = [
     "eager_accumulate",
+    "fedavg_accumulate_k",
     "fedavg_reduce",
     "fedavg_reduce_tree",
     "flatten_update",

@@ -8,7 +8,11 @@ hot ops are:
     and each tree level's combine);
   * ``eager_accumulate`` — acc += w·u with ``input_output_aliasing`` so
     the accumulator is updated *in place* (the kernel-level analogue of
-    LIFL's zero-copy shared-memory consume; eager timing, App-G).
+    LIFL's zero-copy shared-memory consume; eager timing, App-G);
+  * ``fedavg_accumulate_k`` — K-way burst fold: acc += Σ_k w[k]·u[k, :]
+    with the accumulator aliased, one grid sweep over the (K, N) slab —
+    a burst of K arrivals costs one read of the accumulator, not K
+    (the batched drain in core/aggregation.py).
 
 Memory-bound streaming: N is tiled into lane-aligned VMEM blocks
 (BLOCK_N = 64·128 elements = 32 KiB fp32 per operand slab); the K axis
@@ -65,6 +69,44 @@ def _accum_kernel(acc_ref, u_ref, w_ref, o_ref):
     u = u_ref[...].astype(jnp.float32)
     w = w_ref[0, 0]
     o_ref[...] = (acc + w * u).astype(o_ref.dtype)
+
+
+def _accum_k_kernel(acc_ref, w_ref, u_ref, o_ref):
+    """One N-block of acc += Σ_k w[k]·u[k, :] (fp32 accumulate)."""
+    acc = acc_ref[...].astype(jnp.float32)        # (BLOCK_N,)
+    u = u_ref[...].astype(jnp.float32)            # (K, BLOCK_N)
+    w = w_ref[...].astype(jnp.float32)            # (K, 1)
+    o_ref[...] = (acc + jnp.sum(u * w, axis=0)).astype(o_ref.dtype)
+
+
+def fedavg_accumulate_k_pallas(
+    acc: jnp.ndarray,       # (N,) fp32 running Σ w·u
+    updates: jnp.ndarray,   # (K, N) burst slab
+    weights: jnp.ndarray,   # (K,)
+    *,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """K-way in-place burst fold: output aliases ``acc`` (zero-copy);
+    the K axis stays VMEM-resident per block so each update element is
+    read exactly once and the accumulator once per block."""
+    K, N = updates.shape
+    block_n = min(block_n, N)
+    grid = (pl.cdiv(N, block_n),)
+    w2 = weights.reshape(K, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _accum_k_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),       # weights resident
+            pl.BlockSpec((K, block_n), lambda i: (0, i)),  # burst slab
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), acc.dtype),
+        input_output_aliases={0: 0},  # acc consumed in place
+        interpret=interpret,
+    )(acc, w2, updates)
 
 
 def eager_accumulate_pallas(

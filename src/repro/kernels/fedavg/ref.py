@@ -17,3 +17,16 @@ def eager_accumulate_ref(acc: jnp.ndarray, update: jnp.ndarray,
         acc.astype(jnp.float32)
         + jnp.float32(weight) * update.astype(jnp.float32)
     ).astype(acc.dtype)
+
+
+def fedavg_accumulate_k_ref(acc: jnp.ndarray, updates: jnp.ndarray,
+                            weights: jnp.ndarray) -> jnp.ndarray:
+    """(N,) + (K, N) × (K,) -> (N,): running-sum burst fold (weights raw)."""
+    return (
+        acc.astype(jnp.float32)
+        + jnp.sum(
+            updates.astype(jnp.float32)
+            * weights.astype(jnp.float32)[:, None],
+            axis=0,
+        )
+    ).astype(acc.dtype)

@@ -39,6 +39,7 @@ from repro.core import (
     SockMap,
     fedavg_oracle,
 )
+from repro.core.engine import make_engine
 from repro.core.reuse import ExecutableCache
 from repro.fl.round import AggregationConfig, build_train_step
 from repro.fl.server import apply_server_opt, init_server_state
@@ -95,12 +96,18 @@ class FederatedTrainer:
         round_cfg: Optional[RoundConfig] = None,
         server_opt: str = "fedavg",
         server_lr: float = 1.0,
+        agg_engine: str = "auto",
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 5,
         seed: int = 0,
     ):
         self.model = model
         self.params = params
+        self.agg_engine = agg_engine
+        # warm engines keyed by aggregator id: a re-created aggregator
+        # at the same tree position re-enters the next round with its
+        # accumulator/scratch already resident (§5.3 at the fold level)
+        self._engines: Dict[str, Any] = {}
         self.clients = {c.info.client_id: c for c in clients}
         self.nodes = nodes or {
             f"node{i}": NodeState(node=f"node{i}", max_capacity=20.0)
@@ -118,6 +125,14 @@ class FederatedTrainer:
         self.ckpt = AsyncCheckpointer(checkpoint_dir) if checkpoint_dir else None
         self.checkpoint_every = checkpoint_every
         self.log: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def _warm_engine(self, agg_id: str):
+        eng = self._engines.get(agg_id)
+        if eng is None:
+            eng = make_engine(self.agg_engine)
+            self._engines[agg_id] = eng
+        return eng
 
     # ------------------------------------------------------------------
     def run_round(self, *, lr: float = 0.01, batch_size: int = 32,
@@ -142,6 +157,7 @@ class FederatedTrainer:
             eager=self.round_cfg.eager,
             sidecar=EventSidecar("top", self.metrics),
             on_complete=on_top,
+            engine=self._warm_engine(f"top@{top_node}"),
         )
 
         # per-node middle aggregators feeding the top
@@ -166,6 +182,7 @@ class FederatedTrainer:
                     eager=self.round_cfg.eager,
                     sidecar=EventSidecar(f"mid@{node}", self.metrics),
                     on_complete=done,
+                    engine=self._warm_engine(f"mid@{node}"),
                 )
 
             mids[node] = make_mid()
@@ -200,16 +217,21 @@ class FederatedTrainer:
             mids[node].recv(env)
             accepted += 1
 
-        # close out mids that got fewer than planned (stragglers)
+        # close out mids that got fewer than planned (stragglers); under
+        # lazy timing nothing has folded yet — the queued envelopes are
+        # the round's updates, so the goal is count + queue and flush's
+        # batched drain performs the whole aggregation here
         for node, mid in mids.items():
-            if not mid.done and mid.state.count > 0:
-                mid.goal = mid.state.count
+            if not mid.done and (mid.state.count > 0 or mid.fifo):
+                mid.goal = mid.state.count + len(mid.fifo)
                 mid.flush()
-                mid._send()
-        if not top.done and top.state.count > 0:
-            top.goal = top.state.count
+                if not mid.done:
+                    mid._send()
+        if not top.done and (top.state.count > 0 or top.fifo):
+            top.goal = top.state.count + len(top.fifo)
             top.flush()
-            top._send()
+            if not top.done:
+                top._send()
 
         # --- server applies the aggregated update -----------------------
         if "delta" in top_state:
@@ -221,6 +243,11 @@ class FederatedTrainer:
         version = self.coordinator.finish_round()
         if self.ckpt and version % self.checkpoint_every == 0:
             self.ckpt.submit(version, self.params)
+
+        # round over: hand accumulators back so next round's aggregators
+        # at the same positions start warm instead of reallocating
+        for eng in self._engines.values():
+            eng.recycle()
 
         rec = {
             "round": plan.round_id,

@@ -1,0 +1,250 @@
+"""Aggregation-engine correctness: every backend (naive / blocked / jnp /
+pallas_interpret) against ``fedavg_oracle``, through both the raw
+``FedAvgState`` fold API and the full ``Aggregator`` pipeline (eager vs
+lazy timing, bursty arrival orders, K-way batched drain), plus the
+warm-pool buffer-reuse contract (§5.3 at the fold level)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregator,
+    AggregatorPool,
+    FedAvgState,
+    InProcObjectStore,
+    Role,
+    fedavg_oracle,
+    make_engine,
+)
+from repro.core.engine import BlockedNumpyEngine
+from repro.core.gateway import UpdateEnvelope
+from repro.core.sidecar import EventSidecar, MetricsMap
+
+ENGINES = ["naive", "blocked", "jnp", "pallas_interpret"]
+RNG = np.random.default_rng(7)
+
+
+def _updates(k=6, n=1000, dtype=np.float32):
+    us = [RNG.normal(size=(n,)).astype(dtype) for _ in range(k)]
+    ws = [float(w) for w in RNG.uniform(0.5, 8.0, size=k)]
+    return us, ws
+
+
+def _feed(agg, store, us, ws):
+    for u, w in zip(us, ws):
+        key = store.put(u)
+        agg.recv(UpdateEnvelope(key, 0, "c", w, enqueue_ts=0.0))
+
+
+# ---------------------------------------------------------------------------
+# FedAvgState-level: fold / fold_many / merge per backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_sequential_fold_matches_oracle(engine):
+    us, ws = _updates()
+    st = FedAvgState(engine=make_engine(engine))
+    for u, w in zip(us, ws):
+        st.fold(u, w)
+    got, weight = st.result()
+    np.testing.assert_allclose(got, fedavg_oracle(us, ws), rtol=1e-5, atol=1e-5)
+    assert weight == pytest.approx(sum(ws))
+    assert st.count == len(us)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("n", [64, 999, 64 * 1024 + 17])  # block remainders
+def test_batched_fold_matches_oracle(engine, n):
+    us, ws = _updates(k=5, n=n)
+    st = FedAvgState(engine=make_engine(engine))
+    st.fold_many(us, ws)
+    got, _ = st.result()
+    np.testing.assert_allclose(got, fedavg_oracle(us, ws), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_merge_partials_matches_oracle(engine):
+    us, ws = _updates(k=7)
+    a = FedAvgState(engine=make_engine(engine))
+    b = FedAvgState(engine=make_engine(engine))
+    for u, w in zip(us[:3], ws[:3]):
+        a.fold(u, w)
+    b.fold_many(us[3:], ws[3:])
+    a.merge(b)
+    got, _ = a.result()
+    np.testing.assert_allclose(got, fedavg_oracle(us, ws), rtol=1e-5, atol=1e-5)
+
+
+def test_blocked_reads_view_without_copy_or_alloc():
+    """The blocked fold consumes read-only store views in place and does
+    zero per-fold allocation after warm-up."""
+    eng = BlockedNumpyEngine()
+    us, ws = _updates(k=4, n=50_000)
+    for u in us:
+        u.flags.writeable = False            # store.get() contract
+    acc = eng.begin(us[0].size)
+    eng.fold(acc, us[0], ws[0])
+    allocs = eng.buffer_allocs
+    eng.fold_many(acc, us[1:], ws[1:])
+    assert eng.buffer_allocs == allocs       # no new buffers post warm-up
+
+
+# ---------------------------------------------------------------------------
+# Aggregator-level: eager vs lazy, bursty arrivals, batched drain
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("eager", [True, False])
+def test_aggregator_end_to_end_matches_oracle(engine, eager):
+    us, ws = _updates(k=9)
+    store = InProcObjectStore()
+    agg = Aggregator("a", store, goal=len(us), eager=eager,
+                     engine=engine, batch_k=4)
+    _feed(agg, store, us, ws)
+    if not eager:
+        agg.flush()
+    assert agg.done
+    got, weight = agg.result
+    np.testing.assert_allclose(got, fedavg_oracle(us, ws), rtol=1e-5, atol=1e-5)
+    assert weight == pytest.approx(sum(ws))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_bursty_arrival_order_invariance(engine):
+    """Permuted + bursty arrivals (lazy queue drained in K-way batches)
+    agree with in-order eager arrival bit-for-bit within tolerance."""
+    us, ws = _updates(k=11)
+    perm = RNG.permutation(len(us))
+    results = []
+    for order, eager, batch_k in (
+        (range(len(us)), True, 1),       # in-order, fold-on-arrival
+        (perm, False, 8),                # permuted burst, batched drain
+        (perm[::-1], False, 3),          # reversed burst, ragged batches
+    ):
+        store = InProcObjectStore()
+        agg = Aggregator("a", store, goal=len(us), eager=eager,
+                         engine=engine, batch_k=batch_k)
+        _feed(agg, store, [us[i] for i in order], [ws[i] for i in order])
+        if not eager:
+            agg.flush()
+        assert agg.done
+        results.append(agg.result[0])
+    oracle = fedavg_oracle(us, ws)
+    for got in results:
+        np.testing.assert_allclose(got, oracle, rtol=1e-5, atol=1e-5)
+
+
+def test_drain_batches_reported_to_sidecar():
+    """Lazy drain folds in K-way batches — the sidecar sees fewer, larger
+    aggregate events; the updates total is conserved."""
+    us, ws = _updates(k=10)
+    store = InProcObjectStore()
+    mm = MetricsMap()
+    agg = Aggregator("a", store, goal=len(us), eager=False, engine="blocked",
+                     batch_k=4, sidecar=EventSidecar("a", mm))
+    _feed(agg, store, us, ws)
+    agg.flush()
+    total, events = mm.peek("a", "agg_updates")
+    assert total == len(us)
+    assert events == 3                       # 4 + 4 + 2
+
+    # satellite: InProcObjectStore.meta() feeds real rx_bytes now
+    rx, _ = mm.peek("a", "rx_bytes")
+    assert rx == sum(u.nbytes for u in us)
+
+
+def test_goal_overshoot_leaves_extra_updates_queued():
+    us, ws = _updates(k=6)
+    store = InProcObjectStore()
+    agg = Aggregator("a", store, goal=4, eager=False, engine="blocked",
+                     batch_k=8)
+    _feed(agg, store, us, ws)
+    agg.flush()
+    assert agg.done and agg.state.count == 4  # batch clamped to the goal
+    assert len(agg.fifo) == 2                 # stragglers left queued
+    np.testing.assert_allclose(
+        agg.result[0], fedavg_oracle(us[:4], ws[:4]), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# warm pool keeps engine buffers across release/acquire (§5.3)
+# ---------------------------------------------------------------------------
+
+def test_pool_reuse_keeps_warm_engine_buffers():
+    pool = AggregatorPool(cold_start_s=1.0, engine="blocked")
+    inst, _ = pool.acquire("node0", Role.LEAF)
+    assert inst.engine is None               # lazy: sims never pay
+    eng = pool.engine_for(inst)
+    assert isinstance(eng, BlockedNumpyEngine)
+
+    us, ws = _updates(k=3, n=20_000)
+    acc = eng.begin(us[0].size)
+    eng.fold_many(acc, us, ws)
+    allocs = eng.buffer_allocs
+    pool.release(inst.agg_id)
+
+    inst2, delay = pool.acquire("node0", Role.MIDDLE)
+    assert inst2.engine is eng and delay == 0.0   # same warm runtime
+    acc2 = eng.begin(us[0].size)                  # buffer reused, re-zeroed
+    assert eng.buffer_allocs == allocs
+    eng.fold(acc2, us[0], ws[0])
+    np.testing.assert_allclose(
+        acc2, np.float32(ws[0]) * us[0], rtol=1e-5, atol=1e-5)
+
+
+def test_blocked_begin_while_busy_is_safe():
+    """A second begin() while the warm accumulator is handed out must
+    not corrupt or untrack it; after recycle the warm buffer is reused
+    with no fresh allocation."""
+    eng = BlockedNumpyEngine()
+    a = eng.begin(64)
+    eng.fold(a, np.ones(64, np.float32), 2.0)
+    b = eng.begin(64)                   # one-off: warm buffer is busy
+    assert b is not a
+    np.testing.assert_allclose(a, 2.0)  # first handle untouched
+    allocs = eng.buffer_allocs
+    eng.recycle(b)                      # not the warm buffer: no-op
+    c = eng.begin(64)
+    assert c is not a and eng.buffer_allocs == allocs + 1
+    eng.recycle(a)
+    d = eng.begin(64)                   # warm buffer back in rotation
+    assert d is a and eng.buffer_allocs == allocs + 1
+
+
+def test_jax_engine_recycle_reuses_device_buffer():
+    """recycle() + begin() rewinds the donated device buffer to zeros
+    instead of allocating — buffer_allocs stays flat across rounds."""
+    from repro.core.engine import JaxEngine
+
+    eng = JaxEngine(impl="jnp")
+    us, ws = _updates(k=3, n=512)
+    acc = eng.begin(512)
+    for u, w in zip(us, ws):
+        acc = eng.fold(acc, u, w)
+    allocs = eng.buffer_allocs
+    eng.recycle(acc)
+    acc2 = eng.begin(512)                     # warm: donated zeroing
+    assert eng.buffer_allocs == allocs
+    np.testing.assert_allclose(np.asarray(acc2), 0.0)
+    acc2 = eng.fold(acc2, us[0], ws[0])
+    np.testing.assert_allclose(np.asarray(acc2), np.float32(ws[0]) * us[0],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_simulation_engine_speedup_strict():
+    from repro.core.simulation import DataPlaneCosts
+
+    c = DataPlaneCosts()
+    assert c.t_agg_for("naive") == c.t_agg
+    assert c.t_agg_for("blocked") < c.t_agg
+    assert c.t_agg_for("auto") < c.t_agg      # resolves like make_engine
+    with pytest.raises(ValueError):
+        c.t_agg_for("warpdrive")
+
+
+def test_object_store_meta():
+    store = InProcObjectStore()
+    x = RNG.normal(size=(17, 3)).astype(np.float32)
+    key = store.put(x)
+    m = store.meta(key)
+    assert m.nbytes == x.nbytes and m.shape == (17, 3)
+    assert m.dtype == "float32" and m.sealed

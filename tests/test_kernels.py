@@ -6,7 +6,12 @@ import numpy as np
 import pytest
 
 from repro.core.aggregation import fedavg_oracle
-from repro.kernels.fedavg import eager_accumulate, fedavg_reduce, fedavg_reduce_tree
+from repro.kernels.fedavg import (
+    eager_accumulate,
+    fedavg_accumulate_k,
+    fedavg_reduce,
+    fedavg_reduce_tree,
+)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.quantize import QBLOCK, dequantize, quantize
@@ -42,6 +47,24 @@ def test_eager_accumulate_pallas_vs_ref(N):
     ref = acc + 1.75 * u
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("K,N", [(2, 64), (5, 999), (8, 64 * 128 + 1)])
+def test_fedavg_accumulate_k_pallas_vs_ref(K, N):
+    """K-way burst fold (aliased accumulator, single grid sweep)."""
+    acc = jnp.asarray(RNG.normal(size=(N,)), jnp.float32)
+    U = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    W = jnp.asarray(RNG.uniform(0.5, 4.0, size=(K,)), jnp.float32)
+    got = fedavg_accumulate_k(acc.copy(), U, W, impl="pallas_interpret")
+    ref = acc + jnp.sum(U * W[:, None], axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # a burst then one single fold == K+1 sequential folds
+    seq = acc
+    for k in range(K):
+        seq = eager_accumulate(seq, U[k], W[k], impl="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(seq),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_fedavg_reduce_tree_matches_oracle():

@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't break collection
 from hypothesis import given, settings, strategies as st
 
 import repro.core as core
