@@ -18,7 +18,28 @@ import sys
 import time
 
 # suites whose rows land in the --json perf-trajectory file
-JSON_SUITES = ("agg_kernel", "dataplane_fig7")
+JSON_SUITES = ("agg_kernel", "dataplane_fig7", "shmrt")
+
+# PR-1 acceptance floor: blocked fold ≥ 2× naive.  A regression here
+# silently rots every throughput claim downstream, so the harness fails
+# loudly instead of recording the bad rows.
+ENGINE_FOLD_FLOOR = 2.0
+
+
+def _check_engine_fold_floor(rows) -> None:
+    """Parse engine_fold_* speedups out of the agg_kernel rows and die
+    loudly if the blocked/naive ratio fell below the PR-1 floor."""
+    import re
+
+    for r in rows:
+        if r["bench"] != "agg_kernel" or "speedup_blocked" not in r["derived"]:
+            continue
+        m = re.search(r"speedup_blocked=([\d.]+)x", r["derived"])
+        if m and float(m.group(1)) < ENGINE_FOLD_FLOOR:
+            sys.exit(
+                f"FATAL: engine_fold regression — blocked/naive = "
+                f"{m.group(1)}x < {ENGINE_FOLD_FLOOR}x floor "
+                f"(row {r['case']!r}; see ROADMAP.md perf trajectory)")
 
 
 def main() -> None:
@@ -43,6 +64,7 @@ def main() -> None:
         bench_hierarchy,
         bench_orchestration,
         bench_queuing,
+        bench_shmrt,
         bench_tta,
     )
 
@@ -53,6 +75,7 @@ def main() -> None:
         "orchestration_fig8": bench_orchestration.run,
         "control_overhead": bench_control_overhead.run,
         "agg_kernel": bench_agg_kernel.run,
+        "shmrt": bench_shmrt.run,
         "tta_fig9": bench_tta.run,
     }
     if args.only:
@@ -72,6 +95,8 @@ def main() -> None:
                   f"{r['derived']}", flush=True)
         if name in JSON_SUITES:
             json_rows.extend(rows)
+        if name == "agg_kernel":
+            _check_engine_fold_floor(rows)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
 
     if args.json:

@@ -1,0 +1,98 @@
+"""Version-compat shims for the pinned jax.
+
+The code targets the modern mesh API (``jax.set_mesh``,
+``jax.shard_map(..., axis_names=..., check_vma=...)``); the image pins
+jax 0.4.37, where neither exists.  Call sites go through these shims so
+the semantics stay identical on both API generations:
+
+  * ``use_mesh(mesh)``   — context manager activating ``mesh``:
+    ``jax.set_mesh`` (new) → ``jax.sharding.use_mesh`` (mid) → the
+    ``Mesh`` object itself (0.4.x: ``Mesh.__enter__`` installs the
+    resource env used by jit/shard_map).
+  * ``shard_map(...)``   — new-style partial-manual mapping: axes in
+    ``axis_names`` are manual, the rest stay GSPMD-auto.  On 0.4.x this
+    lowers to ``jax.experimental.shard_map.shard_map`` with
+    ``auto = mesh.axis_names - axis_names`` and
+    ``check_rep = check_vma``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Set
+
+import jax
+
+
+def use_mesh(mesh):
+    """``with use_mesh(mesh):`` — works on every supported jax."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    um = getattr(jax.sharding, "use_mesh", None)
+    if um is not None:
+        return um(mesh)
+    return mesh  # 0.4.x: Mesh is itself a context manager
+
+
+# 0.4.x jaxlib hard-crashes (SIGFPE in the SPMD partitioner) on nested
+# shard_map — callers with a nested-manual structure (fl/round's
+# per-pod hierarchy wrapping a model that shard_maps internally) must
+# use a non-nested formulation when this is False.
+NESTED_SHARD_MAP_OK = hasattr(jax, "shard_map")
+
+
+def axis_size(name) -> int:
+    """``jax.lax.axis_size`` (new) — on 0.4.x ``psum(1, name)``, which
+    folds to the static axis size."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)
+
+
+def _context_mesh():
+    """The mesh installed by ``use_mesh`` on 0.4.x (resource env)."""
+    from jax._src import mesh as mesh_lib
+
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m.empty:
+        raise ValueError(
+            "shard_map without an explicit mesh needs an active "
+            "`with use_mesh(mesh):` context"
+        )
+    return m
+
+
+def shard_map(
+    f,
+    mesh=None,
+    *,
+    in_specs: Any,
+    out_specs: Any,
+    axis_names: Optional[Set[str]] = None,
+    check_vma: bool = True,
+):
+    """New-API ``jax.shard_map`` signature on old and new jax.
+
+    ``mesh=None`` resolves the context mesh (``use_mesh``), matching the
+    modern API's behavior."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kwargs = dict(in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return sm(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+
+    if mesh is None:
+        mesh = _context_mesh()
+    # Always full-manual on 0.4.x: partial-auto (``auto=...``) lowers
+    # ``axis_index`` to a PartitionId instruction the SPMD partitioner
+    # rejects.  Axes not named in the specs are simply replicated, which
+    # preserves semantics (at worst it costs an extra boundary gather).
+    return legacy_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=bool(check_vma),
+    )

@@ -72,6 +72,10 @@ class RoundConfig:
     fan_in: int = 2                # leaf fan-in I (§5.2)
     placement_policy: str = "bestfit"
     eager: bool = True
+    # "inproc": the single-process tree (simulator-faithful, any OS);
+    # "shmproc": real aggregator worker processes over shared-memory
+    # rings (repro.runtime.shmrt) — Linux, event-driven, zero-copy
+    runtime: str = "inproc"
 
 
 @dataclass

@@ -15,6 +15,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size as compat_axis_size
+
 BLOCK = 256
 
 
@@ -58,6 +60,28 @@ def dequantize_tree(qs, meta, treedef, block: int = BLOCK):
 # ---------------------------------------------------------------------------
 
 
+def _quantize_blocks_last_axis(x: jnp.ndarray, block: int):
+    """Shape-preserving int8 block quantization along the last axis —
+    the wire format shared by the manual-pod ring exchange and the
+    0.4.x fallback's local roundtrip.  Returns (q int8, safe fp32
+    scales, original last-axis length); dequantize with
+    ``(q.astype(f32) * safe[..., None]).reshape(..)[..., :last]``."""
+    xf = x.astype(jnp.float32)
+    if xf.ndim == 0:
+        xf = xf[None]
+    last = xf.shape[-1]
+    b = min(block, last)
+    nb = -(-last // b)
+    pad = nb * b - last
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, pad)])
+    blocks = xf.reshape(*xf.shape[:-1], nb, b)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q, safe, last
+
+
 def pod_mean_compressed(delta: Any, pod_axis: str, block: int = BLOCK) -> Any:
     """Weighted-mean over the pod axis moving int8 on the wire.
 
@@ -71,25 +95,14 @@ def pod_mean_compressed(delta: Any, pod_axis: str, block: int = BLOCK) -> Any:
     ~1 byte/element of the device's shard, as intended."""
 
     def leaf(x):
-        xf = x.astype(jnp.float32)
-        if xf.ndim == 0:
-            xf = xf[None]
-        last = xf.shape[-1]
-        b = min(block, last)
-        nb = -(-last // b)
-        pad = nb * b - last
-        if pad:
-            xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, pad)])
-        blocks = xf.reshape(*xf.shape[:-1], nb, b)
-        scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
-        safe = jnp.where(scale > 0, scale, 1.0)
-        q = jnp.clip(jnp.round(blocks / safe[..., None]), -127, 127).astype(jnp.int8)
+        q, safe, last = _quantize_blocks_last_axis(x, block)
+        padded_shape = q.shape[:-2] + (q.shape[-2] * q.shape[-1],)
 
         # ring exchange: P-1 point-to-point hops of the LOCAL int8 shard
         # (all_gather's concatenated output loses the intra-pod sharding
         # under GSPMD and replicates — measured 334 s of DCN on kimi;
         # ppermute moves exactly shard_bytes × (P−1) per device)
-        n_pods = jax.lax.axis_size(pod_axis)
+        n_pods = compat_axis_size(pod_axis)
         perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
         acc = q.astype(jnp.float32) * safe[..., None]
         qc, sc = q, safe
@@ -98,8 +111,24 @@ def pod_mean_compressed(delta: Any, pod_axis: str, block: int = BLOCK) -> Any:
             sc = jax.lax.ppermute(sc, pod_axis, perm)
             acc = acc + qc.astype(jnp.float32) * sc[..., None]
         deq = acc / n_pods
-        out = deq.reshape(*xf.shape)[..., :last]
+        out = deq.reshape(*padded_shape)[..., :last]
         return out.reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(leaf, delta)
+
+
+def fake_quantize_tree(delta: Any, block: int = BLOCK) -> Any:
+    """Local int8 quantize→dequantize roundtrip per leaf — the wire
+    precision of :func:`pod_mean_compressed` without its collectives.
+    Used by the 0.4.x hierarchical fallback (no manual-`pod` region to
+    run the ring exchange in); blocks run along the last axis, matching
+    the on-the-wire layout."""
+
+    def leaf(x):
+        q, safe, last = _quantize_blocks_last_axis(x, block)
+        padded_shape = q.shape[:-2] + (q.shape[-2] * q.shape[-1],)
+        deq = (q.astype(jnp.float32) * safe[..., None]).reshape(*padded_shape)
+        return deq[..., :last].reshape(x.shape).astype(x.dtype)
 
     return jax.tree.map(leaf, delta)
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.compat import use_mesh
 from repro.core import (
     Aggregator,
     AggregatorPool,
@@ -97,6 +98,7 @@ class FederatedTrainer:
         server_opt: str = "fedavg",
         server_lr: float = 1.0,
         agg_engine: str = "auto",
+        runtime: Optional[str] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 5,
         seed: int = 0,
@@ -114,6 +116,9 @@ class FederatedTrainer:
             for i in range(5)
         }
         self.round_cfg = round_cfg or RoundConfig(aggregation_goal=8)
+        # selectable aggregation runtime: explicit arg > round config
+        self.runtime = runtime if runtime is not None else self.round_cfg.runtime
+        self._shmrt = None  # lazy ShmRuntime (persists across rounds: warm)
         self.server_opt = server_opt
         self.server_lr = server_lr
         self.server_state = init_server_state(server_opt, params)
@@ -140,6 +145,9 @@ class FederatedTrainer:
         t0 = time.perf_counter()
         plan = self.coordinator.plan_round(self.round_cfg)
         goal = self.round_cfg.aggregation_goal
+        if self.runtime == "shmproc":
+            return self._run_round_shmproc(
+                plan, goal, lr=lr, batch_size=batch_size, epochs=epochs, t0=t0)
 
         # --- build the aggregation tree from the plan -------------------
         stores = {n: InProcObjectStore(n) for n in plan.hierarchy.nodes_used}
@@ -188,34 +196,16 @@ class FederatedTrainer:
             mids[node] = make_mid()
 
         # --- clients train; updates land at their node's middle ---------
-        selected = plan.selected
-        client_nodes: Dict[str, str] = {}
-        for node, idxs in assignment.items():
-            for i in idxs:
-                if i < len(selected):
-                    client_nodes[selected[i].client_id] = node
+        from repro.core.gateway import UpdateEnvelope
 
-        losses = []
-        accepted = 0
-        for cid, node in client_nodes.items():
-            if accepted >= goal:
-                break  # aggregation goal reached; stragglers ignored
-            cr = self.clients[cid]
-            out = cr.local_update(
-                self.model, self.params, lr=lr, batch_size=batch_size,
-                epochs=epochs, rng=self.rng,
-            )
-            if out is None:
-                continue  # failed/hibernating client — over-provisioning absorbs
-            delta, weight = out
-            flat, _, _ = _flatten_tree(delta)
+        def deliver(node, cid, flat, weight):
             key = stores[node].put(flat)
-            from repro.core.gateway import UpdateEnvelope
-
             env = UpdateEnvelope(key, plan.round_id, cid, weight,
                                  enqueue_ts=time.perf_counter())
             mids[node].recv(env)
-            accepted += 1
+
+        accepted, _ = self._train_cohort(
+            plan, goal, deliver, lr=lr, batch_size=batch_size, epochs=epochs)
 
         # close out mids that got fewer than planned (stragglers); under
         # lazy timing nothing has folded yet — the queued envelopes are
@@ -260,6 +250,185 @@ class FederatedTrainer:
         }
         self.log.append(rec)
         return rec
+
+    # ------------------------------------------------------------------
+    def _train_cohort(self, plan, goal, deliver, *, lr, batch_size, epochs
+                      ) -> Tuple[int, Dict[str, int]]:
+        """Run the selected clients' local SGD and hand each flattened
+        update to ``deliver(node, client_id, flat, weight)`` — the one
+        cohort loop both runtimes share, so selection/failure semantics
+        can't drift between them.  Returns (accepted, per-node counts)."""
+        assignment = plan.placement.assignment
+        selected = plan.selected
+        client_nodes: Dict[str, str] = {}
+        for node, idxs in assignment.items():
+            for i in idxs:
+                if i < len(selected):
+                    client_nodes[selected[i].client_id] = node
+
+        accepted = 0
+        dispatched: Dict[str, int] = {node: 0 for node in assignment}
+        for cid, node in client_nodes.items():
+            if accepted >= goal:
+                break  # aggregation goal reached; stragglers ignored
+            cr = self.clients[cid]
+            out = cr.local_update(
+                self.model, self.params, lr=lr, batch_size=batch_size,
+                epochs=epochs, rng=self.rng,
+            )
+            if out is None:
+                continue  # failed/hibernating client — over-provisioning absorbs
+            delta, weight = out
+            flat, _, _ = _flatten_tree(delta)
+            deliver(node, cid, flat, weight)
+            dispatched[node] += 1
+            accepted += 1
+        return accepted, dispatched
+
+    # ------------------------------------------------------------------
+    # shmproc: the real multi-process runtime (repro.runtime.shmrt)
+    # ------------------------------------------------------------------
+    def _ensure_shmrt(self):
+        if self._shmrt is None:
+            from repro.runtime.shmrt import ShmRuntime
+
+            self._shmrt = ShmRuntime(metrics=self.metrics)
+        return self._shmrt
+
+    def _flat_params_size(self) -> int:
+        # must equal len(_flatten_tree(params)[0]): np.prod(()) is
+        # already 1 for scalars, and a zero-size leaf contributes 0
+        leaves = jax.tree.leaves(self.params)
+        return int(sum(int(np.prod(np.shape(l))) for l in leaves))
+
+    def _run_round_shmproc(self, plan, goal, *, lr, batch_size, epochs, t0
+                           ) -> Dict[str, float]:
+        """One round where each planned middle aggregator is a real
+        worker process: client updates land in the shared-memory store,
+        16-byte keys ride the rings, the parent folds the published
+        partial sums zero-copy out of the store (top aggregator)."""
+        from repro.runtime.shmrt import WorkerCrash
+
+        rt = self._ensure_shmrt()
+        cold0 = rt.stats["cold_starts"]
+        warm0 = rt.stats["warm_starts"]
+        n_elems = self._flat_params_size()
+        assignment = plan.placement.assignment
+        top_node = plan.top_node or (next(iter(assignment)) if assignment
+                                     else "node0")
+
+        for node, idxs in assignment.items():
+            rt.submit_task(f"mid@{node}", goal=len(idxs), n_elems=n_elems,
+                           round_id=plan.round_id)
+
+        # --- clients train; keys dispatched to their node's worker ------
+        update_keys: List[str] = []
+
+        def deliver(node, cid, flat, weight):
+            key = rt.store.put(flat)
+            update_keys.append(key)
+            rt.dispatch(f"mid@{node}", key, weight, round_id=plan.round_id)
+
+        accepted, dispatched = self._train_cohort(
+            plan, goal, deliver, lr=lr, batch_size=batch_size, epochs=epochs)
+
+        # close out stragglers: short tasks publish what they folded
+        counted = set()  # agg_ids a partial is expected from
+        for node in assignment:
+            if dispatched[node] == 0 or dispatched[node] < len(assignment[node]):
+                rt.drain(f"mid@{node}")
+            if dispatched[node] > 0:
+                counted.add(f"mid@{node}")
+
+        # --- collect partials; crashes lose a subtree, not the round ----
+        partials = []
+        crashes = 0
+        while len(partials) < len(counted):
+            try:
+                for p in rt.collect(len(counted) - len(partials)):
+                    if p.round_id != plan.round_id or p.agg_id not in counted:
+                        # stale leftover from an aborted earlier round
+                        rt.store.destroy(p.key)
+                        continue
+                    partials.append(p)
+            except WorkerCrash as e:
+                crashes += 1
+                # only a crash that takes an *expected* subtree with it
+                # shrinks the quota (a zero-dispatch drain worker or a
+                # warming fork contributes nothing either way)
+                if e.agg_id in counted and not any(
+                        p.agg_id == e.agg_id for p in partials):
+                    counted.discard(e.agg_id)
+        # wait out zero-update drains (EMPTY closures) so a late record
+        # can't collide with next round's task under the same agg_id
+        rt.quiesce(timeout=5.0)
+        partials.sort(key=lambda p: p.agg_id)  # deterministic fold order
+
+        # --- top aggregator: fold partial sums zero-copy from the store -
+        if partials:
+            engine = self._warm_engine(f"top@{top_node}")
+            from repro.core.aggregation import FedAvgState
+
+            state = FedAvgState(engine=engine)
+            sidecar = EventSidecar("top", self.metrics)
+            ta = time.perf_counter()
+            state._ensure_acc(n_elems)
+            for p in partials:
+                view = rt.store.get(p.key)      # zero-copy shm view
+                state.acc = engine.add_partial(state.acc, view)
+                state.weight += p.weight
+                state.count += p.count
+                rt.store.release(p.key)
+            dt = time.perf_counter() - ta
+            sidecar.on_aggregate(len(partials), dt)
+            delta_flat, _ = state.result()
+            sidecar.on_send(delta_flat.nbytes)
+            delta_tree = _unflatten_like(delta_flat, self.params)
+            self.params, self.server_state = apply_server_opt(
+                self.server_opt, self.params, self.server_state, delta_tree,
+                lr=-self.server_lr,
+            )
+            # E_{i,t} from the worker sidecars feeds the capacity model
+            for p in partials:
+                node = p.agg_id.split("@", 1)[-1]
+                if node in self.nodes:
+                    ns = self.nodes[node]
+                    ns.exec_time_s = 0.5 * ns.exec_time_s + 0.5 * max(
+                        p.exec_s, 1e-6)
+
+        for p in partials:
+            rt.store.destroy(p.key)
+        for key in update_keys:
+            rt.store.delete(key)
+
+        version = self.coordinator.finish_round()
+        if self.ckpt and version % self.checkpoint_every == 0:
+            self.ckpt.submit(version, self.params)
+        for eng in self._engines.values():
+            eng.recycle()
+
+        rec = {
+            "round": plan.round_id,
+            "updates": float(accepted),
+            "nodes_used": float(len(assignment)),
+            "inter_node": float(plan.inter_node_updates),
+            # per-round deltas, comparable with the inproc runtime's
+            # plan-level numbers under the same keys
+            "cold_starts": float(rt.stats["cold_starts"] - cold0),
+            "reused": float(rt.stats["warm_starts"] - warm0),
+            "workers": float(len(rt.worker_pids())),
+            "crashes": float(crashes),
+            "wall_s": time.perf_counter() - t0,
+        }
+        self.log.append(rec)
+        return rec
+
+    def close(self) -> None:
+        """Tear down the multi-process runtime (graceful drain + shm
+        unlink).  No-op for the in-proc runtime."""
+        if self._shmrt is not None:
+            self._shmrt.shutdown()
+            self._shmrt = None
 
     # ------------------------------------------------------------------
     def evaluate(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
@@ -328,7 +497,7 @@ class FusedFLTrainer:
 
     # ------------------------------------------------------------------
     def init(self, seed: int = 0) -> None:
-        with jax.set_mesh(self.mesh):
+        with use_mesh(self.mesh):
             self.params = self.model.init(jax.random.PRNGKey(seed))
             self.server_state = init_server_state(self.agg.server_opt, self.params)
 
@@ -348,7 +517,7 @@ class FusedFLTrainer:
     def train_round(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
         assert self.params is not None, "call init() or maybe_restore() first"
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
-        with jax.set_mesh(self.mesh):
+        with use_mesh(self.mesh):
             self.params, self.server_state, metrics = self.step_fn(
                 self.params, self.server_state, jb
             )

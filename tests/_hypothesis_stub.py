@@ -1,0 +1,159 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API subset
+used by test_properties.py.
+
+The image doesn't ship hypothesis; rather than skipping the property
+suite wholesale, this shim re-implements just enough — ``given``,
+``settings`` profiles, and the six strategies the tests draw from — as
+a deterministic random sampler (fixed per-test seed, ``max_examples``
+draws, with a bias toward boundary values).  No shrinking, no database:
+a failing example is reported verbatim in the assertion message so it
+can be pasted into a regression test.
+
+If real hypothesis is ever installed, test_properties.py prefers it and
+this module goes unused.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    """A draw function + repr, mirroring hypothesis's SearchStrategy."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], label: str):
+        self._draw = draw
+        self.label = label
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:
+        return self.label
+
+
+class strategies:
+    """The `hypothesis.strategies` subset test_properties.py uses."""
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, *, allow_nan: bool = True,
+               width: int = 64) -> _Strategy:
+        def draw(rng: random.Random) -> float:
+            r = rng.random()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.10:
+                return float(max_value)
+            if r < 0.13 and min_value <= 0.0 <= max_value:
+                return 0.0
+            return rng.uniform(min_value, max_value)
+
+        return _Strategy(draw, f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        def draw(rng: random.Random) -> int:
+            r = rng.random()
+            if r < 0.05:
+                return int(min_value)
+            if r < 0.10:
+                return int(max_value)
+            return rng.randint(min_value, max_value)
+
+        return _Strategy(draw, f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random) -> List[Any]:
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw, f"lists({elements!r})")
+
+    @staticmethod
+    def tuples(*parts: _Strategy) -> _Strategy:
+        def draw(rng: random.Random):
+            return tuple(p.example(rng) for p in parts)
+
+        return _Strategy(draw, f"tuples({', '.join(map(repr, parts))})")
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        pool = list(seq)
+
+        def draw(rng: random.Random):
+            return rng.choice(pool)
+
+        return _Strategy(draw, f"sampled_from({pool!r})")
+
+    @staticmethod
+    def dictionaries(keys: _Strategy, values: _Strategy, *,
+                     min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random):
+            n = rng.randint(min_size, max_size)
+            out = {}
+            for _ in range(n * 3):  # distinct-key retry budget
+                if len(out) >= n:
+                    break
+                out[keys.example(rng)] = values.example(rng)
+            while len(out) < min_size:  # keys strategy too small: force
+                out[keys.example(rng)] = values.example(rng)
+            return out
+
+        return _Strategy(draw, "dictionaries(...)")
+
+
+st = strategies
+
+
+class _Profile:
+    def __init__(self, max_examples: int = 100, deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+
+class settings:
+    """Profile registry compatible with hypothesis.settings usage."""
+
+    _profiles = {"default": _Profile()}
+    _current = _profiles["default"]
+
+    def __init__(self, **kwargs):
+        self._profile = _Profile(**kwargs)
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs) -> None:
+        cls._profiles[name] = _Profile(**kwargs)
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = cls._profiles[name]
+
+
+def given(*strats: _Strategy):
+    """Run the test once per generated example (no shrinking)."""
+
+    def deco(fn):
+        # NOTE: the wrapper must expose a ZERO-arg signature — pytest
+        # inspects it and would otherwise treat the strategy-filled
+        # parameters as fixtures (functools.wraps would leak the
+        # original signature via __wrapped__).
+        def wrapper():
+            # deterministic per-test seed: failures reproduce
+            rng = random.Random(f"lifl-{fn.__name__}")
+            for i in range(settings._current.max_examples):
+                example = [s.example(rng) for s in strats]
+                try:
+                    fn(*example)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} falsified on example #{i}: "
+                        f"{example!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

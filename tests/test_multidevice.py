@@ -28,6 +28,7 @@ def test_moe_ep_matches_dense_dispatch():
     high capacity factor)."""
     out = run_forced("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.compat import use_mesh
         from repro.launch.mesh import make_debug_mesh
         from repro.configs import ARCHS
         from repro.models import moe as moe_mod
@@ -39,7 +40,7 @@ def test_moe_ep_matches_dense_dispatch():
         key = jax.random.PRNGKey(0)
         params = moe_mod.init_moe(key, cfg, jnp.float32)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             yd, _ = moe_mod.moe_block(cfg, params, x, impl='dense')
             ye, _ = moe_mod.moe_block(cfg, params, x, impl='ep',
                                        dp_axes=('data',), model_axis='model')
@@ -56,6 +57,7 @@ def test_moe_ep_matches_dense_dispatch():
 def test_sharded_vocab_matches_dense():
     out = run_forced("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import use_mesh
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.launch.mesh import make_debug_mesh
         from repro.models.sharded_vocab import (
@@ -68,7 +70,7 @@ def test_sharded_vocab_matches_dense():
         toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V - 7)
         hid = jax.random.normal(jax.random.PRNGKey(2), (B, S, D))
         labels = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, V - 7)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             # production paths are always jitted (eager shard_map with
             # partial-manual axes rejects unmentioned auto axes)
             e_sh = jax.jit(lambda t, k: embed_lookup(t, k, 'model'))(table, toks)
@@ -107,6 +109,7 @@ def test_hierarchical_equals_flat_aggregation_numerics():
     schedule changes, the math must not."""
     out = run_forced("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.compat import use_mesh
         from functools import partial
         from repro.configs import ARCHS, ShapeConfig
         from repro.fl.round import (AggregationConfig, build_train_step,
@@ -124,7 +127,7 @@ def test_hierarchical_equals_flat_aggregation_numerics():
         batch = {'tokens': jnp.asarray(toks, jnp.int32),
                  'labels': jnp.asarray(np.roll(toks, -1, 1), jnp.int32)}
         results = {}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             for hier in ('flat', 'hierarchical'):
                 agg = AggregationConfig(hierarchy=hier, num_microbatches=2)
                 step, model = build_train_step(cfg, mesh, agg)
@@ -147,6 +150,7 @@ def test_hierarchical_equals_flat_aggregation_numerics():
 def test_int8_pod_compression_small_error():
     out = run_forced("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import use_mesh
         from repro.configs import ARCHS
         from repro.fl.round import AggregationConfig, build_train_step
         from repro.fl.server import init_server_state
@@ -159,7 +163,7 @@ def test_int8_pod_compression_small_error():
         batch = {'tokens': jnp.asarray(toks, jnp.int32),
                  'labels': jnp.asarray(np.roll(toks, -1, 1), jnp.int32)}
         outs = {}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             for comp in ('none', 'int8'):
                 agg = AggregationConfig(hierarchy='hierarchical',
                                          compress=comp, num_microbatches=2)
@@ -186,6 +190,7 @@ def test_mini_dryrun_cell():
     out = run_forced("""
         import jax
         from functools import partial
+        from repro.compat import use_mesh
         from repro.analysis.hlo_cost import parse_hlo_cost
         from repro.configs import ARCHS, ShapeConfig
         from repro.fl.round import (AggregationConfig, abstract_params,
@@ -199,7 +204,7 @@ def test_mini_dryrun_cell():
         shape = ShapeConfig('t', 64, 8, 'train')
         agg = AggregationConfig(num_microbatches=2)
         dp = mdp(mesh)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             step, model = build_train_step(cfg, mesh, agg)
             ap = abstract_params(model)
             ps, ss = train_shardings(model, mesh, agg)

@@ -1,0 +1,334 @@
+"""The multi-process runtime: rings, object-store lifecycle, workers.
+
+Fast tests cover the SPSC ring protocol (wraparound, backpressure,
+cross-process transport) and the store's crash-safety mechanics; the
+``slow``-marked tests drive real forked aggregator workers end-to-end
+(warm reuse, SIGKILL mid-drain + segment reclaim, byte-identical
+hierarchy vs the in-proc path).
+
+    python -m pytest -m slow tests/test_shmrt.py    # multi-process smoke
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import FedAvgState, fedavg_oracle
+from repro.core.engine import make_engine
+from repro.core.objectstore import SharedMemoryObjectStore
+from repro.runtime.shmrt import Record, RecordKind, ShmRuntime, SpscRing, WorkerCrash
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir("/dev/shm"), reason="needs POSIX /dev/shm")
+
+
+def _ring_name(tag: str) -> str:
+    return f"lifltest-{os.getpid()}-{tag}"
+
+
+# ---------------------------------------------------------------------------
+# SPSC ring protocol
+# ---------------------------------------------------------------------------
+
+def test_ring_roundtrip_and_wraparound():
+    with SpscRing(_ring_name("wrap"), nslots=4, create=True) as ring:
+        # 3 full laps over a 4-slot ring
+        for i in range(12):
+            rec = Record(kind=RecordKind.UPDATE, key=f"{i:016x}"[:16],
+                         num_samples=float(i))
+            assert ring.push(rec.pack())
+            got = Record.unpack(ring.pop())
+            assert got.key == rec.key and got.num_samples == float(i)
+        assert ring.pop() is None  # empty
+
+
+def test_ring_full_backpressure():
+    with SpscRing(_ring_name("bp"), nslots=2, create=True) as ring:
+        r = Record(kind=RecordKind.UPDATE).pack()
+        assert ring.push(r) and ring.push(r)
+        assert ring.full()
+        assert not ring.push(r)                  # non-blocking: rejected
+        assert not ring.push(r, timeout=0.05)    # blocking: times out
+        ring.pop()
+        assert ring.push(r)                      # space freed -> accepted
+        assert len(ring) == 2
+
+
+def test_ring_fifo_order_preserved():
+    with SpscRing(_ring_name("fifo"), nslots=64, create=True) as ring:
+        for i in range(50):
+            ring.push(Record(kind=RecordKind.UPDATE, a=i).pack())
+        got = [Record.unpack(r).a for r in ring.pop_many(64)]
+        assert got == list(range(50))
+
+
+def test_ring_cross_process_producer():
+    """A separate (spawned, not forked) process attaches the ring by
+    name and produces; the parent consumes."""
+    name = _ring_name("xproc")
+    with SpscRing(name, nslots=128, create=True) as ring:
+        code = f"""
+        from repro.runtime.shmrt import Record, RecordKind, SpscRing
+        ring = SpscRing({name!r})
+        for i in range(100):
+            assert ring.push(Record(kind=RecordKind.UPDATE, a=i).pack(),
+                             timeout=5.0)
+        ring.close()
+        """
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True, text=True, timeout=60, env=env)
+        assert out.returncode == 0, out.stderr[-2000:]
+        got = [Record.unpack(r).a for r in ring.pop_many(128)]
+        assert got == list(range(100))
+
+
+# ---------------------------------------------------------------------------
+# object store: cross-process + crash safety
+# ---------------------------------------------------------------------------
+
+def test_store_cross_process_get_and_creator_survives():
+    with SharedMemoryObjectStore(prefix=f"lt{os.getpid() & 0xffff:x}") as s:
+        a = np.arange(1000, dtype=np.float32)
+        k = s.put(a)
+        code = f"""
+        import numpy as np
+        from repro.core.objectstore import SharedMemoryObjectStore
+        s = SharedMemoryObjectStore(prefix={s.prefix!r})
+        v = s.get({k!r})
+        assert not v.flags.writeable
+        print(float(v.sum()))
+        s.close()
+        """
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True, text=True, timeout=60, env=env)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert abs(float(out.stdout) - float(a.sum())) < 1e-3
+        # the attacher's exit must not have unlinked the creator's segment
+        assert np.array_equal(s.get(k), a)
+
+
+def test_store_atexit_reclaims_leaked_segments():
+    """A process that creates objects and exits without close() must
+    not leak /dev/shm segments (the crashed-test scenario)."""
+    prefix = f"lk{os.getpid() & 0xffff:x}"
+    code = f"""
+    import numpy as np
+    from repro.core.objectstore import SharedMemoryObjectStore
+    s = SharedMemoryObjectStore(prefix={prefix!r})
+    for _ in range(3):
+        k = s.put(np.ones(4096, np.float32))
+    print(k)  # no close(): the atexit registry must reclaim
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=60, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    leaked = [n for n in os.listdir("/dev/shm") if n.startswith(prefix)]
+    assert leaked == []
+
+
+def test_store_recycles_segments():
+    with SharedMemoryObjectStore(prefix=f"rc{os.getpid() & 0xffff:x}") as s:
+        a = np.full(2048, 3.0, np.float32)
+        k1 = s.put(a)
+        name1 = s.segment_name(k1)
+        s.delete(k1)
+        assert os.path.exists(f"/dev/shm/{name1}")  # parked, not unlinked
+        k2 = s.put(a * 2)                            # same size: reused
+        assert k2 == k1 and s.stats["recycled"] == 1
+        assert np.array_equal(s.get(k2), a * 2)
+    assert not os.path.exists(f"/dev/shm/{name1}")   # close() unlinks
+
+
+# ---------------------------------------------------------------------------
+# multi-process runtime (slow: forks real workers)
+# ---------------------------------------------------------------------------
+
+def _hier_inproc(ups, ws, N):
+    """Reference: same grouping through the in-proc engines."""
+    partials = []
+    for g_ups, g_ws in zip(ups, ws):
+        st = FedAvgState(engine=make_engine("blocked"))
+        st.fold_many(list(g_ups), list(g_ws))
+        partials.append(st)
+    eng = make_engine("blocked")
+    top = FedAvgState(engine=eng)
+    top._ensure_acc(N)
+    for p in partials:
+        top.acc = eng.add_partial(top.acc, np.asarray(p.acc))
+        top.weight += p.weight
+        top.count += p.count
+    return top.result()[0]
+
+
+@pytest.mark.slow
+def test_runtime_two_workers_bitexact_and_warm_reuse():
+    N = 1 << 14
+    rng = np.random.default_rng(0)
+    ups = [[rng.normal(size=(N,)).astype(np.float32) for _ in range(3)]
+           for _ in range(2)]
+    ws = [[1.0, 2.5, 4.0], [3.0, 0.5, 7.0]]
+    with ShmRuntime() as rt:
+        for rid in (1, 2):  # round 2 re-tasks the same (warm) workers
+            for g in range(2):
+                rt.submit_task(f"mid@n{g}", goal=3, n_elems=N, round_id=rid)
+            keys = []
+            for g in range(2):
+                for u, c in zip(ups[g], ws[g]):
+                    k = rt.store.put(u)
+                    keys.append(k)
+                    rt.dispatch(f"mid@n{g}", k, c, round_id=rid)
+            parts = sorted(rt.collect(2), key=lambda p: p.agg_id)
+            assert [p.count for p in parts] == [3, 3]
+            eng = make_engine("blocked")
+            top = FedAvgState(engine=eng)
+            top._ensure_acc(N)
+            for p in parts:
+                # zero payload copies: fold the shm view directly
+                top.acc = eng.add_partial(top.acc, rt.store.get(p.key))
+                top.weight += p.weight
+                top.count += p.count
+            got = top.result()[0]
+            ref = _hier_inproc(ups, ws, N)
+            assert np.array_equal(got, ref)  # byte-identical to in-proc
+            assert np.allclose(
+                got, fedavg_oracle([u for g in ups for u in g],
+                                   [c for g in ws for c in g]),
+                rtol=1e-5, atol=1e-5)
+            for p in parts:
+                rt.store.destroy(p.key)
+            for k in keys:
+                rt.store.delete(k)
+        assert rt.stats["cold_starts"] == 2      # only round 1 forked
+        assert rt.stats["warm_starts"] == 2      # round 2 reused both
+        assert len(rt.worker_pids()) == 2
+        assert rt.stats["warm_latency_s"] < rt.stats["cold_latency_s"]
+    assert [n for n in os.listdir("/dev/shm") if n.startswith(rt.prefix)] == []
+
+
+@pytest.mark.slow
+def test_runtime_drain_closes_short_task():
+    N = 1 << 12
+    u = np.ones(N, np.float32)
+    with ShmRuntime() as rt:
+        rt.submit_task("mid@n0", goal=8, n_elems=N)
+        rt.dispatch("mid@n0", rt.store.put(u), 2.0)
+        rt.dispatch("mid@n0", rt.store.put(u * 3), 1.0)
+        time.sleep(0.2)
+        rt.drain("mid@n0")  # only 2 of 8 arrived (stragglers)
+        p = rt.collect(1)[0]
+        assert p.count == 2 and p.weight == 3.0
+        np.testing.assert_allclose(
+            np.asarray(rt.store.get(p.key)), u * 2.0 * 1 + u * 3.0)
+        rt.store.destroy(p.key)
+
+
+@pytest.mark.slow
+def test_runtime_zero_update_drain_reuses_agg_id():
+    """A task drained before any update (EMPTY closure) must neither
+    leak the worker's accumulator segment nor block re-submitting the
+    same tree position next round."""
+    N = 1 << 12
+    u = np.ones(N, np.float32)
+    with ShmRuntime() as rt:
+        for _ in range(3):  # repeated empty drains: no segment growth
+            rt.submit_task("mid@n0", goal=4, n_elems=N)
+            rt.drain("mid@n0")
+            rt.quiesce(timeout=10.0)
+            assert "mid@n0" not in rt._route
+        wsegs = [n for n in os.listdir("/dev/shm")
+                 if n.startswith(f"{rt.prefix}-w")]
+        assert len(wsegs) <= 1  # the engine's single warm accumulator
+        # the position is reusable and aggregates correctly
+        rt.submit_task("mid@n0", goal=1, n_elems=N)
+        rt.dispatch("mid@n0", rt.store.put(u * 7), 1.0)
+        p = rt.collect(1)[0]
+        np.testing.assert_allclose(np.asarray(rt.store.get(p.key)), u * 7)
+        rt.store.destroy(p.key)
+
+
+@pytest.mark.slow
+def test_runtime_sigkill_mid_drain_reclaims_segments():
+    """SIGKILL a worker holding a live shm accumulator: the dispatcher
+    must detect the crash, reclaim the worker's segments, and keep
+    serving."""
+    N = 1 << 14
+    u = np.ones(N, np.float32)
+    with ShmRuntime() as rt:
+        rt.submit_task("mid@n0", goal=8, n_elems=N)
+        rt.dispatch("mid@n0", rt.store.put(u), 1.0)
+        time.sleep(0.3)  # worker has folded: its accumulator segment exists
+        victim = rt._route["mid@n0"]
+        wseg_prefix = f"{rt.prefix}-w{victim.idx & 0xff:02x}"
+        assert any(n.startswith(wseg_prefix) for n in os.listdir("/dev/shm"))
+        os.kill(victim.proc.pid, signal.SIGKILL)
+        time.sleep(0.2)
+        with pytest.raises(WorkerCrash):
+            rt.poll()
+        # the dead worker's segments are gone
+        assert not any(n.startswith(wseg_prefix)
+                       for n in os.listdir("/dev/shm"))
+        assert rt.stats["crashes"] == 1
+        # the runtime recovers: a fresh worker serves the next task
+        rt.submit_task("mid@n0", goal=1, n_elems=N)
+        rt.dispatch("mid@n0", rt.store.put(u * 5), 1.0)
+        p = rt.collect(1)[0]
+        np.testing.assert_allclose(np.asarray(rt.store.get(p.key)), u * 5)
+        rt.store.destroy(p.key)
+    assert [n for n in os.listdir("/dev/shm") if n.startswith(rt.prefix)] == []
+
+
+@pytest.mark.slow
+def test_trainer_shmproc_matches_inproc():
+    """FederatedTrainer(runtime="shmproc") reproduces the in-proc
+    round bit for bit (same clients, same seeds, same engine math)."""
+    import jax
+
+    from repro.configs import RESNET18
+    from repro.core import ClientInfo, RoundConfig
+    from repro.data import (build_client_datasets, dirichlet_partition,
+                            synthetic_femnist)
+    from repro.models import build_resnet
+    from repro.runtime.trainer import ClientRuntime, FederatedTrainer
+
+    def mk(runtime):
+        cfg = RESNET18.reduced()
+        model = build_resnet(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        imgs, labels = synthetic_femnist(200, num_classes=10, seed=0)
+        shards = dirichlet_partition(labels, 8, alpha=0.5)
+        dsets = build_client_datasets(imgs, labels, shards)
+        clients = [ClientRuntime(ClientInfo(d.client_id, d.num_samples), d)
+                   for d in dsets]
+        return FederatedTrainer(
+            model, params, clients,
+            round_cfg=RoundConfig(aggregation_goal=4, over_provision=1.5),
+            seed=0, runtime=runtime)
+
+    tr_in, tr_sh = mk("inproc"), mk("shmproc")
+    try:
+        for _ in range(2):
+            ri = tr_in.run_round(lr=0.05, batch_size=32)
+            rs = tr_sh.run_round(lr=0.05, batch_size=32)
+            assert ri["updates"] == rs["updates"]
+        assert rs["reused"] > 0  # round 2 reused warm worker processes
+        for a, b in zip(jax.tree.leaves(tr_in.params),
+                        jax.tree.leaves(tr_sh.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        tr_sh.close()
