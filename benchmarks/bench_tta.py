@@ -21,12 +21,13 @@ import jax
 import numpy as np
 
 from benchmarks.engine_probe import fold_gbps
+from repro.api import Session
 from repro.configs.resnet import RESNET18
 from repro.core import AggregatorPool, ClientInfo, RoundConfig, SimConfig, simulate_round
 from repro.core.simulation import DataPlaneCosts
 from repro.data import build_client_datasets, dirichlet_partition, synthetic_femnist
 from repro.models import build_resnet
-from repro.runtime import ClientRuntime, FederatedTrainer
+from repro.runtime import ClientRuntime
 
 SYSTEMS = {
     # (dataplane, placement, reuse, eager, agg_engine)
@@ -62,15 +63,16 @@ def run(fast: bool = True) -> List[Dict]:
                       failure_prob=0.05)
         for d in dsets
     ]
-    tr = FederatedTrainer(
-        model, params, clients,
-        round_cfg=RoundConfig(aggregation_goal=10, over_provision=1.4),
-    )
     test = {"images": imgs[:256], "labels": labels[:256]}
     accs = []
-    for r in range(n_rounds):
-        tr.run_round(lr=0.08, batch_size=32, epochs=1)
-        accs.append(tr.evaluate(test)["accuracy"])
+    with Session.open(
+        model, params, clients,
+        round_cfg=RoundConfig(aggregation_goal=10, over_provision=1.4),
+    ) as sess:
+        for r in range(n_rounds):
+            sess.run_round(client_lr=0.08, client_batch_size=32,
+                           client_epochs=1)
+            accs.append(sess.evaluate(test)["accuracy"])
 
     # --- per-system round costs ------------------------------------------
     # calibrate the engine speedup from a live fold measurement

@@ -18,7 +18,7 @@ import sys
 import time
 
 # suites whose rows land in the --json perf-trajectory file
-JSON_SUITES = ("agg_kernel", "dataplane_fig7", "shmrt")
+JSON_SUITES = ("agg_kernel", "dataplane_fig7", "shmrt", "control_overhead")
 
 # PR-1 acceptance floor: blocked fold ≥ 2× naive.  A regression here
 # silently rots every throughput claim downstream, so the harness fails
@@ -40,6 +40,24 @@ def _check_engine_fold_floor(rows) -> None:
                 f"FATAL: engine_fold regression — blocked/naive = "
                 f"{m.group(1)}x < {ENGINE_FOLD_FLOOR}x floor "
                 f"(row {r['case']!r}; see ROADMAP.md perf trajectory)")
+
+
+def _check_driver_dispatch_gate(rows) -> None:
+    """PR-3 acceptance gate: one RoundDriver event dispatch must stay
+    under 5% of a warm shmrt task dispatch (the event seam is free
+    relative to the cheapest real control-plane action it mediates)."""
+    import re
+
+    for r in rows:
+        if r["case"] != "driver_dispatch":
+            continue
+        m = re.search(r"overhead_frac=([\d.]+)", r["derived"])
+        g = re.search(r"gate_frac=([\d.]+)", r["derived"])
+        if m and g and float(m.group(1)) >= float(g.group(1)):
+            sys.exit(
+                f"FATAL: driver dispatch overhead regression — "
+                f"{float(m.group(1)):.4f} ≥ {g.group(1)} of warm shmrt "
+                f"dispatch (row {r['case']!r}; see ROADMAP.md)")
 
 
 def main() -> None:
@@ -97,6 +115,8 @@ def main() -> None:
             json_rows.extend(rows)
         if name == "agg_kernel":
             _check_engine_fold_floor(rows)
+        if name == "control_overhead":
+            _check_driver_dispatch_gate(rows)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
 
     if args.json:

@@ -25,8 +25,9 @@ from repro.core import (
 )
 from repro.core.simulation import DataPlaneCosts
 from repro.data import build_client_datasets, dirichlet_partition, synthetic_femnist
+from repro.api import Session
 from repro.models import build_resnet
-from repro.runtime import ClientRuntime, FederatedTrainer
+from repro.runtime import ClientRuntime
 
 
 def main():
@@ -46,11 +47,6 @@ def main():
                       failure_prob=0.05)
         for d in build_client_datasets(imgs, labels, shards)
     ]
-    trainer = FederatedTrainer(
-        model, params, clients,
-        round_cfg=RoundConfig(aggregation_goal=args.goal, over_provision=1.4,
-                              placement_policy="bestfit"),
-    )
     test = {"images": imgs[:256], "labels": labels[:256]}
 
     lifl_cfg = SimConfig(n_nodes=5, mc_per_node=20, placement_policy="bestfit",
@@ -62,18 +58,23 @@ def main():
     lifl_pool = AggregatorPool(cold_start_s=2.0)
     wall = {"lifl": 0.0, "sl_h": 0.0}
     print(f"{'round':>5} {'acc':>6} {'loss':>7} {'lifl_t':>8} {'slh_t':>8}")
-    for r in range(args.rounds):
-        trainer.run_round(lr=0.08, batch_size=32)
-        ev = trainer.evaluate(test)
-        lifl = simulate_round(args.goal, lifl_cfg, pool=lifl_pool,
-                              arrival_span_s=8.0)
-        slh = simulate_round(args.goal, slh_cfg,
-                             pool=AggregatorPool(cold_start_s=2.0),
-                             arrival_span_s=8.0)
-        wall["lifl"] += max(30.0, lifl.act_s)       # eager overlaps training
-        wall["sl_h"] += 30.0 + slh.act_s            # lazy adds up
-        print(f"{r:5d} {ev['accuracy']:6.3f} {ev['loss']:7.4f} "
-              f"{wall['lifl']:8.1f} {wall['sl_h']:8.1f}")
+    with Session.open(
+        model, params, clients,
+        round_cfg=RoundConfig(aggregation_goal=args.goal, over_provision=1.4,
+                              placement_policy="bestfit"),
+    ) as sess:
+        for r in range(args.rounds):
+            sess.run_round(client_lr=0.08, client_batch_size=32)
+            ev = sess.evaluate(test)
+            lifl = simulate_round(args.goal, lifl_cfg, pool=lifl_pool,
+                                  arrival_span_s=8.0)
+            slh = simulate_round(args.goal, slh_cfg,
+                                 pool=AggregatorPool(cold_start_s=2.0),
+                                 arrival_span_s=8.0)
+            wall["lifl"] += max(30.0, lifl.act_s)   # eager overlaps training
+            wall["sl_h"] += 30.0 + slh.act_s        # lazy adds up
+            print(f"{r:5d} {ev['accuracy']:6.3f} {ev['loss']:7.4f} "
+                  f"{wall['lifl']:8.1f} {wall['sl_h']:8.1f}")
     print(f"\nsame accuracy, simulated wall-clock: "
           f"LIFL {wall['lifl']:.0f}s vs SL-H {wall['sl_h']:.0f}s "
           f"({wall['sl_h']/wall['lifl']:.2f}x)")

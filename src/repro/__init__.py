@@ -1,2 +1,15 @@
-"""LIFL (MLSys'24) on TPU pods — JAX reproduction and scale-out."""
-__version__ = "1.0.0"
+"""LIFL (MLSys'24) on TPU pods — JAX reproduction and scale-out.
+
+Public API: ``from repro import Session`` (see :mod:`repro.api`).
+"""
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    # lazy: `import repro` must stay cheap (configs/analysis tooling
+    # imports it without pulling jax/the runtime stack)
+    if name == "Session":
+        from repro.api import Session
+
+        return Session
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,146 @@
+"""repro.api — the platform's public surface.
+
+A :class:`Session` is the one object user code talks to: it owns a
+:class:`~repro.runtime.trainer.FederatedTrainer`, its
+:class:`~repro.runtime.driver.RoundDriver` event loop, and the selected
+aggregation runtime (``"inproc"`` or ``"shmproc"``), and exposes the
+whole platform as four verbs::
+
+    with Session.open(model, params, clients, runtime="shmproc") as s:
+        s.submit_update("edge-7", flat_delta, weight=12)   # external client
+        rec = s.run_round(client_lr=0.05)                   # drive one round
+        print(s.metrics()["rounds"][-1], s.evaluate(batch))
+    # context exit closes the runtime (idempotent; shm segments unlinked)
+
+Everything else — typed events, elastic scaling, node churn — plugs in
+through the same event protocol::
+
+    s.on(WorkerCrashed, lambda ev: print("crash:", ev.agg_id))
+    s.emit(NodeLost(node="node3"))      # next plan excludes the node
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Type
+
+import numpy as np
+
+from repro.runtime.events import RoundEvent
+from repro.runtime.trainer import ClientRuntime, FederatedTrainer, _flatten_tree
+
+
+class Session:
+    """Public facade over one federated-learning job.
+
+    Build with :meth:`open`; use as a context manager.  ``close`` is
+    idempotent — double-close and close-after-crash neither raise nor
+    leak shared-memory segments."""
+
+    def __init__(self, trainer: FederatedTrainer):
+        self._trainer = trainer
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def open(
+        cls,
+        model,
+        params: Any,
+        clients: Sequence[ClientRuntime],
+        *,
+        runtime: Any = "inproc",
+        nodes: Optional[Dict[str, Any]] = None,
+        round_cfg: Optional[Any] = None,
+        server_opt: str = "fedavg",
+        server_lr: float = 1.0,
+        agg_engine: str = "auto",
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 5,
+        seed: int = 0,
+    ) -> "Session":
+        """Open a session: ``model.loss(params, batch)`` plus a client
+        fleet, on the chosen aggregation runtime."""
+        return cls(FederatedTrainer(
+            model, params, clients,
+            nodes=nodes, round_cfg=round_cfg, server_opt=server_opt,
+            server_lr=server_lr, agg_engine=agg_engine, runtime=runtime,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            seed=seed,
+        ))
+
+    # ------------------------------------------------------------------
+    # the four verbs
+    # ------------------------------------------------------------------
+    def run_round(self, **kwargs) -> Dict[str, float]:
+        """Drive one federated round (see
+        :meth:`FederatedTrainer.run_round` for kwargs)."""
+        return self._trainer.run_round(**kwargs)
+
+    def submit_update(self, client_id: str, update: Any,
+                      weight: float = 1.0) -> None:
+        """Inject an externally-computed model update (a flat float32
+        vector or a params-shaped pytree delta); it takes a cohort slot
+        in the next round."""
+        if isinstance(update, np.ndarray) and update.ndim == 1:
+            flat = update
+        else:
+            flat, _, _ = _flatten_tree(update)
+        self._trainer.submit_update(client_id, flat, weight)
+
+    def metrics(self) -> Dict[str, Any]:
+        """Snapshot of the job: per-round records, model version, the
+        event sidecar series, and driver/event-loop counters."""
+        tr = self._trainer
+        out: Dict[str, Any] = {
+            "rounds": list(tr.log),
+            "model_version": tr.coordinator.model_version,
+            "runtime": tr.runtime if isinstance(tr.runtime, str)
+            else getattr(tr.runtime, "name", "custom"),
+            "sidecar": {f"{owner}/{metric}": total for
+                        (owner, metric), (total, _n)
+                        in tr.metrics.snapshot().items()},
+        }
+        if tr._driver is not None:
+            out["driver"] = dict(tr._driver.stats)
+        return out
+
+    def evaluate(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
+        return self._trainer.evaluate(batch)
+
+    # ------------------------------------------------------------------
+    # event protocol
+    # ------------------------------------------------------------------
+    def on(self, event_type: Type[RoundEvent],
+           handler: Callable[[RoundEvent], None]) -> None:
+        """Subscribe a handler to a typed round event."""
+        self._trainer.driver.on(event_type, handler)
+
+    def emit(self, event: RoundEvent) -> bool:
+        """Inject an event into the driver (node churn, scale
+        decisions, deadlines).  Returns False if an ordering guard
+        dropped it."""
+        return self._trainer.driver.emit(event)
+
+    # ------------------------------------------------------------------
+    @property
+    def params(self) -> Any:
+        return self._trainer.params
+
+    @property
+    def trainer(self) -> FederatedTrainer:
+        return self._trainer
+
+    @property
+    def nodes(self) -> Dict[str, Any]:
+        return self._trainer.nodes
+
+    @property
+    def closed(self) -> bool:
+        return self._trainer.closed
+
+    def close(self) -> None:
+        self._trainer.close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

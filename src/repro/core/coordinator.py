@@ -173,3 +173,19 @@ class Coordinator:
         """Terminate idle aggregators after load drops (load-proportional
         resource use — what Fig 10(b) shows for LIFL vs SF)."""
         return self.pool.terminate_idle()
+
+    # ------------------------------------------------------------------
+    def handle_event(self, event) -> None:
+        """Ordinary event handler for the round driver: node churn
+        reshapes the next ``plan_round`` (the shared ``nodes`` dict) and
+        retires the lost node's pooled aggregators."""
+        from repro.runtime.events import NodeJoined, NodeLost
+
+        if isinstance(event, NodeJoined):
+            self.nodes[event.node] = NodeState(
+                node=event.node, max_capacity=event.capacity or 20.0)
+        elif isinstance(event, NodeLost):
+            self.nodes.pop(event.node, None)
+            for agg_id, inst in list(self.pool.instances.items()):
+                if inst.node == event.node:
+                    self.pool.terminate(agg_id)

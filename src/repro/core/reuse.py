@@ -47,9 +47,9 @@ class AggregatorInstance:
     # lazily via AggregatorPool.engine_for and kept resident across
     # release/acquire, so a warm aggregator re-enters a round with its
     # accumulator/scratch buffers already allocated — the fold-level
-    # half of the §5.3 reuse benefit.  (FederatedTrainer's aggregators
-    # are not pool-managed; it keys warm engines by tree position
-    # itself — see trainer._warm_engine.)
+    # half of the §5.3 reuse benefit.  (The round runtimes' aggregators
+    # are not pool-managed; they key warm engines by tree position —
+    # see repro.runtime.driver InProcRuntime.engine_for.)
     engine: Optional[Any] = None
 
 

@@ -45,6 +45,12 @@ class MetricsMap:
             k = (owner, metric)
             return self._m.get(k, 0.0), self._count.get(k, 0)
 
+    def snapshot(self) -> Dict[Tuple[str, str], Tuple[float, int]]:
+        """Non-destructive view of every (owner, metric) series —
+        what ``Session.metrics()`` surfaces."""
+        with self._lock:
+            return {k: (self._m[k], self._count[k]) for k in self._m}
+
 
 @dataclass
 class EventSidecar:

@@ -1,0 +1,670 @@
+"""RoundDriver: one event loop owns the round lifecycle, for every runtime.
+
+This is the seam the multi-node dispatcher will plug into.  A *runtime*
+is anything that can host aggregators and speak the event protocol
+(`events.py`); the driver never cares whether aggregators are objects
+in this process (``InProcRuntime``) or forked worker processes over
+shared-memory rings (``ShmProcRuntime`` wrapping ``shmrt``).
+
+Driver state machine (per round)::
+
+    SPAWN ──▶ DISPATCH ──▶ COLLECT ──▶ FOLD ──▶ DONE
+      │           │            │
+      │           ▼            ▼
+      │     UpdateArrived  PartialReady / WorkerCrashed / RoundDeadline
+      └──────────────────────▶ re-dispatch on crash (COLLECT loops)
+
+Semantics both runtimes share, by construction:
+
+  * mids fold in delivery order through the blocked-engine arithmetic
+    and publish their **raw partial sum** Σ c·u (not the normalized
+    mean) into the object store;
+  * the top fold consumes partials sorted by ``agg_id`` — a
+    deterministic order independent of completion timing — so
+    ``runtime="inproc"`` and ``runtime="shmproc"`` produce
+    **bit-identical** params (test-asserted over multi-round runs);
+  * a :class:`~repro.runtime.events.WorkerCrashed` mid-round loses the
+    crashed subtree's *unpublished folds only*: the dispatched update
+    objects still live in the store, so the driver re-dispatches the
+    surviving keys to a fresh/sibling worker and the round still
+    reaches its full goal (no quota shrinking);
+  * ordering guards: events from finished rounds are dropped, and a
+    ``RoundDeadline`` that fires after ``GoalReached`` is ignored.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import (
+    Any, Callable, Deque, Dict, Iterable, List, Optional, Protocol, Set,
+    Tuple, Type,
+)
+
+import numpy as np
+
+from repro.core.aggregation import Aggregator, FedAvgState
+from repro.core.engine import make_engine
+from repro.core.gateway import UpdateEnvelope
+from repro.core.objectstore import InProcObjectStore
+from repro.core.sidecar import EventSidecar, MetricsMap
+from repro.runtime.events import (
+    GoalReached,
+    PartialReady,
+    RoundDeadline,
+    RoundEvent,
+    UpdateArrived,
+    WorkerCrashed,
+)
+
+
+# ===========================================================================
+# the Runtime protocol: what a round host must provide
+# ===========================================================================
+
+
+class Runtime(Protocol):
+    """An aggregation runtime the driver can run rounds on.
+
+    The four protocol methods are the entire control surface; the
+    concrete classes below add store plumbing (``put_update`` /
+    ``get_partial`` / …) that the driver uses for payloads."""
+
+    name: str
+    stats: Dict[str, Any]
+    metrics: MetricsMap
+
+    def spawn_aggregator(self, agg_id: str, *, goal: int, n_elems: int,
+                         round_id: int = 0) -> None: ...
+
+    def deliver(self, agg_id: str, key: str, weight: float,
+                round_id: int = 0) -> None: ...
+
+    def poll_events(self, timeout: float = 0.0) -> List[RoundEvent]: ...
+
+    def quiesce(self, timeout: float = 5.0) -> None: ...
+
+
+class _WarmEngineMixin:
+    """Warm aggregation engines keyed by tree position (``agg_id``):
+    a re-spawned aggregator at the same position re-enters the next
+    round with its accumulator/scratch resident (§5.3 at the fold
+    level).  Requires ``self.agg_engine`` and ``self._engines``."""
+
+    def engine_for(self, agg_id: str):
+        eng = self._engines.get(agg_id)
+        if eng is None:
+            eng = make_engine(self.agg_engine)
+            self._engines[agg_id] = eng
+        return eng
+
+    def recycle_engines(self) -> None:
+        for eng in self._engines.values():
+            eng.recycle()
+
+
+class InProcRuntime(_WarmEngineMixin):
+    """Single-process runtime: aggregators are :class:`Aggregator`
+    objects over an in-proc object store."""
+
+    name = "inproc"
+
+    def __init__(self, *, metrics: Optional[MetricsMap] = None,
+                 agg_engine: Any = "auto", eager: bool = True,
+                 node: str = "inproc"):
+        self.metrics = metrics if metrics is not None else MetricsMap()
+        self.store = InProcObjectStore(node)
+        self.agg_engine = agg_engine
+        self.eager = eager
+        self._engines: Dict[str, Any] = {}
+        self._open: Dict[str, Tuple[Aggregator, int]] = {}
+        self._events: Deque[RoundEvent] = deque()
+        self.stats = {"cold_starts": 0, "warm_starts": 0, "crashes": 0}
+        self._closed = False
+
+    # -- protocol -------------------------------------------------------
+    def spawn_aggregator(self, agg_id: str, *, goal: int, n_elems: int,
+                         round_id: int = 0) -> None:
+        if agg_id in self._open:
+            raise ValueError(f"{agg_id!r} already has an open task")
+        # warm = an engine is already resident at this tree position
+        key = "warm_starts" if agg_id in self._engines else "cold_starts"
+        self.stats[key] += 1
+        agg = Aggregator(
+            agg_id, self.store, goal, eager=self.eager,
+            sidecar=EventSidecar(agg_id, self.metrics),
+            engine=self.engine_for(agg_id),
+            on_complete=lambda *_args, a=agg_id: self._publish(a),
+        )
+        self._open[agg_id] = (agg, round_id)
+
+    def _publish(self, agg_id: str) -> None:
+        """Goal met: publish the raw partial sum Σ c·u into the store
+        (one copy — the in-proc analogue of the shm seal+disown)."""
+        agg, round_id = self._open.pop(agg_id)
+        key = self.store.put(np.asarray(agg.state.acc, dtype=np.float32))
+        self._events.append(PartialReady(
+            round_id=round_id, agg_id=agg_id, key=key,
+            weight=agg.state.weight, count=agg.state.count,
+            exec_s=agg.agg_exec_s, worker=-1))
+
+    def deliver(self, agg_id: str, key: str, weight: float,
+                round_id: int = 0) -> None:
+        agg, _ = self._open[agg_id]
+        agg.recv(UpdateEnvelope(key, round_id, agg_id, weight,
+                                enqueue_ts=time.perf_counter()))
+
+    def drain(self, agg_id: str) -> None:
+        """Close out a short/lazy task: fold whatever is queued and
+        publish, or retire the task empty."""
+        entry = self._open.get(agg_id)
+        if entry is None:
+            return  # already published (eager goal met) — no-op
+        agg, _ = entry
+        if agg.state.count > 0 or agg.fifo:
+            agg.goal = agg.state.count + len(agg.fifo)
+            agg.flush()
+            if not agg.done:
+                agg._send()
+        else:
+            self._open.pop(agg_id, None)  # EMPTY closure: nothing folded
+
+    def poll_events(self, timeout: float = 0.0) -> List[RoundEvent]:
+        evs = list(self._events)
+        self._events.clear()
+        if not evs and timeout > 0:
+            time.sleep(min(timeout, 0.05))  # nothing pending: don't spin
+        return evs
+
+    def quiesce(self, timeout: float = 5.0) -> None:
+        # a published-but-unabsorbed partial would strand its store
+        # object (the exception path can abandon queued events)
+        for ev in self._events:
+            if isinstance(ev, PartialReady):
+                self.store.delete(ev.key)
+        self._open.clear()
+        self._events.clear()
+
+    # -- payload plumbing ----------------------------------------------
+    def put_update(self, flat: np.ndarray) -> str:
+        return self.store.put(flat)
+
+    def update_alive(self, key: str) -> bool:
+        return self.store.contains(key)
+
+    def get_partial(self, key: str) -> np.ndarray:
+        return self.store.get(key)
+
+    def release_partial(self, key: str) -> None:
+        self.store.release(key)
+
+    def discard_partial(self, key: str) -> None:
+        self.store.delete(key)
+
+    def discard_update(self, key: str) -> None:
+        self.store.delete(key)
+
+    def worker_count(self) -> int:
+        return 0
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._open.clear()
+        self._engines.clear()
+        self.store.close()
+
+
+class ShmProcRuntime(_WarmEngineMixin):
+    """Multi-process runtime: a thin event adapter over
+    :class:`repro.runtime.shmrt.ShmRuntime` — mids are forked worker
+    processes, partials are sealed shm objects, crashes surface as
+    :class:`WorkerCrashed` events instead of exceptions."""
+
+    name = "shmproc"
+
+    def __init__(self, *, metrics: Optional[MetricsMap] = None,
+                 agg_engine: Any = "auto", **rt_kwargs):
+        from repro.runtime.shmrt import ShmRuntime, WorkerCrash
+
+        self.metrics = metrics if metrics is not None else MetricsMap()
+        self._rt = ShmRuntime(metrics=self.metrics, **rt_kwargs)
+        self._crash_cls = WorkerCrash
+        self.agg_engine = agg_engine
+        self._engines: Dict[str, Any] = {}   # driver-side (top) engines
+        self._round_id = 0
+        self._closed = False
+
+    @property
+    def store(self):
+        return self._rt.store
+
+    @property
+    def stats(self):
+        return self._rt.stats
+
+    # -- protocol -------------------------------------------------------
+    def spawn_aggregator(self, agg_id: str, *, goal: int, n_elems: int,
+                         round_id: int = 0) -> None:
+        self._round_id = round_id
+        self._rt.submit_task(agg_id, goal=goal, n_elems=n_elems,
+                             round_id=round_id)
+
+    def deliver(self, agg_id: str, key: str, weight: float,
+                round_id: int = 0) -> None:
+        self._rt.dispatch(agg_id, key, weight, round_id=round_id)
+
+    def drain(self, agg_id: str) -> None:
+        self._rt.drain(agg_id)
+
+    def poll_events(self, timeout: float = 0.0) -> List[RoundEvent]:
+        evs: List[RoundEvent] = []
+        deadline = time.perf_counter() + timeout
+        while True:
+            left = deadline - time.perf_counter()
+            try:
+                parts = self._rt.poll(timeout=max(0.0, left) if not evs
+                                      else 0.0)
+            except self._crash_cls as e:
+                evs.append(WorkerCrashed(
+                    round_id=self._round_id, agg_id=e.agg_id or "",
+                    worker=e.widx, exitcode=e.exitcode))
+                continue  # scoop any results buffered behind the crash
+            evs.extend(
+                PartialReady(round_id=p.round_id, agg_id=p.agg_id,
+                             key=p.key, weight=p.weight, count=p.count,
+                             exec_s=p.exec_s, worker=p.worker)
+                for p in parts)
+            return evs
+
+    def quiesce(self, timeout: float = 5.0) -> None:
+        self._rt.quiesce(timeout=timeout)
+
+    # -- payload plumbing ----------------------------------------------
+    def put_update(self, flat: np.ndarray) -> str:
+        return self._rt.store.put(flat)
+
+    def update_alive(self, key: str) -> bool:
+        return self._rt.store.contains(key)
+
+    def get_partial(self, key: str) -> np.ndarray:
+        return self._rt.store.get(key)
+
+    def release_partial(self, key: str) -> None:
+        self._rt.store.release(key)
+
+    def discard_partial(self, key: str) -> None:
+        # the dispatcher owns published partials (disowned by workers)
+        self._rt.store.destroy(key)
+
+    def discard_update(self, key: str) -> None:
+        self._rt.store.delete(key)  # parks the segment for recycling
+
+    def worker_count(self) -> int:
+        return len(self._rt.worker_pids())
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._rt.shutdown()
+
+
+def make_runtime(spec: Any, *, metrics: Optional[MetricsMap] = None,
+                 agg_engine: Any = "auto", eager: bool = True,
+                 **kwargs) -> Any:
+    """Resolve a runtime spec: an instance passes through, a name
+    builds one (``"inproc"`` | ``"shmproc"``)."""
+    if not isinstance(spec, str):
+        return spec
+    if spec == "inproc":
+        return InProcRuntime(metrics=metrics, agg_engine=agg_engine,
+                             eager=eager, **kwargs)
+    if spec == "shmproc":
+        return ShmProcRuntime(metrics=metrics, agg_engine=agg_engine,
+                              **kwargs)
+    raise ValueError(f"unknown runtime {spec!r} "
+                     "(expected 'inproc' or 'shmproc')")
+
+
+# ===========================================================================
+# the driver
+# ===========================================================================
+
+
+@dataclass
+class RoundOutcome:
+    """What one driven round produced (runtime-agnostic)."""
+
+    round_id: int
+    accepted: int = 0                      # updates that made the round
+    delta: Optional[np.ndarray] = None     # flat weighted-mean update
+    weight: float = 0.0
+    count: int = 0                         # updates folded end-to-end
+    crashes: int = 0
+    redispatched: int = 0                  # crash-recovery re-dispatches
+    deadline_hit: bool = False
+    cold_starts: int = 0
+    warm_starts: int = 0
+    workers: int = 0
+    exec_s: Dict[str, float] = field(default_factory=dict)  # agg_id → E
+    dispatched: Dict[str, int] = field(default_factory=dict)  # node → n
+
+
+@dataclass
+class _RoundState:
+    """Mutable per-round bookkeeping threaded through the loop."""
+
+    round_id: int
+    n_elems: int
+    out: RoundOutcome
+    sent: Dict[str, List[Tuple[str, float]]]      # agg_id → delivered keys
+    partials: Dict[str, PartialReady]
+    spawn_goals: Dict[str, int] = field(default_factory=dict)
+    lost: Set[str] = field(default_factory=set)   # subtrees given up
+    attempts: Dict[str, int] = field(default_factory=dict)  # re-dispatches
+
+
+class RoundDriver:
+    """The single round loop; also the event bus components hang off.
+
+    Handlers subscribe per event type with :meth:`on` (subscribe to
+    :class:`RoundEvent` for a catch-all); anything — the elastic
+    controller, the coordinator, user code via ``Session.emit`` — can
+    inject events with :meth:`dispatch`.  Ordering guards live here:
+    stale-round events are dropped and a deadline after the goal is
+    ignored, whoever emits them."""
+
+    def __init__(self, runtime: Optional[Any] = None, *,
+                 metrics: Optional[MetricsMap] = None,
+                 redispatch_limit: int = 3):
+        self.runtime = runtime
+        self.metrics = metrics if metrics is not None else (
+            runtime.metrics if runtime is not None else MetricsMap())
+        # crash recovery gives up on a subtree after this many respawns
+        # (a deterministic crasher must not hang the round)
+        self.redispatch_limit = int(redispatch_limit)
+        self._handlers: Dict[Type[RoundEvent],
+                             List[Callable[[RoundEvent], None]]] = {}
+        self._open_round: Optional[int] = None
+        self._goal_reached = False
+        self._next_round = 0
+        self.stats = {
+            "events_dispatched": 0, "stale_dropped": 0,
+            "deadline_ignored": 0, "crashes": 0, "redispatched": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # event bus
+    # ------------------------------------------------------------------
+    def on(self, event_type: Type[RoundEvent],
+           handler: Callable[[RoundEvent], None]) -> None:
+        """Subscribe ``handler`` to an event type (or ``RoundEvent``
+        for every event)."""
+        self._handlers.setdefault(event_type, []).append(handler)
+
+    def dispatch(self, event: RoundEvent) -> bool:
+        """Route one event through the ordering guards and handlers.
+        Returns ``False`` when a guard dropped it."""
+        rid = event.round_id
+        if rid is not None and rid < self._next_round:
+            # leftovers from a finished round: drop, whoever sent them
+            self.stats["stale_dropped"] += 1
+            return False
+        if isinstance(event, RoundDeadline) and self._goal_reached \
+                and rid == self._open_round:
+            # goal already reached: the deadline is moot
+            self.stats["deadline_ignored"] += 1
+            return False
+        if isinstance(event, GoalReached) and rid == self._open_round:
+            self._goal_reached = True
+        self.stats["events_dispatched"] += 1
+        for etype in (type(event), RoundEvent):
+            for fn in self._handlers.get(etype, ()):
+                fn(event)
+        return True
+
+    # alias for external injectors (Session.emit, operators, tests)
+    emit = dispatch
+
+    # ------------------------------------------------------------------
+    # round lifecycle bookkeeping (public so tests can drive the guards)
+    # ------------------------------------------------------------------
+    def begin_round(self, round_id: int) -> None:
+        if self._open_round is not None:
+            raise RuntimeError(
+                f"round {self._open_round} still open")
+        self._open_round = round_id
+        self._goal_reached = False
+
+    def end_round(self, round_id: int) -> None:
+        self._next_round = max(self._next_round, round_id + 1)
+        self._open_round = None
+
+    def abort_round(self, round_id: int) -> None:
+        """The round failed before completing: close it WITHOUT
+        advancing the stale-round horizon, so a retry under the same
+        ``round_id`` isn't guard-dropped (runtime-level seq guards
+        already fence the aborted round's late records)."""
+        self._open_round = None
+
+    # ------------------------------------------------------------------
+    # the round loop
+    # ------------------------------------------------------------------
+    def run_round(
+        self,
+        *,
+        round_id: int,
+        assignment: Dict[str, List[int]],
+        updates: Iterable[Tuple[str, str, np.ndarray, float]],
+        goal: int,
+        n_elems: int,
+        top_node: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+    ) -> RoundOutcome:
+        """Drive one round: spawn the planned mids, pump ``updates``
+        (``(node, client_id, flat, weight)`` tuples — typically a lazy
+        generator whose iteration *is* the client training) until the
+        goal, collect every counted subtree's partial (re-dispatching
+        around crashes), and fold the top.  Returns the outcome; the
+        caller applies the server optimizer."""
+        rt = self.runtime
+        if rt is None:
+            raise RuntimeError("RoundDriver has no runtime attached")
+        self.begin_round(round_id)
+        stats0 = {k: rt.stats.get(k, 0)
+                  for k in ("cold_starts", "warm_starts")}
+        out = RoundOutcome(round_id=round_id)
+        sent: Dict[str, List[Tuple[str, float]]] = {}
+        partials: Dict[str, PartialReady] = {}
+        completed = False
+        try:
+            self._drive(out, rt, round_id=round_id, assignment=assignment,
+                        updates=updates, goal=goal, n_elems=n_elems,
+                        top_node=top_node, deadline_s=deadline_s,
+                        sent=sent, partials=partials)
+            completed = True
+        except BaseException:
+            # a failing client/handler must not brick the driver: park
+            # the runtime so the next round starts clean, then re-raise
+            try:
+                rt.quiesce()
+            except Exception:
+                pass
+            raise
+        finally:
+            # always release the round's store objects and close the
+            # round, success or not
+            for p in partials.values():
+                try:
+                    rt.discard_partial(p.key)
+                except Exception:
+                    pass
+            for keys in sent.values():
+                for key, _ in keys:
+                    try:
+                        rt.discard_update(key)
+                    except Exception:
+                        pass
+            if completed:
+                self.end_round(round_id)
+            else:
+                self.abort_round(round_id)  # retriable: same rid stays live
+        out.cold_starts = rt.stats.get("cold_starts", 0) - stats0["cold_starts"]
+        out.warm_starts = rt.stats.get("warm_starts", 0) - stats0["warm_starts"]
+        out.workers = rt.worker_count()
+        return out
+
+    def _drive(self, out: RoundOutcome, rt, *, round_id, assignment,
+               updates, goal, n_elems, top_node, deadline_s,
+               sent: Dict[str, List[Tuple[str, float]]],
+               partials: Dict[str, PartialReady]) -> None:
+        st = _RoundState(round_id=round_id, n_elems=n_elems, out=out,
+                         sent=sent, partials=partials)
+        # --- SPAWN: one mid per planned node ---------------------------
+        planned = {node: len(idxs) for node, idxs in assignment.items()
+                   if idxs}
+        mid_ids = {node: f"mid@{node}" for node in planned}
+        for node, k in planned.items():
+            rt.spawn_aggregator(mid_ids[node], goal=k, n_elems=n_elems,
+                                round_id=round_id)
+            st.spawn_goals[mid_ids[node]] = k
+            sent[mid_ids[node]] = []
+
+        dispatched = {node: 0 for node in planned}
+        accepted = 0
+        deadline = (time.perf_counter() + deadline_s) if deadline_s else None
+
+        def fire_deadline() -> None:
+            # the wall-clock budget always closes the round; the
+            # ordering guard only decides whether handlers see the
+            # RoundDeadline event (ignored once the goal was met)
+            if not out.deadline_hit:
+                self.dispatch(RoundDeadline(round_id=round_id,
+                                            deadline_s=deadline_s))
+                out.deadline_hit = True
+
+        # --- DISPATCH: pump updates until the aggregation goal ---------
+        for node, client_id, flat, weight in updates:
+            if deadline is not None and time.perf_counter() > deadline:
+                fire_deadline()  # budget expired mid-cohort: stop pumping
+                break
+            agg_id = mid_ids.get(node)
+            if (agg_id is None or agg_id in st.lost
+                    or dispatched[node] >= planned[node]):
+                continue  # nothing planned / subtree given up / node full
+            key = rt.put_update(flat)
+            rt.deliver(agg_id, key, weight, round_id=round_id)
+            sent[agg_id].append((key, weight))
+            dispatched[node] += 1
+            accepted += 1
+            self.dispatch(UpdateArrived(
+                round_id=round_id, client_id=client_id, node=node,
+                agg_id=agg_id, key=key, weight=weight))
+            # opportunistic: surface partials/crashes while clients train
+            self._absorb(rt.poll_events(0.0), st, draining=False)
+            if accepted >= goal:
+                break
+        if accepted >= goal:
+            self.dispatch(GoalReached(round_id=round_id, goal=goal,
+                                      accepted=accepted))
+        out.accepted = accepted
+        out.dispatched = dict(dispatched)
+
+        # --- COLLECT: close out stragglers, wait for counted subtrees --
+        counted = {mid_ids[node] for node in planned if dispatched[node]}
+        for agg_id in mid_ids.values():
+            rt.drain(agg_id)  # no-op if the task already published
+        while (counted - st.lost) - set(partials):
+            expired = deadline is not None and time.perf_counter() > deadline
+            # on expiry, one last non-blocking sweep picks up partials
+            # that already published before the budget ran out
+            self._absorb(rt.poll_events(timeout=0.0 if expired else 0.05),
+                         st, draining=True)
+            if expired:
+                fire_deadline()
+                counted = set(partials)  # close with what we have
+                break
+        rt.quiesce()
+
+        # --- FOLD: the top aggregator, deterministic order -------------
+        order = sorted(set(partials) & counted)
+        if order:
+            top = top_node or order[0].split("@", 1)[-1]
+            engine = rt.engine_for(f"top@{top}")
+            state = FedAvgState(engine=engine)
+            state._ensure_acc(n_elems)
+            sidecar = EventSidecar("top", self.metrics)
+            t0 = time.perf_counter()
+            for agg_id in order:
+                p = partials[agg_id]
+                view = rt.get_partial(p.key)   # zero-copy shm view
+                state.acc = engine.add_partial(state.acc, view)
+                state.weight += p.weight
+                state.count += p.count
+                rt.release_partial(p.key)
+                out.exec_s[agg_id] = p.exec_s
+            engine.sync(state.acc)
+            sidecar.on_aggregate(len(order), time.perf_counter() - t0)
+            out.delta, out.weight = state.result()
+            out.count = state.count
+            sidecar.on_send(out.delta.nbytes)
+
+    # ------------------------------------------------------------------
+    def _absorb(self, events: List[RoundEvent], st: "_RoundState", *,
+                draining: bool) -> None:
+        """Fold a batch of runtime events into the round's state."""
+        rt = self.runtime
+        for ev in events:
+            if isinstance(ev, PartialReady):
+                if (ev.round_id != st.round_id or ev.agg_id not in st.sent
+                        or ev.agg_id in st.partials):
+                    # stale leftover (aborted round / force-released
+                    # task): reclaim the orphan object, don't surface
+                    self.stats["stale_dropped"] += 1
+                    rt.discard_partial(ev.key)
+                    continue
+                st.partials[ev.agg_id] = ev
+                self.dispatch(ev)
+            elif isinstance(ev, WorkerCrashed):
+                st.out.crashes += 1
+                self.stats["crashes"] += 1
+                self.dispatch(ev)
+                self._redispatch(ev, st, draining=draining)
+            else:
+                self.dispatch(ev)
+
+    def _redispatch(self, ev: WorkerCrashed, st: "_RoundState", *,
+                    draining: bool) -> None:
+        """Crash recovery: the dead worker's unpublished folds are gone,
+        but every update object it was sent still lives (sealed) in the
+        store — re-dispatch the surviving keys to a fresh/sibling
+        worker so the round reaches its full goal.  A subtree that
+        keeps crashing (poisoned update, worker-side OOM) is given up
+        after ``redispatch_limit`` attempts so the round can't hang."""
+        rt = self.runtime
+        agg_id = ev.agg_id
+        if not agg_id or agg_id not in st.sent or agg_id in st.partials:
+            return  # no expected work died with it (warming fork etc.)
+        tries = st.attempts.get(agg_id, 0)
+        if tries >= self.redispatch_limit:
+            st.lost.add(agg_id)  # deterministic crasher: drop the subtree
+            return
+        surviving = [(k, w) for k, w in st.sent[agg_id]
+                     if rt.update_alive(k)]
+        if not surviving and draining:
+            st.lost.add(agg_id)  # nothing recoverable: give the subtree up
+            return
+        # mid-pump a zero-dispatch subtree is still respawned, so later
+        # updates for its node keep a live route
+        st.attempts[agg_id] = tries + 1
+        rt.spawn_aggregator(agg_id, goal=st.spawn_goals[agg_id],
+                            n_elems=st.n_elems, round_id=st.round_id)
+        for key, weight in surviving:
+            rt.deliver(agg_id, key, weight, round_id=st.round_id)
+        if draining and len(surviving) < st.spawn_goals[agg_id]:
+            rt.drain(agg_id)  # no more arrivals are coming
+        if surviving:
+            st.out.redispatched += 1
+            self.stats["redispatched"] += 1

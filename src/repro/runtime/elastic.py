@@ -95,3 +95,32 @@ class ElasticController:
             "nodes": len(self.nodes),
             "levels": plan.levels(),
         }
+
+    # ------------------------------------------------------------------
+    # event-protocol face: the controller is an ordinary handler on the
+    # round driver (subscribe ``handle`` to NodeJoined/NodeLost) and a
+    # ScaleDecision producer (``decide`` wraps ``step``)
+    # ------------------------------------------------------------------
+    def handle(self, event) -> None:
+        """React to a typed runtime event (repro.runtime.events)."""
+        from repro.runtime.events import NodeJoined, NodeLost
+
+        rid = event.round_id if event.round_id is not None else 0
+        if isinstance(event, NodeLost):
+            self.lose_node(event.node, rid)
+        elif isinstance(event, NodeJoined):
+            self.join_node(event.node, event.capacity or 20.0, rid)
+
+    def decide(self, round_id: int, expected_updates: float):
+        """Re-plan and return the result as a :class:`ScaleDecision`
+        event, ready for ``driver.dispatch``/``Session.emit``."""
+        from repro.runtime.events import ScaleDecision
+
+        before = self._last_total
+        st = self.step(round_id, expected_updates)
+        after = st["aggregators_planned"]
+        direction = ("up" if after > before
+                     else "down" if after < before else "hold")
+        return ScaleDecision(
+            round_id=round_id, aggregators_planned=after,
+            nodes=st["nodes"], levels=st["levels"], direction=direction)

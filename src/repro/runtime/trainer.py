@@ -3,8 +3,11 @@
 ``FederatedTrainer`` — the paper-faithful engine: real per-client local
 SGD (diverged mode), LIFL hierarchical aggregation through the actual
 control-plane objects (selector → BestFit placement → EWMA hierarchy →
-warm pool → gateways/sockmap routing → eager aggregation), failure
-handling via over-provisioning + aggregation goal, async checkpoints.
+warm engines → eager aggregation), failure handling via
+over-provisioning + aggregation goal, async checkpoints.  The round
+itself is driven by :class:`repro.runtime.driver.RoundDriver` — one
+event loop serving both the in-process and the multi-process
+(``shmproc``) runtime, bit-identically.
 
 ``FusedFLTrainer`` — the large-model engine: one jitted fused round step
 (fl/round.py) per round on a mesh; cohort data from the federated
@@ -15,9 +18,12 @@ recompile, when the signature matches — LIFL C8).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from collections import deque
+from dataclasses import dataclass
+from typing import (
+    Any, Deque, Dict, Iterator, List, Optional, Sequence, Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -26,25 +32,19 @@ import numpy as np
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.compat import use_mesh
 from repro.core import (
-    Aggregator,
-    AggregatorPool,
     ClientInfo,
     Coordinator,
-    EventSidecar,
-    Gateway,
-    InProcObjectStore,
     MetricsMap,
     NodeState,
     RoundConfig,
     Selector,
-    SockMap,
-    fedavg_oracle,
 )
-from repro.core.engine import make_engine
 from repro.core.reuse import ExecutableCache
 from repro.fl.round import AggregationConfig, build_train_step
 from repro.fl.server import apply_server_opt, init_server_state
 from repro.optim import sgd_apply
+from repro.runtime.driver import RoundDriver, make_runtime
+from repro.runtime.events import NodeJoined, NodeLost
 
 
 # ===========================================================================
@@ -84,8 +84,23 @@ class ClientRuntime:
         return delta, float(self.dataset.num_samples)
 
 
+#: run_round's PR-2 era kwargs → their canonical names (the client-side
+#: hyperparameters are now prefixed so they can't be confused with the
+#: server optimizer's ``server_lr``).
+_DEPRECATED_ROUND_KWARGS = {
+    "lr": "client_lr",
+    "batch_size": "client_batch_size",
+    "epochs": "client_epochs",
+}
+
+
 class FederatedTrainer:
-    """LIFL rounds over real clients with the host aggregation tree."""
+    """LIFL rounds over real clients with the host aggregation tree.
+
+    One :class:`RoundDriver` loop serves every runtime; pick one with
+    ``runtime="inproc"`` (single process) or ``runtime="shmproc"``
+    (forked aggregator workers over shared-memory rings) — the produced
+    params are bit-identical either way."""
 
     def __init__(
         self,
@@ -98,7 +113,7 @@ class FederatedTrainer:
         server_opt: str = "fedavg",
         server_lr: float = 1.0,
         agg_engine: str = "auto",
-        runtime: Optional[str] = None,
+        runtime: Optional[Any] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 5,
         seed: int = 0,
@@ -106,10 +121,6 @@ class FederatedTrainer:
         self.model = model
         self.params = params
         self.agg_engine = agg_engine
-        # warm engines keyed by aggregator id: a re-created aggregator
-        # at the same tree position re-enters the next round with its
-        # accumulator/scratch already resident (§5.3 at the fold level)
-        self._engines: Dict[str, Any] = {}
         self.clients = {c.info.client_id: c for c in clients}
         self.nodes = nodes or {
             f"node{i}": NodeState(node=f"node{i}", max_capacity=20.0)
@@ -118,7 +129,6 @@ class FederatedTrainer:
         self.round_cfg = round_cfg or RoundConfig(aggregation_goal=8)
         # selectable aggregation runtime: explicit arg > round config
         self.runtime = runtime if runtime is not None else self.round_cfg.runtime
-        self._shmrt = None  # lazy ShmRuntime (persists across rounds: warm)
         self.server_opt = server_opt
         self.server_lr = server_lr
         self.server_state = init_server_state(server_opt, params)
@@ -130,147 +140,156 @@ class FederatedTrainer:
         self.ckpt = AsyncCheckpointer(checkpoint_dir) if checkpoint_dir else None
         self.checkpoint_every = checkpoint_every
         self.log: List[Dict[str, float]] = []
+        # externally submitted updates (Session.submit_update): each one
+        # takes a selected client's slot in the next round's cohort
+        self._external: Deque[Tuple[str, np.ndarray, float]] = deque()
+        self._runtime = None          # lazy: persists across rounds (warm)
+        self._driver: Optional[RoundDriver] = None
+        self._closed = False
 
     # ------------------------------------------------------------------
-    def _warm_engine(self, agg_id: str):
-        eng = self._engines.get(agg_id)
-        if eng is None:
-            eng = make_engine(self.agg_engine)
-            self._engines[agg_id] = eng
-        return eng
+    # the one driver (lazy; wired to the control-plane event handlers)
+    # ------------------------------------------------------------------
+    @property
+    def driver(self) -> RoundDriver:
+        """The event bus is always available (subscribing a handler
+        must not boot a runtime); the runtime itself attaches lazily on
+        the first ``run_round``."""
+        if self._driver is None:
+            if self._closed:
+                raise RuntimeError("trainer is closed")
+            self._driver = RoundDriver(metrics=self.metrics)
+            # node churn reshapes the next plan: the coordinator is an
+            # ordinary event handler on the driver
+            self._driver.on(NodeJoined, self.coordinator.handle_event)
+            self._driver.on(NodeLost, self.coordinator.handle_event)
+        return self._driver
+
+    def _ensure_runtime(self):
+        if self._runtime is None:
+            self._runtime = make_runtime(
+                self.runtime, metrics=self.metrics,
+                agg_engine=self.agg_engine, eager=self.round_cfg.eager)
+            self.driver.runtime = self._runtime
+        return self._runtime
 
     # ------------------------------------------------------------------
-    def run_round(self, *, lr: float = 0.01, batch_size: int = 32,
-                  epochs: int = 1) -> Dict[str, float]:
+    def submit_update(self, client_id: str, flat: np.ndarray,
+                      weight: float = 1.0) -> None:
+        """Queue an externally-computed flat update; it rides the next
+        ``run_round`` in place of a locally-trained client."""
+        flat = np.ascontiguousarray(flat, dtype=np.float32)
+        if flat.size != self._flat_params_size():
+            raise ValueError(
+                f"update has {flat.size} elements, model has "
+                f"{self._flat_params_size()}")
+        self._external.append((client_id, flat, float(weight)))
+
+    # ------------------------------------------------------------------
+    def run_round(self, *, client_lr: Optional[float] = None,
+                  client_batch_size: Optional[int] = None,
+                  client_epochs: Optional[int] = None,
+                  deadline_s: Optional[float] = None,
+                  **legacy) -> Dict[str, float]:
+        """One federated round through the driver (both runtimes)."""
+        vals = {"client_lr": client_lr,
+                "client_batch_size": client_batch_size,
+                "client_epochs": client_epochs}
+        for old, val in legacy.items():
+            new = _DEPRECATED_ROUND_KWARGS.get(old)
+            if new is None:
+                raise TypeError(
+                    f"run_round() got an unexpected keyword "
+                    f"argument {old!r}")
+            if vals[new] is not None:
+                raise TypeError(
+                    f"run_round() got both {old!r} and its replacement "
+                    f"{new!r}")
+            warnings.warn(
+                f"run_round({old}=...) is deprecated; use {new}=...",
+                DeprecationWarning, stacklevel=2)
+            vals[new] = val
+        client_lr = vals["client_lr"] if vals["client_lr"] is not None else 0.01
+        client_batch_size = (vals["client_batch_size"]
+                             if vals["client_batch_size"] is not None else 32)
+        client_epochs = (vals["client_epochs"]
+                         if vals["client_epochs"] is not None else 1)
+        if self._closed:
+            raise RuntimeError("trainer is closed")
+
         t0 = time.perf_counter()
+        self._ensure_runtime()
         plan = self.coordinator.plan_round(self.round_cfg)
         goal = self.round_cfg.aggregation_goal
-        if self.runtime == "shmproc":
-            return self._run_round_shmproc(
-                plan, goal, lr=lr, batch_size=batch_size, epochs=epochs, t0=t0)
-
-        # --- build the aggregation tree from the plan -------------------
-        stores = {n: InProcObjectStore(n) for n in plan.hierarchy.nodes_used}
-        top_node = plan.top_node or next(iter(stores))
-        stores.setdefault(top_node, InProcObjectStore(top_node))
-        top_state: Dict[str, Any] = {}
-
-        def on_top(result, weight):
-            top_state["delta"] = result
-            top_state["weight"] = weight
-
-        top = Aggregator(
-            f"top@{top_node}", stores[top_node],
-            goal=len(plan.hierarchy.nodes_used),
-            eager=self.round_cfg.eager,
-            sidecar=EventSidecar("top", self.metrics),
-            on_complete=on_top,
-            engine=self._warm_engine(f"top@{top_node}"),
+        outcome = self.driver.run_round(
+            round_id=plan.round_id,
+            assignment=plan.placement.assignment,
+            updates=self._cohort_updates(
+                plan, lr=client_lr, batch_size=client_batch_size,
+                epochs=client_epochs),
+            goal=goal,
+            n_elems=self._flat_params_size(),
+            top_node=plan.top_node,
+            deadline_s=deadline_s,
         )
 
-        # per-node middle aggregators feeding the top
-        mids: Dict[str, Aggregator] = {}
-        per_node_goal: Dict[str, int] = {}
-        assignment = plan.placement.assignment
-        for node, idxs in assignment.items():
-            per_node_goal[node] = len(idxs)
-
-            def make_mid(node=node):
-                def done(result, weight):
-                    env = Gateway(node, stores[node]).put_local(
-                        result, plan.round_id, f"mid@{node}", weight
-                    )
-                    # intermediate update to the top (one per node, §5.2)
-                    tkey = stores[top_node].put(np.asarray(result))
-                    env.object_key = tkey
-                    top.recv(env)
-
-                return Aggregator(
-                    f"mid@{node}", stores[node], per_node_goal[node],
-                    eager=self.round_cfg.eager,
-                    sidecar=EventSidecar(f"mid@{node}", self.metrics),
-                    on_complete=done,
-                    engine=self._warm_engine(f"mid@{node}"),
-                )
-
-            mids[node] = make_mid()
-
-        # --- clients train; updates land at their node's middle ---------
-        from repro.core.gateway import UpdateEnvelope
-
-        def deliver(node, cid, flat, weight):
-            key = stores[node].put(flat)
-            env = UpdateEnvelope(key, plan.round_id, cid, weight,
-                                 enqueue_ts=time.perf_counter())
-            mids[node].recv(env)
-
-        accepted, _ = self._train_cohort(
-            plan, goal, deliver, lr=lr, batch_size=batch_size, epochs=epochs)
-
-        # close out mids that got fewer than planned (stragglers); under
-        # lazy timing nothing has folded yet — the queued envelopes are
-        # the round's updates, so the goal is count + queue and flush's
-        # batched drain performs the whole aggregation here
-        for node, mid in mids.items():
-            if not mid.done and (mid.state.count > 0 or mid.fifo):
-                mid.goal = mid.state.count + len(mid.fifo)
-                mid.flush()
-                if not mid.done:
-                    mid._send()
-        if not top.done and (top.state.count > 0 or top.fifo):
-            top.goal = top.state.count + len(top.fifo)
-            top.flush()
-            if not top.done:
-                top._send()
-
         # --- server applies the aggregated update -----------------------
-        if "delta" in top_state:
-            delta_tree = _unflatten_like(top_state["delta"], self.params)
+        if outcome.delta is not None:
+            delta_tree = _unflatten_like(outcome.delta, self.params)
             self.params, self.server_state = apply_server_opt(
                 self.server_opt, self.params, self.server_state, delta_tree,
                 lr=-self.server_lr,  # delta = new - old, so apply +lr·delta
             )
+        # E_{i,t} from the subtree sidecars feeds the capacity model
+        for agg_id, exec_s in outcome.exec_s.items():
+            node = agg_id.split("@", 1)[-1]
+            if node in self.nodes:
+                ns = self.nodes[node]
+                ns.exec_time_s = 0.5 * ns.exec_time_s + 0.5 * max(
+                    exec_s, 1e-6)
+
         version = self.coordinator.finish_round()
         if self.ckpt and version % self.checkpoint_every == 0:
             self.ckpt.submit(version, self.params)
-
         # round over: hand accumulators back so next round's aggregators
         # at the same positions start warm instead of reallocating
-        for eng in self._engines.values():
-            eng.recycle()
+        self._runtime.recycle_engines()
 
         rec = {
             "round": plan.round_id,
-            "updates": float(accepted),
-            "nodes_used": float(len(assignment)),
+            "updates": float(outcome.accepted),
+            "nodes_used": float(len(plan.placement.assignment)),
             "inter_node": float(plan.inter_node_updates),
-            "cold_starts": float(plan.cold_starts),
-            "reused": float(plan.reused),
+            "cold_starts": float(outcome.cold_starts),
+            "reused": float(outcome.warm_starts),
+            "workers": float(outcome.workers),
+            "crashes": float(outcome.crashes),
+            "redispatched": float(outcome.redispatched),
             "wall_s": time.perf_counter() - t0,
         }
         self.log.append(rec)
         return rec
 
     # ------------------------------------------------------------------
-    def _train_cohort(self, plan, goal, deliver, *, lr, batch_size, epochs
-                      ) -> Tuple[int, Dict[str, int]]:
-        """Run the selected clients' local SGD and hand each flattened
-        update to ``deliver(node, client_id, flat, weight)`` — the one
-        cohort loop both runtimes share, so selection/failure semantics
-        can't drift between them.  Returns (accepted, per-node counts)."""
-        assignment = plan.placement.assignment
+    def _cohort_updates(self, plan, *, lr, batch_size, epochs
+                        ) -> Iterator[Tuple[str, str, np.ndarray, float]]:
+        """Yield ``(node, client_id, flat, weight)`` for the planned
+        cohort — the one update source both runtimes consume, so
+        selection/failure semantics can't drift between them.  Iteration
+        *is* the client training; the driver stops pulling at the goal.
+        Externally submitted updates take cohort slots first."""
         selected = plan.selected
         client_nodes: Dict[str, str] = {}
-        for node, idxs in assignment.items():
+        for node, idxs in plan.placement.assignment.items():
             for i in idxs:
                 if i < len(selected):
                     client_nodes[selected[i].client_id] = node
 
-        accepted = 0
-        dispatched: Dict[str, int] = {node: 0 for node in assignment}
         for cid, node in client_nodes.items():
-            if accepted >= goal:
-                break  # aggregation goal reached; stragglers ignored
+            if self._external:
+                ext_cid, flat, weight = self._external.popleft()
+                yield node, ext_cid, flat, weight
+                continue
             cr = self.clients[cid]
             out = cr.local_update(
                 self.model, self.params, lr=lr, batch_size=batch_size,
@@ -280,20 +299,7 @@ class FederatedTrainer:
                 continue  # failed/hibernating client — over-provisioning absorbs
             delta, weight = out
             flat, _, _ = _flatten_tree(delta)
-            deliver(node, cid, flat, weight)
-            dispatched[node] += 1
-            accepted += 1
-        return accepted, dispatched
-
-    # ------------------------------------------------------------------
-    # shmproc: the real multi-process runtime (repro.runtime.shmrt)
-    # ------------------------------------------------------------------
-    def _ensure_shmrt(self):
-        if self._shmrt is None:
-            from repro.runtime.shmrt import ShmRuntime
-
-            self._shmrt = ShmRuntime(metrics=self.metrics)
-        return self._shmrt
+            yield node, cid, flat, weight
 
     def _flat_params_size(self) -> int:
         # must equal len(_flatten_tree(params)[0]): np.prod(()) is
@@ -301,134 +307,28 @@ class FederatedTrainer:
         leaves = jax.tree.leaves(self.params)
         return int(sum(int(np.prod(np.shape(l))) for l in leaves))
 
-    def _run_round_shmproc(self, plan, goal, *, lr, batch_size, epochs, t0
-                           ) -> Dict[str, float]:
-        """One round where each planned middle aggregator is a real
-        worker process: client updates land in the shared-memory store,
-        16-byte keys ride the rings, the parent folds the published
-        partial sums zero-copy out of the store (top aggregator)."""
-        from repro.runtime.shmrt import WorkerCrash
-
-        rt = self._ensure_shmrt()
-        cold0 = rt.stats["cold_starts"]
-        warm0 = rt.stats["warm_starts"]
-        n_elems = self._flat_params_size()
-        assignment = plan.placement.assignment
-        top_node = plan.top_node or (next(iter(assignment)) if assignment
-                                     else "node0")
-
-        for node, idxs in assignment.items():
-            rt.submit_task(f"mid@{node}", goal=len(idxs), n_elems=n_elems,
-                           round_id=plan.round_id)
-
-        # --- clients train; keys dispatched to their node's worker ------
-        update_keys: List[str] = []
-
-        def deliver(node, cid, flat, weight):
-            key = rt.store.put(flat)
-            update_keys.append(key)
-            rt.dispatch(f"mid@{node}", key, weight, round_id=plan.round_id)
-
-        accepted, dispatched = self._train_cohort(
-            plan, goal, deliver, lr=lr, batch_size=batch_size, epochs=epochs)
-
-        # close out stragglers: short tasks publish what they folded
-        counted = set()  # agg_ids a partial is expected from
-        for node in assignment:
-            if dispatched[node] == 0 or dispatched[node] < len(assignment[node]):
-                rt.drain(f"mid@{node}")
-            if dispatched[node] > 0:
-                counted.add(f"mid@{node}")
-
-        # --- collect partials; crashes lose a subtree, not the round ----
-        partials = []
-        crashes = 0
-        while len(partials) < len(counted):
-            try:
-                for p in rt.collect(len(counted) - len(partials)):
-                    if p.round_id != plan.round_id or p.agg_id not in counted:
-                        # stale leftover from an aborted earlier round
-                        rt.store.destroy(p.key)
-                        continue
-                    partials.append(p)
-            except WorkerCrash as e:
-                crashes += 1
-                # only a crash that takes an *expected* subtree with it
-                # shrinks the quota (a zero-dispatch drain worker or a
-                # warming fork contributes nothing either way)
-                if e.agg_id in counted and not any(
-                        p.agg_id == e.agg_id for p in partials):
-                    counted.discard(e.agg_id)
-        # wait out zero-update drains (EMPTY closures) so a late record
-        # can't collide with next round's task under the same agg_id
-        rt.quiesce(timeout=5.0)
-        partials.sort(key=lambda p: p.agg_id)  # deterministic fold order
-
-        # --- top aggregator: fold partial sums zero-copy from the store -
-        if partials:
-            engine = self._warm_engine(f"top@{top_node}")
-            from repro.core.aggregation import FedAvgState
-
-            state = FedAvgState(engine=engine)
-            sidecar = EventSidecar("top", self.metrics)
-            ta = time.perf_counter()
-            state._ensure_acc(n_elems)
-            for p in partials:
-                view = rt.store.get(p.key)      # zero-copy shm view
-                state.acc = engine.add_partial(state.acc, view)
-                state.weight += p.weight
-                state.count += p.count
-                rt.store.release(p.key)
-            dt = time.perf_counter() - ta
-            sidecar.on_aggregate(len(partials), dt)
-            delta_flat, _ = state.result()
-            sidecar.on_send(delta_flat.nbytes)
-            delta_tree = _unflatten_like(delta_flat, self.params)
-            self.params, self.server_state = apply_server_opt(
-                self.server_opt, self.params, self.server_state, delta_tree,
-                lr=-self.server_lr,
-            )
-            # E_{i,t} from the worker sidecars feeds the capacity model
-            for p in partials:
-                node = p.agg_id.split("@", 1)[-1]
-                if node in self.nodes:
-                    ns = self.nodes[node]
-                    ns.exec_time_s = 0.5 * ns.exec_time_s + 0.5 * max(
-                        p.exec_s, 1e-6)
-
-        for p in partials:
-            rt.store.destroy(p.key)
-        for key in update_keys:
-            rt.store.delete(key)
-
-        version = self.coordinator.finish_round()
-        if self.ckpt and version % self.checkpoint_every == 0:
-            self.ckpt.submit(version, self.params)
-        for eng in self._engines.values():
-            eng.recycle()
-
-        rec = {
-            "round": plan.round_id,
-            "updates": float(accepted),
-            "nodes_used": float(len(assignment)),
-            "inter_node": float(plan.inter_node_updates),
-            # per-round deltas, comparable with the inproc runtime's
-            # plan-level numbers under the same keys
-            "cold_starts": float(rt.stats["cold_starts"] - cold0),
-            "reused": float(rt.stats["warm_starts"] - warm0),
-            "workers": float(len(rt.worker_pids())),
-            "crashes": float(crashes),
-            "wall_s": time.perf_counter() - t0,
-        }
-        self.log.append(rec)
-        return rec
-
+    # ------------------------------------------------------------------
     def close(self) -> None:
-        """Tear down the multi-process runtime (graceful drain + shm
-        unlink).  No-op for the in-proc runtime."""
-        if self._shmrt is not None:
-            self._shmrt.shutdown()
-            self._shmrt = None
+        """Tear down the runtime (graceful drain + shm unlink for
+        ``shmproc``).  Idempotent: double-close and close-after-crash
+        are no-ops; ``evaluate``/``params`` stay usable after."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._runtime is not None:
+            self._runtime.close()
+            self._runtime = None
+        self._driver = None
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def __enter__(self) -> "FederatedTrainer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------
     def evaluate(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:

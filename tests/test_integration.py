@@ -150,20 +150,20 @@ def _mk_fl_trainer(failure_prob, seed=0, goal=6):
 
 def test_round_completes_despite_client_failures():
     tr, imgs, labels = _mk_fl_trainer(failure_prob=0.3)
-    rec = tr.run_round(lr=0.05, batch_size=32)
+    rec = tr.run_round(client_lr=0.05, client_batch_size=32)
     assert rec["updates"] >= 1  # over-provisioning absorbed failures
     # training still progresses
     pre = tr.evaluate({"images": imgs[:128], "labels": labels[:128]})
     for _ in range(3):
-        tr.run_round(lr=0.05, batch_size=32)
+        tr.run_round(client_lr=0.05, client_batch_size=32)
     post = tr.evaluate({"images": imgs[:128], "labels": labels[:128]})
     assert post["loss"] < pre["loss"]
 
 
 def test_aggregator_reuse_across_rounds():
     tr, *_ = _mk_fl_trainer(failure_prob=0.0)
-    r1 = tr.run_round(lr=0.01, batch_size=32)
-    r2 = tr.run_round(lr=0.01, batch_size=32)
+    r1 = tr.run_round(client_lr=0.01, client_batch_size=32)
+    r2 = tr.run_round(client_lr=0.01, client_batch_size=32)
     assert r2["reused"] > 0
     assert r2["cold_starts"] <= r1["cold_starts"]
 

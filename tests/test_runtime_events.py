@@ -1,0 +1,507 @@
+"""The event protocol + RoundDriver: serialization, ordering guards,
+the deprecation shim, and the Session facade lifecycle.
+
+Everything here is fast and single-process (the multi-process driver
+scenarios — crash re-dispatch, bit-identity — live in test_shmrt.py).
+"""
+import time
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Session
+from repro.configs.resnet import RESNET18
+from repro.core import ClientInfo, NodeState, RoundConfig
+from repro.data import (build_client_datasets, dirichlet_partition,
+                        synthetic_femnist)
+from repro.models import build_resnet
+from repro.runtime import ClientRuntime, FederatedTrainer
+from repro.runtime.driver import InProcRuntime, RoundDriver
+from repro.runtime.events import (
+    EVENT_TYPES,
+    GoalReached,
+    NodeJoined,
+    NodeLost,
+    PartialReady,
+    RoundDeadline,
+    RoundEvent,
+    ScaleDecision,
+    UpdateArrived,
+    WorkerCrashed,
+    from_wire,
+    to_wire,
+)
+
+# ---------------------------------------------------------------------------
+# wire protocol
+# ---------------------------------------------------------------------------
+
+# one non-default instance per registered event type: the round-trip
+# must preserve every field of every type
+_SAMPLES = [
+    UpdateArrived(round_id=3, client_id="c7", node="n1", agg_id="mid@n1",
+                  key="deadbeef" * 2, weight=12.5),
+    PartialReady(round_id=4, agg_id="mid@n0", key="ab" * 8, weight=7.0,
+                 count=3, exec_s=0.125, worker=2),
+    GoalReached(round_id=5, goal=8, accepted=8),
+    WorkerCrashed(round_id=6, agg_id="mid@n2", worker=1, exitcode=-9),
+    NodeJoined(round_id=None, node="n9", capacity=25.0),
+    NodeLost(round_id=7, node="n3"),
+    RoundDeadline(round_id=8, deadline_s=30.0),
+    ScaleDecision(round_id=9, aggregators_planned=12, nodes=4, levels=2,
+                  direction="up"),
+]
+
+
+def test_every_event_type_has_a_sample():
+    assert {type(s).__name__ for s in _SAMPLES} == set(EVENT_TYPES)
+
+
+@pytest.mark.parametrize("ev", _SAMPLES, ids=lambda e: type(e).__name__)
+def test_wire_roundtrip(ev):
+    raw = to_wire(ev)
+    back = from_wire(raw)
+    assert type(back) is type(ev)
+    assert back == ev
+    # str input works too (a JSON-carrying transport)
+    assert from_wire(raw.decode()) == ev
+
+
+def test_events_are_frozen():
+    ev = GoalReached(round_id=1, goal=4, accepted=4)
+    with pytest.raises(Exception):
+        ev.goal = 5
+
+
+def test_from_wire_rejects_unknown_type():
+    with pytest.raises(ValueError):
+        from_wire(b'{"event":"NotAnEvent","round_id":1}')
+
+
+def test_to_wire_rejects_unregistered_class():
+    with pytest.raises(TypeError):
+        to_wire(RoundEvent(round_id=1))  # the base class is not on the wire
+
+
+# ---------------------------------------------------------------------------
+# driver ordering guards
+# ---------------------------------------------------------------------------
+
+def test_dispatch_reaches_typed_and_catchall_handlers():
+    drv = RoundDriver()
+    typed, every = [], []
+    drv.on(UpdateArrived, typed.append)
+    drv.on(RoundEvent, every.append)
+    assert drv.dispatch(UpdateArrived(round_id=0, client_id="c"))
+    assert drv.dispatch(GoalReached(round_id=0, goal=1, accepted=1))
+    assert len(typed) == 1 and len(every) == 2
+
+
+def test_deadline_after_goal_is_ignored():
+    drv = RoundDriver()
+    seen = []
+    drv.on(RoundDeadline, seen.append)
+    drv.begin_round(5)
+    assert drv.dispatch(GoalReached(round_id=5, goal=4, accepted=4))
+    # the goal was met: a late deadline for the same round is moot
+    assert not drv.dispatch(RoundDeadline(round_id=5, deadline_s=1.0))
+    assert seen == []
+    assert drv.stats["deadline_ignored"] == 1
+
+
+def test_deadline_before_goal_fires():
+    drv = RoundDriver()
+    seen = []
+    drv.on(RoundDeadline, seen.append)
+    drv.begin_round(2)
+    assert drv.dispatch(RoundDeadline(round_id=2, deadline_s=1.0))
+    assert len(seen) == 1
+
+
+def test_stale_round_events_dropped():
+    drv = RoundDriver()
+    seen = []
+    drv.on(RoundEvent, seen.append)
+    drv.begin_round(1)
+    drv.end_round(1)
+    # round 1 is finished: its leftovers must not reach handlers
+    assert not drv.dispatch(PartialReady(round_id=1, agg_id="mid@n0"))
+    assert not drv.dispatch(RoundDeadline(round_id=0, deadline_s=1.0))
+    assert seen == [] and drv.stats["stale_dropped"] == 2
+    # round-agnostic events (round_id=None) always pass
+    assert drv.dispatch(NodeLost(node="n1"))
+    assert len(seen) == 1
+
+
+def test_driver_refuses_nested_rounds():
+    drv = RoundDriver()
+    drv.begin_round(1)
+    with pytest.raises(RuntimeError):
+        drv.begin_round(2)
+
+
+def test_driver_survives_failing_update_source():
+    """A client raising mid-round (iteration IS the training) must not
+    brick the driver: the round closes, resources release, and the next
+    round runs clean."""
+    rt = InProcRuntime()
+    drv = RoundDriver(rt)
+
+    def boom():
+        yield "n0", "c0", np.ones(8, np.float32), 1.0
+        raise RuntimeError("client died mid-training")
+
+    with pytest.raises(RuntimeError, match="client died"):
+        drv.run_round(round_id=0, assignment={"n0": [0, 1]}, updates=boom(),
+                      goal=2, n_elems=8)
+
+    def ok():
+        yield "n0", "c0", np.full(8, 2.0, np.float32), 1.0
+
+    out = drv.run_round(round_id=1, assignment={"n0": [0]}, updates=ok(),
+                        goal=1, n_elems=8)
+    assert out.count == 1
+    np.testing.assert_allclose(out.delta, np.full(8, 2.0, np.float32))
+    rt.close()
+
+
+def test_failed_round_is_retriable_under_same_round_id():
+    """An aborted round must not advance the stale-round horizon: the
+    coordinator never finished it, so the retry reuses the round_id and
+    its events must still reach handlers."""
+    rt = InProcRuntime()
+    drv = RoundDriver(rt)
+
+    def boom():
+        yield "n0", "c0", np.ones(8, np.float32), 1.0
+        raise RuntimeError("flaky client")
+
+    with pytest.raises(RuntimeError):
+        drv.run_round(round_id=5, assignment={"n0": [0, 1]}, updates=boom(),
+                      goal=2, n_elems=8)
+    seen = []
+    drv.on(GoalReached, seen.append)
+    out = drv.run_round(
+        round_id=5, assignment={"n0": [0]},
+        updates=iter([("n0", "c0", np.ones(8, np.float32), 1.0)]),
+        goal=1, n_elems=8)
+    assert out.count == 1
+    assert len(seen) == 1  # retry events were NOT stale-dropped
+    rt.close()
+
+
+def test_no_store_leak_when_handler_raises_after_publish():
+    """A mid that published (eagerly, inside deliver) before a handler
+    raised must not strand its partial object in the store."""
+    rt = InProcRuntime()
+    drv = RoundDriver(rt)
+
+    def die(ev):
+        raise RuntimeError("handler boom")
+
+    drv.on(UpdateArrived, die)  # fires AFTER the goal-1 mid published
+    with pytest.raises(RuntimeError, match="handler boom"):
+        drv.run_round(
+            round_id=0, assignment={"n0": [0]},
+            updates=iter([("n0", "c0", np.ones(8, np.float32), 1.0)]),
+            goal=1, n_elems=8)
+    assert rt.store._objs == {}  # update AND unabsorbed partial reclaimed
+    rt.close()
+
+
+def test_crash_before_any_dispatch_keeps_subtree_alive():
+    """A subtree whose worker dies before receiving any update is
+    respawned, so later updates for its node still have a live route
+    and the round reaches the full goal."""
+    from repro.runtime.events import WorkerCrashed as WC
+
+    class CrashOnce(InProcRuntime):
+        def __init__(self):
+            super().__init__()
+            self.crashed = False
+
+        def poll_events(self, timeout=0.0):
+            evs = super().poll_events(timeout)
+            if not self.crashed:
+                self.crashed = True
+                self._open.pop("mid@n1", None)  # the "worker" died
+                evs.append(WC(round_id=0, agg_id="mid@n1", worker=0))
+            return evs
+
+    rt = CrashOnce()
+    drv = RoundDriver(rt)
+
+    def ups():
+        yield "n0", "c0", np.full(8, 1.0, np.float32), 1.0  # triggers crash
+        yield "n1", "c1", np.full(8, 3.0, np.float32), 1.0
+        yield "n1", "c2", np.full(8, 5.0, np.float32), 1.0
+
+    out = drv.run_round(round_id=0, assignment={"n0": [0], "n1": [1, 2]},
+                        updates=ups(), goal=3, n_elems=8)
+    assert out.crashes == 1
+    assert out.count == 3  # the n1 subtree survived its early crash
+    np.testing.assert_allclose(out.delta, np.full(8, 3.0, np.float32))
+    rt.close()
+
+
+def test_legacy_kwarg_conflicting_with_canonical_raises():
+    tr = _mk_trainer()
+    with pytest.raises(TypeError, match="both"):
+        tr.run_round(client_lr=0.1, lr=0.2)
+
+
+def test_deadline_bounds_the_dispatch_pump():
+    """The wall-clock budget applies to the cohort pump too (client
+    training IS the pump), not just the collect phase."""
+    rt = InProcRuntime()
+    drv = RoundDriver(rt)
+    deadlines = []
+    drv.on(RoundDeadline, deadlines.append)
+
+    def slow():
+        yield "n0", "c0", np.ones(8, np.float32), 1.0
+        time.sleep(0.3)  # a slow client blows the 0.1 s budget
+        yield "n0", "c1", np.ones(8, np.float32), 1.0
+        yield "n0", "c2", np.ones(8, np.float32), 1.0
+
+    out = drv.run_round(round_id=0, assignment={"n0": [0, 1, 2]},
+                        updates=slow(), goal=3, n_elems=8, deadline_s=0.1)
+    assert out.deadline_hit
+    assert len(deadlines) == 1      # fired exactly once
+    assert out.accepted == 1        # pump stopped at the budget
+    assert out.count == 1           # round closed with what had arrived
+    rt.close()
+
+
+def test_redispatch_cap_gives_up_poisoned_subtree():
+    """A subtree that crashes deterministically on every respawn is
+    given up after redispatch_limit attempts — the round closes with
+    the healthy subtrees instead of hanging."""
+    from repro.runtime.events import WorkerCrashed as WC
+
+    class Poisoned(InProcRuntime):
+        def drain(self, agg_id):
+            if agg_id == "mid@n1":
+                if self._open.pop(agg_id, None) is not None:
+                    self._events.append(
+                        WC(round_id=0, agg_id="mid@n1", worker=0))
+            else:
+                super().drain(agg_id)
+
+    rt = Poisoned()
+    drv = RoundDriver(rt)
+
+    def ups():
+        yield "n0", "c0", np.full(8, 2.0, np.float32), 1.0
+        yield "n1", "c1", np.ones(8, np.float32), 1.0
+
+    out = drv.run_round(round_id=0, assignment={"n0": [1], "n1": [0, 2]},
+                        updates=ups(), goal=2, n_elems=8)
+    assert out.redispatched == drv.redispatch_limit
+    assert out.crashes == drv.redispatch_limit + 1
+    assert out.count == 1           # the healthy subtree still folded
+    np.testing.assert_allclose(out.delta, np.full(8, 2.0, np.float32))
+    rt.close()
+
+
+def test_subscribing_handlers_does_not_boot_runtime():
+    """Session.on/emit must not construct the runtime as a side effect
+    (a shmproc session would fork a dispatcher just to add a handler)."""
+    model, params, clients = _mk_clients()
+    with Session.open(model, params, clients,
+                      round_cfg=RoundConfig(aggregation_goal=4)) as sess:
+        sess.on(UpdateArrived, lambda ev: None)
+        sess.emit(NodeJoined(node="nx", capacity=5.0))
+        assert sess.trainer._runtime is None   # event bus only
+        sess.run_round(client_lr=0.05)
+        assert sess.trainer._runtime is not None
+
+
+def test_deadline_closes_round_even_after_goal():
+    """A counted subtree that never publishes must not hang run_round
+    when a deadline budget is set: the budget always closes the round;
+    the guard only suppresses the RoundDeadline *event* once the goal
+    was met."""
+    class Withholding(InProcRuntime):
+        def drain(self, agg_id):
+            if agg_id == "mid@n1":
+                self._open.pop(agg_id, None)   # swallow: never publishes
+            else:
+                super().drain(agg_id)
+
+    rt = Withholding()
+    drv = RoundDriver(rt)
+    deadlines = []
+    drv.on(RoundDeadline, deadlines.append)
+
+    def ups():
+        yield "n0", "c0", np.ones(8, np.float32), 1.0
+        yield "n1", "c1", np.ones(8, np.float32), 1.0
+
+    out = drv.run_round(round_id=0, assignment={"n0": [0], "n1": [1, 2]},
+                        updates=ups(), goal=2, n_elems=8, deadline_s=0.3)
+    assert out.deadline_hit
+    assert out.count == 1           # closed with the partial at hand
+    assert deadlines == []          # goal met first: event suppressed...
+    assert drv.stats["deadline_ignored"] == 1  # ...exactly once
+    rt.close()
+
+
+# ---------------------------------------------------------------------------
+# trainer/Session end-to-end (inproc runtime)
+# ---------------------------------------------------------------------------
+
+def _mk_clients(n_samples=200, n_clients=8, failure_prob=0.0):
+    cfg = RESNET18.reduced()
+    model = build_resnet(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    imgs, labels = synthetic_femnist(n_samples, num_classes=10, seed=0)
+    shards = dirichlet_partition(labels, n_clients, alpha=0.5)
+    clients = [
+        ClientRuntime(ClientInfo(d.client_id, d.num_samples), d,
+                      failure_prob=failure_prob)
+        for d in build_client_datasets(imgs, labels, shards)
+    ]
+    return model, params, clients
+
+
+def _mk_trainer(seed=0, **kw):
+    model, params, clients = _mk_clients()
+    return FederatedTrainer(
+        model, params, clients,
+        round_cfg=RoundConfig(aggregation_goal=4, over_provision=1.5),
+        seed=seed, **kw)
+
+
+def test_run_round_legacy_kwargs_shim():
+    """PR-2 era run_round(lr=, batch_size=, epochs=) still works, warns
+    DeprecationWarning, and produces the exact same params."""
+    tr_old, tr_new = _mk_trainer(seed=0), _mk_trainer(seed=0)
+    with pytest.warns(DeprecationWarning):
+        rec_old = tr_old.run_round(lr=0.05, batch_size=32, epochs=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the canonical spelling is clean
+        rec_new = tr_new.run_round(client_lr=0.05, client_batch_size=32,
+                                   client_epochs=1)
+    assert rec_old["updates"] == rec_new["updates"]
+    for a, b in zip(jax.tree.leaves(tr_old.params),
+                    jax.tree.leaves(tr_new.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_round_unknown_kwarg_raises():
+    tr = _mk_trainer()
+    with pytest.raises(TypeError):
+        tr.run_round(learning_rate=0.1)
+
+
+def test_session_round_events_and_metrics():
+    model, params, clients = _mk_clients()
+    arrived, goals = [], []
+    with Session.open(
+        model, params, clients,
+        round_cfg=RoundConfig(aggregation_goal=4, over_provision=1.5),
+    ) as sess:
+        sess.on(UpdateArrived, arrived.append)
+        sess.on(GoalReached, goals.append)
+        rec = sess.run_round(client_lr=0.05, client_batch_size=32)
+        assert rec["updates"] == 4.0
+        assert len(arrived) == 4 and len(goals) == 1
+        assert goals[0].accepted == 4
+        m = sess.metrics()
+        assert m["model_version"] == 1 and len(m["rounds"]) == 1
+        assert m["driver"]["events_dispatched"] >= 5
+        assert any(k.startswith("top/") for k in m["sidecar"])
+    assert sess.closed
+
+
+def test_session_submit_update_rides_a_cohort_slot():
+    model, params, clients = _mk_clients()
+    n = sum(int(np.prod(np.shape(l))) for l in jax.tree.leaves(params))
+    with Session.open(
+        model, params, clients,
+        round_cfg=RoundConfig(aggregation_goal=4, over_provision=1.5),
+        server_opt="fedavg",
+    ) as sess:
+        ext = []
+        sess.on(UpdateArrived, lambda ev: ext.append(ev.client_id))
+        sess.submit_update("edge-1", np.full(n, 0.25, np.float32), weight=2.0)
+        rec = sess.run_round(client_lr=0.05)
+        assert rec["updates"] == 4.0
+        assert "edge-1" in ext  # the external update took a slot
+    with pytest.raises(ValueError):
+        Session.open(model, params, clients).submit_update(
+            "bad", np.zeros(3, np.float32))
+
+
+def test_session_close_is_idempotent():
+    model, params, clients = _mk_clients()
+    sess = Session.open(model, params, clients,
+                        round_cfg=RoundConfig(aggregation_goal=4))
+    sess.run_round(client_lr=0.05)
+    sess.close()
+    sess.close()          # double close: no raise
+    with sess:            # re-entering a closed session is harmless...
+        pass
+    assert sess.closed
+    with pytest.raises(RuntimeError):
+        sess.run_round()  # ...but driving rounds on it is an error
+    # evaluate stays usable after close (params are still held)
+    imgs, labels = synthetic_femnist(64, num_classes=10, seed=1)
+    assert "loss" in sess.evaluate({"images": imgs, "labels": labels})
+
+
+def test_node_churn_events_reshape_next_plan():
+    """NodeLost/NodeJoined via Session.emit are coordinator hooks: the
+    next round plans around the changed node set."""
+    model, params, clients = _mk_clients()
+    with Session.open(
+        model, params, clients,
+        nodes={f"node{i}": NodeState(node=f"node{i}", max_capacity=3.0)
+               for i in range(3)},
+        round_cfg=RoundConfig(aggregation_goal=6, over_provision=1.2),
+    ) as sess:
+        sess.run_round(client_lr=0.05)
+        assert set(sess.nodes) == {"node0", "node1", "node2"}
+        sess.emit(NodeLost(node="node2"))
+        sess.emit(NodeJoined(node="node9", capacity=5.0))
+        assert "node2" not in sess.nodes and "node9" in sess.nodes
+        rec = sess.run_round(client_lr=0.05)
+        assert rec["updates"] > 0
+        plan = sess.trainer.coordinator.history[-1]
+        assert "node2" not in plan.placement.assignment
+
+
+def test_lazy_timing_still_aggregates():
+    """RoundConfig(eager=False) queues then folds at drain — the PR-1
+    regression (lazy rounds silently skipping aggregation) stays dead
+    through the driver path."""
+    model, params, clients = _mk_clients()
+    tr = FederatedTrainer(
+        model, params, clients,
+        round_cfg=RoundConfig(aggregation_goal=4, over_provision=1.5,
+                              eager=False),
+        seed=0)
+    before = [np.asarray(l).copy() for l in jax.tree.leaves(tr.params)]
+    rec = tr.run_round(client_lr=0.05)
+    assert rec["updates"] == 4.0
+    moved = any(not np.array_equal(np.asarray(a), b)
+                for a, b in zip(jax.tree.leaves(tr.params), before))
+    assert moved
+
+
+def test_eager_and_lazy_rounds_match_bitwise():
+    """Recv∥Agg overlap is a timing choice, not a numeric one."""
+    tr_e = _mk_trainer(seed=0)
+    model, params, clients = _mk_clients()
+    tr_l = FederatedTrainer(
+        model, params, clients,
+        round_cfg=RoundConfig(aggregation_goal=4, over_provision=1.5,
+                              eager=False),
+        seed=0)
+    tr_e.run_round(client_lr=0.05)
+    tr_l.run_round(client_lr=0.05)
+    for a, b in zip(jax.tree.leaves(tr_e.params), jax.tree.leaves(tr_l.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

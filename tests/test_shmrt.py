@@ -294,9 +294,58 @@ def test_runtime_sigkill_mid_drain_reclaims_segments():
 
 
 @pytest.mark.slow
+def test_driver_redispatch_after_sigkill_reaches_full_goal():
+    """SIGKILL a worker mid-round: the crashed subtree's surviving
+    (still-sealed) update objects are re-dispatched to a fresh worker —
+    the round reaches the FULL goal instead of shrinking it, and the
+    runtime closes idempotently afterward."""
+    from repro.runtime.driver import RoundDriver, ShmProcRuntime
+    from repro.runtime.events import WorkerCrashed
+
+    N = 1 << 14
+    rng = np.random.default_rng(3)
+    ups = {n: [rng.normal(size=(N,)).astype(np.float32) for _ in range(4)]
+           for n in ("n0", "n1")}
+    ws = {"n0": [1.0, 2.0, 3.0, 4.0], "n1": [2.0, 2.5, 1.5, 0.5]}
+    # n0 plans 5 slots but only gets 4 updates, so its worker holds an
+    # open, unpublished task when the SIGKILL lands
+    assignment = {"n0": [0, 1, 2, 3, 4], "n1": [5, 6, 7, 8]}
+    crashes = []
+
+    rt = ShmProcRuntime()
+    drv = RoundDriver(rt)
+    drv.on(WorkerCrashed, crashes.append)
+
+    def updates():
+        for u, w in zip(ups["n0"], ws["n0"]):
+            yield "n0", "c", u, w
+        victim = rt._rt._route["mid@n0"]
+        os.kill(victim.proc.pid, signal.SIGKILL)
+        for u, w in zip(ups["n1"], ws["n1"]):
+            yield "n1", "c", u, w
+
+    out = drv.run_round(round_id=1, assignment=assignment,
+                        updates=updates(), goal=8, n_elems=N, top_node="n0")
+    try:
+        assert out.accepted == 8
+        assert out.crashes >= 1 and out.redispatched >= 1
+        assert len(crashes) >= 1 and crashes[0].agg_id == "mid@n0"
+        # every dispatched update made the round: full goal, no shrink
+        assert out.count == 8
+        oracle = fedavg_oracle(ups["n0"] + ups["n1"], ws["n0"] + ws["n1"])
+        np.testing.assert_allclose(out.delta, oracle, rtol=1e-5, atol=1e-5)
+    finally:
+        rt.close()
+        rt.close()  # close-after-crash is idempotent
+    assert [n for n in os.listdir("/dev/shm")
+            if n.startswith(rt._rt.prefix)] == []
+
+
+@pytest.mark.slow
 def test_trainer_shmproc_matches_inproc():
     """FederatedTrainer(runtime="shmproc") reproduces the in-proc
-    round bit for bit (same clients, same seeds, same engine math)."""
+    round bit for bit over a ≥3-round run (same clients, same seeds,
+    same engine math through the one RoundDriver loop)."""
     import jax
 
     from repro.configs import RESNET18
@@ -322,13 +371,16 @@ def test_trainer_shmproc_matches_inproc():
 
     tr_in, tr_sh = mk("inproc"), mk("shmproc")
     try:
-        for _ in range(2):
-            ri = tr_in.run_round(lr=0.05, batch_size=32)
-            rs = tr_sh.run_round(lr=0.05, batch_size=32)
+        for r in range(3):
+            ri = tr_in.run_round(client_lr=0.05, client_batch_size=32)
+            rs = tr_sh.run_round(client_lr=0.05, client_batch_size=32)
             assert ri["updates"] == rs["updates"]
-        assert rs["reused"] > 0  # round 2 reused warm worker processes
-        for a, b in zip(jax.tree.leaves(tr_in.params),
-                        jax.tree.leaves(tr_sh.params)):
-            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            # params bit-identical across runtimes after EVERY round
+            for a, b in zip(jax.tree.leaves(tr_in.params),
+                            jax.tree.leaves(tr_sh.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert rs["reused"] > 0  # later rounds reused warm workers
     finally:
         tr_sh.close()
+        tr_sh.close()  # double-close: no raise, no leak
+        tr_in.close()
