@@ -18,7 +18,8 @@ import sys
 import time
 
 # suites whose rows land in the --json perf-trajectory file
-JSON_SUITES = ("agg_kernel", "dataplane_fig7", "shmrt", "control_overhead")
+JSON_SUITES = ("agg_kernel", "dataplane_fig7", "shmrt", "control_overhead",
+               "net")
 
 # PR-1 acceptance floor: blocked fold ≥ 2× naive.  A regression here
 # silently rots every throughput claim downstream, so the harness fails
@@ -60,6 +61,28 @@ def _check_driver_dispatch_gate(rows) -> None:
                 f"dispatch (row {r['case']!r}; see ROADMAP.md)")
 
 
+def _check_net_traffic_gate(rows) -> None:
+    """PR-4 acceptance gate: cross-node aggregation traffic per round
+    must stay partials-only — ≤ nodes × model_size × 1.1.  More means
+    per-client updates are fanning in to the top across the wire."""
+    import re
+
+    for r in rows:
+        if r["bench"] != "net":
+            continue
+        m = re.search(r"partial_mb=([\d.]+);bound_mb=([\d.]+)", r["derived"])
+        if m and float(m.group(1)) > float(m.group(2)):
+            sys.exit(
+                f"FATAL: cross-node traffic regression — partial payloads "
+                f"{m.group(1)} MB/round > partials-only bound "
+                f"{m.group(2)} MB (row {r['case']!r}; see ROADMAP.md)")
+        b = re.search(r"bitexact=(\d)", r["derived"])
+        if b and b.group(1) != "1":
+            sys.exit(
+                f"FATAL: cross-node round is not bit-identical to the "
+                f"single-node tree (row {r['case']!r})")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -80,6 +103,7 @@ def main() -> None:
         bench_control_overhead,
         bench_dataplane,
         bench_hierarchy,
+        bench_net,
         bench_orchestration,
         bench_queuing,
         bench_shmrt,
@@ -94,6 +118,7 @@ def main() -> None:
         "control_overhead": bench_control_overhead.run,
         "agg_kernel": bench_agg_kernel.run,
         "shmrt": bench_shmrt.run,
+        "net": bench_net.run,
         "tta_fig9": bench_tta.run,
     }
     if args.only:
@@ -117,6 +142,8 @@ def main() -> None:
             _check_engine_fold_floor(rows)
         if name == "control_overhead":
             _check_driver_dispatch_gate(rows)
+        if name == "net":
+            _check_net_traffic_gate(rows)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
 
     if args.json:

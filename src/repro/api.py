@@ -3,14 +3,25 @@
 A :class:`Session` is the one object user code talks to: it owns a
 :class:`~repro.runtime.trainer.FederatedTrainer`, its
 :class:`~repro.runtime.driver.RoundDriver` event loop, and the selected
-aggregation runtime (``"inproc"`` or ``"shmproc"``), and exposes the
-whole platform as four verbs::
+aggregation runtime (``"inproc"``, ``"shmproc"``, or — when ``nodes``
+is a list of daemon addresses — the multi-node ``RemoteRuntime``), and
+exposes the whole platform as four verbs::
 
     with Session.open(model, params, clients, runtime="shmproc") as s:
         s.submit_update("edge-7", flat_delta, weight=12)   # external client
         rec = s.run_round(client_lr=0.05)                   # drive one round
         print(s.metrics()["rounds"][-1], s.evaluate(batch))
     # context exit closes the runtime (idempotent; shm segments unlinked)
+
+Multi-node: point ``nodes`` at running ``netd`` daemons and the same
+round loop drives a cross-node hierarchical round (only sealed partial
+sums cross the wire); ``serve`` turns the session into an ingest
+endpoint for external client processes::
+
+    with Session.open(model, params, clients,
+                      nodes=["10.0.0.2:7000", "10.0.0.3:7000"]) as s:
+        addr = s.serve("0.0.0.0:7500")   # accepts submit_update frames
+        s.run_round(client_lr=0.05)
 
 Everything else — typed events, elastic scaling, node churn — plugs in
 through the same event protocol::
@@ -20,6 +31,7 @@ through the same event protocol::
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Type
 
 import numpy as np
@@ -37,6 +49,9 @@ class Session:
 
     def __init__(self, trainer: FederatedTrainer):
         self._trainer = trainer
+        self._server = None           # Session.serve ingest endpoint
+        self._serve_thread: Optional[threading.Thread] = None
+        self._serve_stop: Optional[threading.Event] = None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -47,7 +62,7 @@ class Session:
         clients: Sequence[ClientRuntime],
         *,
         runtime: Any = "inproc",
-        nodes: Optional[Dict[str, Any]] = None,
+        nodes: Any = None,        # {name: NodeState} | [netd addresses]
         round_cfg: Optional[Any] = None,
         server_opt: str = "fedavg",
         server_lr: float = 1.0,
@@ -57,14 +72,58 @@ class Session:
         seed: int = 0,
     ) -> "Session":
         """Open a session: ``model.loss(params, batch)`` plus a client
-        fleet, on the chosen aggregation runtime."""
-        return cls(FederatedTrainer(
-            model, params, clients,
-            nodes=nodes, round_cfg=round_cfg, server_opt=server_opt,
-            server_lr=server_lr, agg_engine=agg_engine, runtime=runtime,
-            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-            seed=seed,
-        ))
+        fleet, on the chosen aggregation runtime.
+
+        ``nodes`` is either the usual ``{name: NodeState}`` mapping
+        (single-node runtimes) or a list of ``netd`` daemon addresses
+        (``"host:port"`` / ``"unix:/path"``) — the multi-node mode: a
+        :class:`~repro.runtime.netrt.RemoteRuntime` is connected to the
+        fleet, each daemon's name/capacity (from its welcome handshake)
+        becomes a placement ``NodeState``, and placement defaults to
+        the locality policy that minimizes cross-node partials."""
+        remote = None
+        if isinstance(nodes, (list, tuple)):
+            from repro.core.placement import NodeState
+            from repro.runtime.netrt import RemoteRuntime
+
+            if runtime != "inproc":
+                # the node-side runtime was fixed when each netd was
+                # launched (netd --runtime); silently ignoring the
+                # caller's choice would be worse than refusing
+                raise ValueError(
+                    "runtime= cannot be combined with a list of node "
+                    "addresses — multi-node sessions always run on the "
+                    "RemoteRuntime; pick the per-node runtime with "
+                    "netd --runtime instead")
+            remote = RemoteRuntime(nodes, agg_engine=agg_engine)
+            nodes = {name: NodeState(node=name, max_capacity=cap)
+                     for name, cap in remote.node_info().items()}
+            runtime = remote
+            if round_cfg is None:
+                from repro.core import RoundConfig
+                round_cfg = RoundConfig(aggregation_goal=8,
+                                        placement_policy="locality")
+        try:
+            sess = cls(FederatedTrainer(
+                model, params, clients,
+                nodes=nodes, round_cfg=round_cfg, server_opt=server_opt,
+                server_lr=server_lr, agg_engine=agg_engine, runtime=runtime,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every,
+                seed=seed,
+            ))
+        except BaseException:
+            if remote is not None:
+                remote.close()   # the fleet connections must not leak
+            raise
+        if remote is not None:
+            # the connections already exist, so attach eagerly: a
+            # session closed before its first round must still close
+            # them (single-node runtimes stay lazy), and the wire
+            # sidecar should land in the session's metrics map
+            remote.metrics = sess._trainer.metrics
+            sess._trainer._ensure_runtime()
+        return sess
 
     # ------------------------------------------------------------------
     # the four verbs
@@ -106,6 +165,74 @@ class Session:
         return self._trainer.evaluate(batch)
 
     # ------------------------------------------------------------------
+    # serve mode: ingest updates from external client processes
+    # ------------------------------------------------------------------
+    def serve(self, addr: str = "127.0.0.1:0") -> str:
+        """Start accepting ``submit_update`` frames from external
+        client processes on ``addr`` (see
+        :func:`repro.runtime.netrt.push_update` for the client side).
+        Each accepted update is queued exactly like
+        :meth:`submit_update` — it takes a cohort slot in the next
+        round.  Returns the bound address (ephemeral ports resolved);
+        idempotent while already serving.  The listener runs on a
+        daemon thread and stops with :meth:`close`."""
+        if self._server is not None:
+            return self._server.addr
+        from repro.runtime.netrt.transport import FrameServer, PeerDead
+
+        server = FrameServer(addr)
+        stop = threading.Event()
+
+        def loop() -> None:
+            while not stop.is_set():
+                for conn, frame in server.poll(0.1):
+                    if frame is None:
+                        continue
+                    try:
+                        self._serve_frame(conn, frame)
+                    except PeerDead:
+                        pass
+                    except Exception as e:  # reject, don't die
+                        try:
+                            conn.send("error",
+                                      {"msg": f"{type(e).__name__}: {e}"})
+                        except PeerDead:
+                            pass
+
+        self._server = server
+        self._serve_stop = stop
+        self._serve_thread = threading.Thread(
+            target=loop, name="session-serve", daemon=True)
+        self._serve_thread.start()
+        return server.addr
+
+    def _serve_frame(self, conn, frame) -> None:
+        from repro.runtime.netrt.transport import resolve_dtype
+
+        if frame.kind == "hello":
+            conn.send("welcome", {"node": "session", "proto": 1,
+                                  "capacity": 0.0, "runtime": "serve"})
+        elif frame.kind == "ping":
+            conn.send("pong", {"t": frame.meta.get("t")})
+        elif frame.kind == "submit_update":
+            # the frombuffer view is already a fresh read-only array
+            # over this frame's blob; the trainer copies iff it must
+            # (dtype/contiguity), so no extra model-size memcpy here
+            flat = np.frombuffer(
+                frame.blob, dtype=resolve_dtype(frame.meta["dtype"]),
+            ).reshape(frame.meta["shape"])
+            self.submit_update(frame.meta["client_id"], flat,
+                               weight=frame.meta.get("weight", 1.0))
+            conn.send("ack", {"client_id": frame.meta["client_id"],
+                              "queued": len(self._trainer._external)})
+        else:
+            conn.send("error", {"msg": f"unknown frame {frame.kind!r}"})
+
+    @property
+    def serve_addr(self) -> Optional[str]:
+        return self._server.addr if self._server is not None else None
+
+    # ------------------------------------------------------------------
     # event protocol
     # ------------------------------------------------------------------
     def on(self, event_type: Type[RoundEvent],
@@ -137,6 +264,11 @@ class Session:
         return self._trainer.closed
 
     def close(self) -> None:
+        if self._serve_stop is not None:
+            self._serve_stop.set()
+            self._serve_thread.join(timeout=5.0)
+            self._server.close()
+            self._server = self._serve_thread = self._serve_stop = None
         self._trainer.close()
 
     def __enter__(self) -> "Session":

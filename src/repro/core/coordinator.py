@@ -113,10 +113,20 @@ class Coordinator:
         self.history: List[RoundPlan] = []
 
     # ------------------------------------------------------------------
-    def plan_round(self, cfg: RoundConfig) -> RoundPlan:
+    def plan_round(self, cfg: RoundConfig,
+                   sampler: Optional[Callable] = None) -> RoundPlan:
         rid = self.round_id
         n_select = int(np.ceil(cfg.aggregation_goal * cfg.over_provision))
-        selected = self.selector.select(n_select, rid)
+        if sampler is not None:
+            # pluggable per-round client sampling: the sampler sees the
+            # available pool and owns the choice (seed its own RNG for
+            # reproducible cohorts); selection bookkeeping still applies
+            pool = [c for c in self.selector.clients.values() if c.available]
+            selected = list(sampler(rid, pool))
+            for c in selected:
+                c.last_selected_round = rid
+        else:
+            selected = self.selector.select(n_select, rid)
 
         # reset per-round assignment, keep k/E from metrics
         for ns in self.nodes.values():
@@ -178,8 +188,12 @@ class Coordinator:
     def handle_event(self, event) -> None:
         """Ordinary event handler for the round driver: node churn
         reshapes the next ``plan_round`` (the shared ``nodes`` dict) and
-        retires the lost node's pooled aggregators."""
-        from repro.runtime.events import NodeJoined, NodeLost
+        retires the lost node's pooled aggregators; each subtree's
+        ``PartialReady`` feeds that node's RC capacity model (§5.1) —
+        E_{i,t} from the measured fold time, k_{i,t} from the folded
+        count — so multi-node placement learns per-node speed from the
+        same events that ride the wire."""
+        from repro.runtime.events import NodeJoined, NodeLost, PartialReady
 
         if isinstance(event, NodeJoined):
             self.nodes[event.node] = NodeState(
@@ -189,3 +203,17 @@ class Coordinator:
             for agg_id, inst in list(self.pool.instances.items()):
                 if inst.node == event.node:
                     self.pool.terminate(agg_id)
+        elif isinstance(event, PartialReady):
+            ns = self.nodes.get(event.agg_id.split("@", 1)[-1])
+            if ns is not None:
+                exec_s = max(event.exec_s, 1e-6)
+                ns.exec_time_s = 0.5 * ns.exec_time_s + 0.5 * exec_s
+                # k_{i,t} is a RATE (updates/s), not a count, and the
+                # planner computes Q = k·E with the BLENDED E — so the
+                # rate must be taken against that same blended value or
+                # the units mix across rounds (a node whose measured
+                # exec is far below the 1.0s default would look
+                # saturated while idle).  Q then tracks the in-flight
+                # update count (Little's law), in `updates` units.
+                ns.arrival_rate = 0.5 * ns.arrival_rate + 0.5 * (
+                    float(event.count) / ns.exec_time_s)

@@ -179,7 +179,16 @@ class BlockedNumpyEngine(AggregationEngine):
             # acc block stays cache-resident across all K rows: the
             # burst costs one DRAM read of the accumulator, not K
             for u, w in zip(updates, ws):
-                np.multiply(u[off:end], w, out=s, casting="unsafe")
+                ub = u[off:end]
+                if ub.dtype == np.float32:
+                    np.multiply(ub, w, out=s, casting="unsafe")
+                else:
+                    # dtype-preserving fold: the wire update stays in
+                    # its reduced dtype (bf16/f16 — half the DRAM read);
+                    # upcast happens block-wise into the f32 scratch, so
+                    # accumulation precision is still full f32
+                    np.copyto(s, ub, casting="unsafe")
+                    np.multiply(s, w, out=s)
                 np.add(a, s, out=a, casting="unsafe")
         self._count(len(ws), n)
         return acc
@@ -209,7 +218,10 @@ class JaxEngine(AggregationEngine):
         self._jnp = jnp
         self._accumulate = eager_accumulate
         self._accumulate_k = fedavg_accumulate_k
-        self._slab: Optional[np.ndarray] = None
+        # staging slabs keyed by wire dtype: a bf16 burst ships a (K,N)
+        # bf16 slab to the device (half the host/PCIe bytes) and the
+        # kernel accumulates in f32 VREGs — dtype-preserving folds
+        self._slabs: Dict[str, np.ndarray] = {}
         # donated in-place zeroing: a recycled accumulator's device
         # buffer is rewound to zeros without a fresh allocation
         self._zero = jax.jit(lambda a: a * 0.0, donate_argnums=(0,))
@@ -231,15 +243,19 @@ class JaxEngine(AggregationEngine):
         self._acc_cache = acc if acc is not None else self._last
         self._last = None
 
-    def _slab_for(self, k: int, n: int) -> np.ndarray:
-        if self._slab is None or self._slab.shape[0] < k or self._slab.shape[1] != n:
-            self._slab = np.empty((max(k, min(self.max_k, 8)), n), np.float32)
+    def _slab_for(self, k: int, n: int, dtype: np.dtype) -> np.ndarray:
+        slab = self._slabs.get(dtype.str)
+        if slab is None or slab.shape[0] < k or slab.shape[1] != n:
+            slab = np.empty((max(k, min(self.max_k, 8)), n), dtype)
+            self._slabs[dtype.str] = slab
             self.buffer_allocs += 1
-        return self._slab
+        return slab
 
     def fold(self, acc, update: np.ndarray, w: float):
         self._count(1, update.size)
-        u = self._jnp.asarray(np.asarray(update, np.float32))
+        # wire dtype rides to the device untouched; the kernel upcasts
+        # to f32 in-register (accumulate-in-f32, any float wire dtype)
+        u = self._jnp.asarray(np.ascontiguousarray(update))
         out = self._accumulate(acc, u, np.float32(w), impl=self.impl)
         self._last = out
         return out
@@ -250,7 +266,11 @@ class JaxEngine(AggregationEngine):
         if k == 1:
             return self.fold(acc, updates[0], weights[0])
         n = int(acc.shape[0])
-        slab = self._slab_for(k, n)
+        # a homogeneous burst keeps its wire dtype end-to-end; a mixed
+        # one stages through f32 (the common denominator)
+        dtypes = {u.dtype.str for u in updates}
+        dtype = updates[0].dtype if len(dtypes) == 1 else np.dtype(np.float32)
+        slab = self._slab_for(k, n, np.dtype(dtype))
         for i, u in enumerate(updates):          # row fill, no concat/stack
             np.copyto(slab[i], u, casting="unsafe")
         self._count(k, n)

@@ -63,7 +63,8 @@ class Placement:
         return len(self.nodes_used)
 
 
-def _fit_nodes(nodes: List[NodeState], policy: str) -> List[NodeState]:
+def _fit_nodes(nodes: List[NodeState], policy: str,
+               used: Optional[set] = None) -> List[NodeState]:
     if policy == "bestfit":
         # tightest feasible bin first -> fewest nodes, max shared memory
         return sorted(nodes, key=lambda n: n.residual_capacity)
@@ -72,6 +73,18 @@ def _fit_nodes(nodes: List[NodeState], policy: str) -> List[NodeState]:
         return sorted(nodes, key=lambda n: -n.residual_capacity)
     if policy == "firstfit":
         return nodes
+    if policy == "locality":
+        # multi-node mode: every *additional* node used costs one sealed
+        # model-size partial on the wire per round, so a subtree sticks
+        # to nodes already holding part of the round (tightest such bin
+        # first) and opens a fresh node — largest residual capacity, so
+        # the new subtree absorbs the most before the next spill — only
+        # when the used set is saturated
+        used = used or set()
+        return sorted(nodes, key=lambda n: (
+            n.node not in used,
+            n.residual_capacity if n.node in used else -n.residual_capacity,
+        ))
     raise ValueError(f"unknown placement policy {policy!r}")
 
 
@@ -96,7 +109,7 @@ def place_updates(
     for idx in range(num_updates):
         w = weights[idx]
         placed = False
-        for cand in _fit_nodes(live, policy):
+        for cand in _fit_nodes(live, policy, used=set(assignment)):
             if cand.residual_capacity >= w:
                 assignment.setdefault(cand.node, []).append(idx)
                 cand.assigned += w
@@ -121,3 +134,21 @@ def choose_top_node(nodes: Dict[str, NodeState],
 def inter_node_transfers(assignment: Dict[str, List[int]], top_node: str) -> int:
     """One intermediate update crosses the network per non-top node used."""
     return sum(1 for n in assignment if n != top_node and assignment[n])
+
+
+def cross_node_bytes(assignment: Dict[str, List[int]], top_node: str,
+                     model_bytes: int) -> int:
+    """Partials-only cross-node traffic per round under the paper's
+    topology: one sealed Σc·u payload per non-top node used.  The
+    locality policy exists to minimize this; ``bench_net`` gates the
+    measured wire bytes against the controller-topology analogue
+    (every node ships its partial to the driver-side top fold)."""
+    return inter_node_transfers(assignment, top_node) * int(model_bytes)
+
+
+def partial_traffic_bound(n_nodes: int, model_bytes: int,
+                          slack: float = 1.1) -> int:
+    """The acceptance bound for a round's cross-node aggregation
+    traffic: partials only — nodes × model_size × slack.  Anything
+    above it means per-client updates are fanning in to the top."""
+    return int(n_nodes * model_bytes * slack)

@@ -1,6 +1,7 @@
 from repro.data.loader import ClientDataset, CohortTokenLoader, build_client_datasets
 from repro.data.partition import ClientShard, client_sample_counts, dirichlet_partition
-from repro.data.synthetic import TokenTaskStream, synthetic_femnist
+from repro.data.synthetic import (StragglerModel, TokenTaskStream,
+                                 synthetic_femnist)
 
 __all__ = [
     "ClientDataset",
@@ -9,6 +10,7 @@ __all__ = [
     "ClientShard",
     "client_sample_counts",
     "dirichlet_partition",
+    "StragglerModel",
     "TokenTaskStream",
     "synthetic_femnist",
 ]

@@ -6,6 +6,11 @@
 * ``synthetic_femnist`` — FEMNIST-shaped image classification (28×28×1,
   62 classes) with per-class Gaussian prototypes; learnable by the
   ResNet examples, partitionable non-IID per client.
+* ``StragglerModel`` — heavy-tailed client execution times (lognormal /
+  shifted-Pareto), the realistic arrival process behind
+  ``RoundDeadline`` partial-round coverage: a handful of clients in
+  every cohort take many multiples of the median, so a deadline-closed
+  round with the partials at hand is the *normal* case, not a corner.
 """
 from __future__ import annotations
 
@@ -13,6 +18,46 @@ from dataclasses import dataclass
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
+
+
+@dataclass
+class StragglerModel:
+    """Heavy-tailed per-client execution times (mobile/edge cohorts).
+
+    ``lognormal``: ``median_s · exp(sigma·Z)`` — the classic device-speed
+    spread; with ``sigma≈1`` the p99/p50 ratio is ~10×.
+    ``pareto``: shifted Pareto (Lomax + 1 floor), ``median_s`` scales the
+    floor; ``alpha ≤ 2`` gives the infinite-variance tail where a single
+    client can dominate the round — exactly what the aggregation goal +
+    deadline are designed to absorb.
+
+    Deterministic under a seeded ``np.random.Generator``; ``sample``
+    never mutates shared state, so two schedulers with equal seeds see
+    equal cohorts.
+    """
+
+    dist: str = "lognormal"     # "lognormal" | "pareto"
+    median_s: float = 1.0
+    sigma: float = 1.0          # lognormal shape (log-space std)
+    alpha: float = 1.5          # Pareto tail index (≤2 ⇒ inf. variance)
+
+    def sample(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        """``n`` i.i.d. client exec times (seconds, float64)."""
+        if self.dist == "lognormal":
+            return self.median_s * np.exp(
+                self.sigma * rng.standard_normal(n))
+        if self.dist == "pareto":
+            # Lomax sample + 1 == Pareto with x_m = 1: floor at median_s
+            return self.median_s * (rng.pareto(self.alpha, size=n) + 1.0)
+        raise ValueError(f"unknown straggler dist {self.dist!r} "
+                         "(expected 'lognormal' or 'pareto')")
+
+    def tail_ratio(self, n: int, rng: np.random.Generator,
+                   q: float = 0.99) -> float:
+        """p_q / p50 of a size-``n`` sample — the straggler severity
+        figure benches and tests assert on."""
+        s = self.sample(n, rng)
+        return float(np.quantile(s, q) / np.quantile(s, 0.5))
 
 
 @dataclass

@@ -628,9 +628,14 @@ class RoundDriver:
                 st.partials[ev.agg_id] = ev
                 self.dispatch(ev)
             elif isinstance(ev, WorkerCrashed):
+                if not self.dispatch(ev):
+                    # stale leftover from a finished round (the guard
+                    # counted it): the agg_id may name THIS round's
+                    # identically-named subtree — re-dispatching it
+                    # would respawn a healthy mid
+                    continue
                 st.out.crashes += 1
                 self.stats["crashes"] += 1
-                self.dispatch(ev)
                 self._redispatch(ev, st, draining=draining)
             else:
                 self.dispatch(ev)

@@ -1,0 +1,45 @@
+"""netrt — the multi-node transport: netd daemons + RemoteRuntime.
+
+The layer that turns the single-node event-driven runtime into the
+paper's platform: per-node daemons (``netd.py``) own their local
+shared-memory runtimes, the frame transport (``transport.py``) carries
+the typed event protocol plus serialize-once payloads, and
+``RemoteRuntime`` (``remote.py``) implements the ``Runtime`` protocol
+so the unchanged ``RoundDriver`` drives cross-node hierarchical
+rounds.  See README.md in this package for the frame format, the
+handshake, and the failure model.
+"""
+from repro.runtime.netrt.remote import (
+    NoLiveNodeError,
+    RemoteRuntime,
+    push_update,
+)
+from repro.runtime.netrt.transport import (
+    Frame,
+    FrameConn,
+    FrameServer,
+    PeerDead,
+    connect,
+)
+
+def __getattr__(name):
+    # lazy: `python -m repro.runtime.netrt.netd` must not re-import the
+    # daemon module through the package (runpy double-import warning)
+    if name in ("NodeDaemon", "spawn_local_daemon"):
+        from repro.runtime.netrt import netd
+        return getattr(netd, name)
+    raise AttributeError(name)
+
+
+__all__ = [
+    "Frame",
+    "FrameConn",
+    "FrameServer",
+    "NodeDaemon",
+    "NoLiveNodeError",
+    "PeerDead",
+    "RemoteRuntime",
+    "connect",
+    "push_update",
+    "spawn_local_daemon",
+]

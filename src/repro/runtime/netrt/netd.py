@@ -1,0 +1,294 @@
+"""netd — the per-node daemon of the multi-node transport.
+
+One netd process runs on each worker node.  It owns that node's *local*
+aggregation runtime — ``InProcRuntime`` or (the real deployment)
+``ShmProcRuntime`` with its forked workers and shared-memory rings —
+and exposes it over the frame transport (``transport.py``): a
+controller's :class:`~repro.runtime.netrt.remote.RemoteRuntime` speaks
+the same ``spawn``/``deliver``/``drain``/``quiesce`` verbs the
+``RoundDriver`` already uses, and typed round events travel back as
+``events.to_wire`` JSON riding ``event`` frames.
+
+Data-plane contract (the reason this layer exists):
+
+  * a leaf update is serialized **once**, at the node boundary — the
+    ``deliver`` frame's blob lands in the node's object store under the
+    controller-chosen key, and every intra-node hop after that is the
+    usual zero-copy shared-memory path;
+  * a re-delivery of a key the store already holds (crash re-dispatch
+    to the same node) ships **no blob** — just the 16-byte key;
+  * only the sealed partial Σ c·u leaves the node, when the controller
+    ``fetch``es it for the top fold: one model-size payload per node
+    per round.
+
+Run it::
+
+    python -m repro.runtime.netrt.netd --node nodeA \
+        --listen 127.0.0.1:0 --runtime shmproc --port-file /tmp/a.addr
+
+The daemon is single-threaded: one loop multiplexes the socket server
+and the local runtime's event queue.  SIGTERM/SIGINT drain gracefully
+(the local runtime shuts down, shm segments are unlinked).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import sys
+from typing import List, Optional
+
+import numpy as np
+
+from repro.runtime.driver import make_runtime
+from repro.runtime.events import to_wire
+from repro.runtime.netrt.transport import (
+    Frame,
+    FrameConn,
+    FrameServer,
+    PeerDead,
+    resolve_dtype,
+)
+
+PROTO_VERSION = 1
+
+
+class NodeDaemon:
+    """One node's frame-server front end over a local runtime."""
+
+    def __init__(self, node: str, listen: str = "127.0.0.1:0", *,
+                 runtime: str = "inproc", agg_engine: str = "auto",
+                 capacity: float = 20.0, poll_interval: float = 0.02):
+        self.node = node
+        self.capacity = float(capacity)
+        self.poll_interval = poll_interval
+        self.rt = make_runtime(runtime, agg_engine=agg_engine)
+        self.server = FrameServer(listen)
+        self.addr = self.server.addr
+        self._controllers: List[FrameConn] = []
+        self._stop = False
+        self._closed = False
+        self.stats = {"frames": 0, "events_pushed": 0, "updates_landed": 0,
+                      "redelivered_keys": 0, "partials_served": 0}
+
+    # ------------------------------------------------------------------
+    def step(self, timeout: Optional[float] = None) -> None:
+        """One loop iteration: demux frames, push local runtime events."""
+        for conn, frame in self.server.poll(
+                self.poll_interval if timeout is None else timeout):
+            if frame is None:  # peer went away (recv- or send-side)
+                self._drop_controller(conn)
+                continue
+            self.stats["frames"] += 1
+            try:
+                self._handle(conn, frame)
+            except PeerDead:
+                self._drop_controller(conn)
+            except Exception as e:
+                # a bad frame must not take the node down with it; the
+                # agg_id/key (when present) let the controller repair
+                # its bookkeeping instead of waiting forever
+                try:
+                    conn.send("error", {"msg": f"{type(e).__name__}: {e}",
+                                        "for": frame.kind,
+                                        "agg_id": frame.meta.get(
+                                            "agg_id", ""),
+                                        "key": frame.meta.get("key", "")})
+                except PeerDead:
+                    self._drop_controller(conn)
+        self._push_events()
+
+    def _drop_controller(self, conn: FrameConn) -> None:
+        """A controller is gone: unregister it, and once the last one
+        leaves, park the local runtime clean so a reconnecting
+        controller can spawn the same agg_ids again."""
+        if conn in self._controllers:
+            self._controllers.remove(conn)
+            if not self._controllers:
+                try:
+                    self.rt.quiesce()
+                except Exception:
+                    pass
+
+    def _push_events(self) -> None:
+        for ev in self.rt.poll_events(0.0):
+            self.stats["events_pushed"] += 1
+            payload = json.loads(to_wire(ev))
+            for conn in list(self._controllers):
+                if not conn.alive:
+                    continue  # server.poll emits (conn, None) next tick
+                try:
+                    conn.send("event", payload)
+                except PeerDead:
+                    pass  # ditto: the park-clean path runs via poll
+
+    # ------------------------------------------------------------------
+    def _handle(self, conn: FrameConn, frame: Frame) -> None:
+        kind, m = frame.kind, frame.meta
+        if kind == "hello":
+            if m.get("role", "controller") == "controller":
+                if conn not in self._controllers:
+                    self._controllers.append(conn)
+            conn.send("welcome", {
+                "node": self.node, "proto": PROTO_VERSION,
+                "capacity": self.capacity, "runtime": self.rt.name,
+                "pid": os.getpid(),
+            })
+        elif kind == "spawn":
+            self.rt.spawn_aggregator(
+                m["agg_id"], goal=int(m["goal"]), n_elems=int(m["n_elems"]),
+                round_id=int(m["round_id"]))
+        elif kind == "deliver":
+            key = m["key"]
+            if frame.blob and not self.rt.update_alive(key):
+                # serialize-once boundary: the blob becomes a sealed
+                # store object; intra-node delivery is the key alone
+                arr = np.frombuffer(
+                    frame.blob, dtype=resolve_dtype(m["dtype"]),
+                ).reshape(m["shape"])
+                self.rt.store.put(arr, key=key)
+                self.stats["updates_landed"] += 1
+            elif not frame.blob and not self.rt.update_alive(key):
+                raise KeyError(f"deliver without blob for unknown {key!r}")
+            else:
+                self.stats["redelivered_keys"] += 1
+            self.rt.deliver(m["agg_id"], key, float(m["weight"]),
+                            round_id=int(m["round_id"]))
+            self._push_events()  # eager mids may have published already
+        elif kind == "drain":
+            self.rt.drain(m["agg_id"])
+            self._push_events()
+        elif kind == "fetch":
+            # the one model-size payload that crosses the wire per node
+            # per round: the sealed raw partial Σ c·u
+            view = self.rt.get_partial(m["key"])
+            arr = np.ascontiguousarray(view)
+            conn.send("object", {
+                "key": m["key"], "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+            }, blob=arr)
+            self.rt.release_partial(m["key"])
+            self.stats["partials_served"] += 1
+        elif kind == "discard_partial":
+            try:
+                self.rt.discard_partial(m["key"])
+            except Exception:
+                pass  # already reclaimed (quiesce raced the discard)
+        elif kind == "discard_update":
+            try:
+                self.rt.discard_update(m["key"])
+            except Exception:
+                pass
+        elif kind == "quiesce":
+            self._push_events()  # published partials reach the wire first
+            self.rt.quiesce()
+            conn.send("quiesced", {
+                "stats": {k: v for k, v in self.rt.stats.items()
+                          if isinstance(v, (int, float))},
+                "workers": self.rt.worker_count(),
+                "daemon": dict(self.stats),
+            })
+        elif kind == "recycle":
+            self.rt.recycle_engines()
+        elif kind == "ping":
+            conn.send("pong", {"t": m.get("t")})
+        elif kind == "shutdown":
+            conn.send("bye", {"node": self.node})
+            self._stop = True
+        else:
+            conn.send("error", {"msg": f"unknown frame kind {kind!r}"})
+
+    # ------------------------------------------------------------------
+    def run(self) -> None:
+        try:
+            while not self._stop:
+                self.step()
+        finally:
+            self.close()
+
+    def stop(self, *_sig) -> None:
+        self._stop = True
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.server.close()
+        self.rt.close()
+
+
+def spawn_local_daemon(node: str, *, runtime: str = "inproc",
+                       agg_engine: str = "auto", capacity: float = 20.0,
+                       listen: str = "127.0.0.1:0", timeout: float = 30.0,
+                       stdout=None):
+    """Spawn a netd as a local child process and wait for its bound
+    address (the port-file handshake).  Returns ``(Popen, addr)`` —
+    the caller owns the process.  One helper so benches, tests, and
+    examples don't each reimplement the spawn."""
+    import shutil
+    import subprocess
+    import tempfile
+    import time
+
+    # a private directory owns the handshake file: no mktemp-style race
+    # with other processes guessing the predictable /tmp name
+    tmpd = tempfile.mkdtemp(prefix=f"netd-{node}-")
+    pf = os.path.join(tmpd, "addr")
+    env = dict(os.environ)
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.runtime.netrt.netd",
+         "--node", node, "--listen", listen, "--runtime", runtime,
+         "--agg-engine", agg_engine, "--capacity", str(capacity),
+         "--port-file", pf],
+        env=env, stdout=stdout)
+    deadline = time.perf_counter() + timeout
+    try:
+        while not os.path.exists(pf):
+            if proc.poll() is not None or time.perf_counter() > deadline:
+                proc.kill()
+                raise RuntimeError(f"netd {node} failed to start")
+            time.sleep(0.02)
+        with open(pf) as f:
+            addr = f.read().strip()
+    finally:
+        shutil.rmtree(tmpd, ignore_errors=True)
+    return proc, addr
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="netd", description="LIFL per-node aggregation daemon")
+    ap.add_argument("--node", required=True, help="node name (placement id)")
+    ap.add_argument("--listen", default="127.0.0.1:0",
+                    help="host:port or unix:/path (port 0 = ephemeral)")
+    ap.add_argument("--runtime", default="inproc",
+                    choices=("inproc", "shmproc"))
+    ap.add_argument("--agg-engine", default="auto")
+    ap.add_argument("--capacity", type=float, default=20.0,
+                    help="MC_i for the controller's placement model")
+    ap.add_argument("--port-file", default="",
+                    help="write the bound address here (atomic rename)")
+    args = ap.parse_args(argv)
+
+    daemon = NodeDaemon(
+        args.node, args.listen, runtime=args.runtime,
+        agg_engine=args.agg_engine, capacity=args.capacity)
+    if args.port_file:
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(daemon.addr + "\n")
+        os.rename(tmp, args.port_file)
+    print(f"netd {args.node} ({args.runtime}) listening on {daemon.addr}",
+          flush=True)
+    signal.signal(signal.SIGTERM, daemon.stop)
+    signal.signal(signal.SIGINT, daemon.stop)
+    daemon.run()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,520 @@
+"""RemoteRuntime — the multi-node Runtime the unchanged RoundDriver drives.
+
+One ``RemoteRuntime`` fronts a fleet of :mod:`netd` daemons.  It
+implements the full :class:`~repro.runtime.driver.Runtime` protocol
+(``spawn_aggregator`` / ``deliver`` / ``poll_events`` / ``quiesce`` +
+store plumbing), so ``RoundDriver.run_round`` — and therefore
+``FederatedTrainer`` and ``Session`` — runs a cross-node hierarchical
+round with **zero new round-loop code**:
+
+  * ``put_update`` stages the flat update locally (one reference, no
+    copy); ``deliver`` serializes it once into the owning node's store
+    (the node-boundary copy) and the node's intra-node path stays
+    zero-copy shared memory;
+  * mid-aggregators run on their home nodes (``mid@<node>`` routes to
+    the daemon named ``<node>``); only the sealed partial Σ c·u comes
+    back over the wire (``fetch``), one model-size payload per node
+    per round, for the driver's top fold;
+  * a dead daemon (EOF/reset/send failure) becomes one ``NodeLost``
+    plus one synthesized ``WorkerCrashed`` per open subtree routed
+    there — the driver's existing crash re-dispatch then replays the
+    staged update keys, which this runtime re-routes to a surviving
+    node.  Dead-peer teardown releases every in-flight bookkeeping
+    entry for that node (delivered-key sets, partial homes) so nothing
+    leaks with the peer.
+
+Staged updates live until the driver's end-of-round ``discard_update``
+sweep, which is exactly what makes crash re-dispatch to a *different*
+node possible: ``update_alive`` answers from the staging dict, not the
+dead node's store.
+"""
+from __future__ import annotations
+
+import json
+import select
+import time
+from collections import deque
+from typing import Any, Deque, Dict, Iterable, List, Optional, Set
+
+import numpy as np
+
+from repro.core.objectstore import new_object_key
+from repro.core.sidecar import MetricsMap
+from repro.runtime.driver import _WarmEngineMixin
+from repro.runtime.events import (
+    NodeLost,
+    PartialReady,
+    RoundEvent,
+    WorkerCrashed,
+    from_wire,
+)
+from repro.runtime.netrt.transport import (
+    Frame,
+    FrameConn,
+    PeerDead,
+    connect,
+    resolve_dtype,
+)
+
+
+class NoLiveNodeError(ConnectionError):
+    """Every node daemon of this runtime is unreachable."""
+
+
+class _Node:
+    """Controller-side state for one netd peer."""
+
+    __slots__ = ("name", "addr", "conn", "capacity", "workers", "alive",
+                 "delivered", "stats", "runtime_name")
+
+    def __init__(self, name: str, addr: str, conn: FrameConn,
+                 capacity: float, runtime_name: str):
+        self.name = name
+        self.addr = addr
+        self.conn = conn
+        self.capacity = capacity
+        self.runtime_name = runtime_name
+        self.workers = 0
+        self.alive = True
+        self.delivered: Set[str] = set()   # keys resident in its store
+        self.stats: Dict[str, float] = {}  # last quiesced totals
+
+
+class RemoteRuntime(_WarmEngineMixin):
+    """The cross-node aggregation runtime (see module docstring)."""
+
+    name = "net"
+
+    def __init__(self, nodes: Iterable[str], *,
+                 metrics: Optional[MetricsMap] = None,
+                 agg_engine: Any = "auto",
+                 connect_timeout: float = 10.0):
+        self.metrics = metrics if metrics is not None else MetricsMap()
+        self.agg_engine = agg_engine
+        self._engines: Dict[str, Any] = {}    # driver-side (top) engines
+        self._staged: Dict[str, np.ndarray] = {}
+        self._route: Dict[str, str] = {}      # agg_id → node name
+        self._open: Dict[str, int] = {}       # agg_id → spawn round_id
+        self._partial_home: Dict[str, str] = {}
+        self._pending: Deque[RoundEvent] = deque()
+        self._local = {"node_lost": 0, "synth_crashes": 0, "refused": 0}
+        self._closed = False
+        self._nodes: Dict[str, _Node] = {}
+        addrs = list(nodes)
+        if not addrs:
+            raise ValueError("RemoteRuntime needs at least one node address")
+        for addr in addrs:
+            self._attach(addr, connect_timeout)
+
+    # ------------------------------------------------------------------
+    # connection management
+    # ------------------------------------------------------------------
+    def _attach(self, addr: str, timeout: float) -> None:
+        conn = connect(addr, timeout=timeout)
+        conn.send("hello", {"role": "controller", "proto": 1})
+        stash: List[Frame] = []
+        w = conn.recv_expect(("welcome",), timeout, stash=stash).meta
+        node = _Node(w["node"], addr, conn, float(w.get("capacity", 20.0)),
+                     w.get("runtime", "?"))
+        if node.name in self._nodes:
+            conn.close()
+            raise ValueError(f"duplicate node name {node.name!r} "
+                             f"({addr} vs {self._nodes[node.name].addr})")
+        self._nodes[node.name] = node
+
+    def _alive(self) -> List[_Node]:
+        return [n for n in self._nodes.values() if n.alive]
+
+    @property
+    def _net_sidecar(self):
+        """Wire-traffic sidecar (``net/tx_bytes``/``net/rx_bytes`` in
+        ``Session.metrics()``).  Lazy: Session re-points ``metrics`` at
+        the trainer's map after construction, so the sidecar must bind
+        at first use, not in ``__init__``."""
+        sc = self.__dict__.get("_net_sidecar_inst")
+        if sc is None or sc.metrics is not self.metrics:
+            from repro.core.sidecar import EventSidecar
+
+            sc = EventSidecar("net", self.metrics)
+            self.__dict__["_net_sidecar_inst"] = sc
+        return sc
+
+    def node_info(self) -> Dict[str, float]:
+        """name → capacity (MC_i), in daemon-connection order — feeds
+        the controller's placement model."""
+        return {n.name: n.capacity for n in self._nodes.values()}
+
+    def _lose_node(self, node: _Node, why: str = "") -> List[RoundEvent]:
+        """Dead-peer teardown: close, release the node's in-flight round
+        state, surface NodeLost + one synthetic WorkerCrashed per open
+        subtree so the driver re-dispatches to a survivor."""
+        if not node.alive:
+            return []
+        node.alive = False
+        node.conn.close()
+        self._local["node_lost"] += 1
+        evs: List[RoundEvent] = [NodeLost(node=node.name)]
+        # its store died with it: partials homed there are unreachable
+        for key, home in list(self._partial_home.items()):
+            if home == node.name:
+                del self._partial_home[key]
+        node.delivered.clear()
+        for agg_id, name in list(self._route.items()):
+            if name != node.name:
+                continue
+            del self._route[agg_id]
+            rid = self._open.pop(agg_id, None)
+            if rid is not None:
+                self._local["synth_crashes"] += 1
+                evs.append(WorkerCrashed(round_id=rid, agg_id=agg_id,
+                                         worker=-1, exitcode=None))
+        return evs
+
+    def _send(self, node: _Node, kind: str, meta: Dict,
+              blob: bytes = b"") -> bool:
+        """Best-effort send; a dead peer is torn down (events queued for
+        the next poll) and the send reports failure."""
+        if not node.alive:
+            return False
+        try:
+            node.conn.send(kind, meta, blob=blob)
+            return True
+        except PeerDead as e:
+            self._pending.extend(self._lose_node(node, str(e)))
+            return False
+
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+    def _resolve(self, agg_id: str) -> _Node:
+        """Home node for a subtree: ``mid@<node>`` prefers ``<node>``;
+        a lost home falls back to the first surviving node (the crash
+        re-dispatch path)."""
+        name = self._route.get(agg_id)
+        if name is not None:
+            node = self._nodes.get(name)
+            if node is not None and node.alive:
+                return node
+        home = agg_id.split("@", 1)[-1]
+        node = self._nodes.get(home)
+        if node is None or not node.alive:
+            live = self._alive()
+            if not live:
+                raise NoLiveNodeError("all node daemons are unreachable")
+            node = live[0]
+        self._route[agg_id] = node.name
+        return node
+
+    # ------------------------------------------------------------------
+    # Runtime protocol
+    # ------------------------------------------------------------------
+    def spawn_aggregator(self, agg_id: str, *, goal: int, n_elems: int,
+                         round_id: int = 0) -> None:
+        meta = {"agg_id": agg_id, "goal": goal, "n_elems": n_elems,
+                "round_id": round_id}
+        # each failed send tears one dead node down, so this walks the
+        # survivors and terminates: _resolve raises NoLiveNodeError
+        # once nobody is left
+        while not self._send(self._resolve(agg_id), "spawn", meta):
+            pass
+        self._open[agg_id] = round_id
+
+    def deliver(self, agg_id: str, key: str, weight: float,
+                round_id: int = 0) -> None:
+        node = self._resolve(agg_id)
+        meta = {"agg_id": agg_id, "key": key, "weight": weight,
+                "round_id": round_id}
+        if key in node.delivered:
+            # the store already holds it: 16-byte key, no payload
+            self._send(node, "deliver", meta)
+            return
+        flat = self._staged[key]
+        meta["dtype"] = str(flat.dtype)
+        meta["shape"] = list(flat.shape)
+        # a failed send is NOT an error: the teardown queued a synthetic
+        # WorkerCrashed, and the driver replays this key from staging
+        if self._send(node, "deliver", meta, blob=flat):
+            node.delivered.add(key)
+            self._net_sidecar.on_send(flat.nbytes)
+
+    def drain(self, agg_id: str) -> None:
+        name = self._route.get(agg_id)
+        node = self._nodes.get(name) if name else None
+        if node is not None:
+            self._send(node, "drain", {"agg_id": agg_id})
+
+    def poll_events(self, timeout: float = 0.0) -> List[RoundEvent]:
+        out: List[RoundEvent] = list(self._pending)
+        self._pending.clear()
+        deadline = time.perf_counter() + timeout
+        while True:
+            live = self._alive()
+            if not live:
+                return out
+            budget = 0.0 if out else max(0.0, deadline - time.perf_counter())
+            try:
+                r, _, _ = select.select([n.conn for n in live], [], [],
+                                        budget)
+            except (OSError, ValueError):
+                r = [n.conn for n in live]  # a racing close: probe each
+            progressed = False
+            for node in live:
+                if node.conn not in r:
+                    continue
+                try:
+                    while True:
+                        frame = node.conn.recv(timeout=0.0)
+                        if frame is None:
+                            break
+                        progressed = True
+                        ev = self._absorb_frame(node, frame)
+                        if ev is not None:
+                            out.append(ev)
+                except PeerDead:
+                    out.extend(self._lose_node(node))
+                    progressed = True
+            if out or not progressed and time.perf_counter() >= deadline:
+                return out
+
+    def _absorb_frame(self, node: _Node, frame: Frame
+                      ) -> Optional[RoundEvent]:
+        if frame.kind == "event":
+            ev = from_wire(json.dumps(frame.meta))
+            self._note(node, ev)
+            return ev
+        if frame.kind == "error":
+            self._local["refused"] += 1
+            agg_id = frame.meta.get("agg_id", "")
+            key = frame.meta.get("key", "")
+            if frame.meta.get("for") == "deliver" and key:
+                # the blob never landed in the node store: forget the
+                # residency so any re-delivery re-ships it (the update
+                # itself is lost to this subtree — the drain closes it
+                # with the folds at hand, like a failed client)
+                for n in self._nodes.values():
+                    n.delivered.discard(key)
+            # a daemon-side SPAWN failure must not hang the round: no
+            # aggregator exists, so nothing will ever publish — surface
+            # it as a WorkerCrashed so the driver's re-dispatch (or its
+            # give-up cap) takes over.  Deliver/drain errors must NOT
+            # synthesize a crash: the daemon aggregator is still alive
+            # and open, and a respawn+re-deliver would double-fold its
+            # already-delivered keys.
+            if frame.meta.get("for") == "spawn" and agg_id in self._open:
+                rid = self._open.pop(agg_id)
+                self._route.pop(agg_id, None)
+                self._local["synth_crashes"] += 1
+                return WorkerCrashed(round_id=rid, agg_id=agg_id,
+                                     worker=-1, exitcode=None)
+        return None  # stray pong / late reply: bookkeeping only
+
+    def _note(self, node: _Node, ev: RoundEvent) -> None:
+        if isinstance(ev, PartialReady):
+            self._partial_home[ev.key] = node.name
+            self._open.pop(ev.agg_id, None)
+
+    def quiesce(self, timeout: float = 5.0) -> None:
+        self._flush_round_scoped_pending()
+        # a genuinely dead daemon surfaces as an immediate EOF/reset;
+        # the timeout only fires for a connected-but-busy one (a shm
+        # node draining model-size accumulators can take a while), so
+        # the reply budget is deliberately generous — declaring a slow
+        # healthy node dead would remove it from the fleet for good
+        reply_timeout = max(timeout, 60.0)
+        for node in self._alive():
+            if not self._send(node, "quiesce", {}):
+                continue
+            try:
+                stash: List[Frame] = []
+                reply = node.conn.recv_expect(("quiesced",), reply_timeout,
+                                              stash=stash)
+                for f in stash:
+                    ev = self._absorb_frame(node, f)
+                    if ev is not None:
+                        self._pending.append(ev)
+                node.stats = dict(reply.meta.get("stats", {}))
+                node.workers = int(reply.meta.get("workers", 0))
+            except PeerDead:
+                self._pending.extend(self._lose_node(node))
+        self._open.clear()
+        # a peer death during the barrier queued fresh events: apply
+        # the same round-scoped filtering to those too
+        self._flush_round_scoped_pending()
+
+    def _flush_round_scoped_pending(self) -> None:
+        """Drop queued round-scoped leftovers at the inter-round
+        barrier — a queued-but-undelivered PartialReady would strand
+        its remote store object (mirror of InProcRuntime.quiesce) and
+        a WorkerCrashed for the closed round would spuriously
+        re-dispatch next round's identically-named subtree — while
+        KEEPING cluster-state events (NodeLost) that the driver's
+        handlers must still see."""
+        keep: List[RoundEvent] = []
+        for ev in self._pending:
+            if isinstance(ev, PartialReady):
+                self.discard_partial(ev.key)
+            elif isinstance(ev, WorkerCrashed):
+                pass  # its round is over; nothing left to re-dispatch
+            else:
+                keep.append(ev)
+        self._pending.clear()
+        self._pending.extend(keep)
+
+    # ------------------------------------------------------------------
+    # payload plumbing
+    # ------------------------------------------------------------------
+    def put_update(self, flat: np.ndarray) -> str:
+        key = new_object_key()
+        self._staged[key] = np.ascontiguousarray(flat)
+        return key
+
+    def update_alive(self, key: str) -> bool:
+        # staging, not the (possibly dead) node's store, answers: this
+        # is what lets a subtree re-dispatch to a *different* node
+        return key in self._staged
+
+    def get_partial(self, key: str) -> np.ndarray:
+        home = self._partial_home.get(key)
+        node = self._nodes.get(home) if home else None
+        if node is None or not node.alive:
+            raise KeyError(f"partial {key!r} unreachable (node lost)")
+        # event frames racing the reply (a straggler's PartialReady
+        # publishing mid-FOLD) must reach _pending, not the floor —
+        # a dropped one would strand its sealed object in the node
+        # store (nobody left to discard it)
+        stash: List[Frame] = []
+        try:
+            node.conn.send("fetch", {"key": key})
+            while True:
+                frame = node.conn.recv_expect(("object", "error"), 30.0,
+                                              stash=stash)
+                if frame.kind == "error":
+                    raise KeyError(
+                        f"fetch {key!r} failed: {frame.meta['msg']}")
+                if frame.meta.get("key") == key:
+                    break
+        except PeerDead as e:
+            # the node died between publishing and the fetch: run the
+            # full teardown (NodeLost reaches the driver's handlers on
+            # the next poll) and abort the round's fold — run_round's
+            # exception path closes the round retriable
+            self._pending.extend(self._lose_node(node))
+            raise KeyError(
+                f"partial {key!r} lost with its node ({e})") from e
+        finally:
+            for f in stash:
+                ev = self._absorb_frame(node, f)
+                if ev is not None:
+                    self._pending.append(ev)
+        arr = np.frombuffer(
+            frame.blob, dtype=resolve_dtype(frame.meta["dtype"]),
+        ).reshape(frame.meta["shape"])
+        self._net_sidecar.on_recv(arr.nbytes, 0.0)
+        return arr
+
+    def release_partial(self, key: str) -> None:
+        pass  # the fetched copy is local; the daemon released at fetch
+
+    def discard_partial(self, key: str) -> None:
+        home = self._partial_home.pop(key, None)
+        node = self._nodes.get(home) if home else None
+        if node is not None and node.alive:
+            self._send(node, "discard_partial", {"key": key})
+
+    def discard_update(self, key: str) -> None:
+        self._staged.pop(key, None)
+        for node in self._alive():
+            if key in node.delivered:
+                node.delivered.discard(key)
+                self._send(node, "discard_update", {"key": key})
+
+    # ------------------------------------------------------------------
+    def recycle_engines(self) -> None:
+        super().recycle_engines()
+        for node in self._alive():
+            self._send(node, "recycle", {})
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Aggregated monotonic counters: the sum of every node's last
+        quiesced totals plus local transport counters."""
+        out: Dict[str, float] = dict(self._local)
+        for node in self._nodes.values():
+            for k, v in node.stats.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def worker_count(self) -> int:
+        return sum(n.workers for n in self._alive())
+
+    def wire_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-node transport byte counters (bench_net's raw input)."""
+        out = {}
+        for node in self._nodes.values():
+            out[node.name] = {
+                "tx_bytes": node.conn.tx_bytes,
+                "rx_bytes": node.conn.rx_bytes,
+                "tx_by_kind": dict(node.conn.tx_by_kind),
+                "rx_by_kind": dict(node.conn.rx_by_kind),
+            }
+        return out
+
+    def ping(self, node: Optional[str] = None, timeout: float = 5.0) -> float:
+        """RTT to one node (default: the first live one)."""
+        peers = [self._nodes[node]] if node else self._alive()
+        if not peers:
+            raise NoLiveNodeError("all node daemons are unreachable")
+        stash: List[Frame] = []
+        rtt = peers[0].conn.ping(timeout, stash=stash)
+        for f in stash:
+            ev = self._absorb_frame(peers[0], f)
+            if ev is not None:
+                self._pending.append(ev)
+        return rtt
+
+    def shutdown_nodes(self, timeout: float = 5.0) -> None:
+        """Ask every daemon to exit (bench/test teardown helper)."""
+        for node in self._alive():
+            if self._send(node, "shutdown", {}):
+                try:
+                    node.conn.recv_expect(("bye",), timeout)
+                except PeerDead:
+                    pass
+                node.alive = False
+                node.conn.close()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for node in self._nodes.values():
+            node.conn.close()
+            node.alive = False
+        self._staged.clear()
+        self._engines.clear()
+
+
+# ---------------------------------------------------------------------------
+# external-client helper (Session.serve's wire counterpart)
+# ---------------------------------------------------------------------------
+
+def push_update(addr: str, client_id: str, update: np.ndarray,
+                weight: float = 1.0, *, timeout: float = 10.0) -> Dict:
+    """Submit one externally-computed model update to a serving
+    :class:`~repro.api.Session` (``Session.serve(addr)``) from any
+    process.  Returns the server's ack meta; raises on rejection."""
+    flat = np.ascontiguousarray(update)
+    conn = connect(addr, timeout=timeout)
+    try:
+        conn.send("hello", {"role": "client"})
+        conn.recv_expect(("welcome",), timeout)
+        conn.send("submit_update", {
+            "client_id": client_id, "weight": float(weight),
+            "dtype": str(flat.dtype), "shape": list(flat.shape),
+        }, blob=flat)
+        reply = conn.recv_expect(("ack", "error"), timeout)
+        if reply.kind == "error":
+            raise ValueError(f"submit_update rejected: {reply.meta['msg']}")
+        return reply.meta
+    finally:
+        conn.close()

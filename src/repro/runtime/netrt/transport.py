@@ -1,0 +1,321 @@
+"""Frame transport — length-prefixed JSON + binary blob over sockets.
+
+The multi-node control plane (netd ↔ RemoteRuntime, external clients ↔
+``Session.serve``) speaks one frame format on TCP or Unix sockets::
+
+    ┌─────────────┬─────────────┬───────────────┬──────────────┐
+    │ json_len u32│ blob_len u32│  JSON body    │  blob bytes  │
+    │  (big-end.) │  (big-end.) │  {"kind":...} │  (optional)  │
+    └─────────────┴─────────────┴───────────────┴──────────────┘
+
+Control fields ride the JSON body (``kind`` names the frame type; typed
+round events are carried verbatim as ``events.to_wire`` dicts under
+``kind="event"``); payloads — serialized-once model updates and sealed
+partial sums — ride the blob, so a frame is decoded without ever
+copying the payload through a JSON string.
+
+Failure model: every socket error, EOF, or handshake timeout surfaces
+as :class:`PeerDead`; callers translate that into a ``NodeLost`` event
+(see ``remote.py``).  ``connect`` retries until its deadline so a
+controller can start before its daemons finish binding.  Byte counters
+(total and per frame kind, both directions) make the wire cost of a
+round directly measurable — ``benchmarks/bench_net.py`` gates on them.
+"""
+from __future__ import annotations
+
+import json
+import os
+import select
+import socket
+import struct
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_HEADER = struct.Struct("!II")
+#: sanity bounds: a corrupt/foreign header must not trigger a GB recv
+MAX_JSON_BYTES = 1 << 22
+MAX_BLOB_BYTES = 1 << 31
+_RECV_CHUNK = 1 << 16
+
+
+class PeerDead(ConnectionError):
+    """The remote end of a frame connection is unreachable (EOF, reset,
+    refused, or a hard send/handshake timeout)."""
+
+
+def resolve_dtype(name: str) -> np.dtype:
+    """``np.dtype`` by name, registering ml_dtypes (bfloat16, fp8) on
+    demand so bf16 wire updates decode in processes that never imported
+    jax."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # noqa: F401  (registers the extended dtypes)
+        return np.dtype(name)
+
+
+def parse_addr(addr: str) -> Tuple[int, object]:
+    """``"host:port"`` → TCP, ``"unix:/path"`` → AF_UNIX."""
+    if addr.startswith("unix:"):
+        return socket.AF_UNIX, addr[len("unix:"):]
+    host, _, port = addr.rpartition(":")
+    if not host or not port.isdigit():
+        raise ValueError(f"bad address {addr!r} "
+                         "(expected 'host:port' or 'unix:/path')")
+    return socket.AF_INET, (host, int(port))
+
+
+def format_addr(family: int, sockaddr) -> str:
+    if family == socket.AF_UNIX:
+        return f"unix:{sockaddr}"
+    host, port = sockaddr[:2]
+    return f"{host}:{port}"
+
+
+@dataclass
+class Frame:
+    """One decoded frame: ``kind`` + JSON meta + optional payload."""
+
+    kind: str
+    meta: Dict
+    blob: bytes = b""
+
+
+class FrameConn:
+    """One frame connection over a connected socket.
+
+    ``recv`` is an incremental parser (partial frames survive across
+    calls); ``send`` is a blocking write with a hard timeout.  Both
+    raise :class:`PeerDead` on any transport failure, after which the
+    connection is closed and unusable."""
+
+    def __init__(self, sock: socket.socket, peer: str = "?",
+                 send_timeout: float = 30.0):
+        sock.setblocking(True)
+        try:  # latency matters more than throughput for 64-byte frames
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass  # AF_UNIX
+        self._sock: Optional[socket.socket] = sock
+        self.peer = peer
+        self.send_timeout = send_timeout
+        self._rbuf = bytearray()
+        self.tx_bytes = 0
+        self.rx_bytes = 0
+        self.tx_by_kind: Dict[str, int] = {}
+        self.rx_by_kind: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    def fileno(self) -> int:
+        return self._sock.fileno() if self._sock is not None else -1
+
+    @property
+    def alive(self) -> bool:
+        return self._sock is not None
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _dead(self, why: str) -> PeerDead:
+        self.close()
+        return PeerDead(f"peer {self.peer} gone: {why}")
+
+    # ------------------------------------------------------------------
+    def send(self, kind: str, meta: Optional[Dict] = None,
+             blob: bytes = b"") -> None:
+        """Write one frame (header + JSON + blob, single syscall path).
+        ``blob`` may be any buffer (bytes, memoryview, C-contiguous
+        numpy array) — it is never copied into the JSON body."""
+        if self._sock is None:
+            raise PeerDead(f"peer {self.peer} gone: already closed")
+        body = dict(meta or {})
+        body["kind"] = kind
+        js = json.dumps(body, separators=(",", ":")).encode("utf-8")
+        mv = memoryview(blob).cast("B") if not isinstance(blob, bytes) \
+            else blob
+        head = _HEADER.pack(len(js), len(mv))
+        n = len(head) + len(js) + len(mv)
+        try:
+            self._sock.settimeout(self.send_timeout)
+            self._sock.sendall(head)
+            self._sock.sendall(js)
+            if len(mv):
+                self._sock.sendall(mv)
+        except (OSError, ValueError) as e:
+            raise self._dead(f"send failed ({e})") from e
+        self.tx_bytes += n
+        self.tx_by_kind[kind] = self.tx_by_kind.get(kind, 0) + n
+
+    # ------------------------------------------------------------------
+    def _parse_one(self) -> Optional[Frame]:
+        buf = self._rbuf
+        if len(buf) < _HEADER.size:
+            return None
+        jlen, blen = _HEADER.unpack_from(buf, 0)
+        if jlen > MAX_JSON_BYTES or blen > MAX_BLOB_BYTES:
+            raise self._dead(f"oversized frame header ({jlen}/{blen})")
+        total = _HEADER.size + jlen + blen
+        if len(buf) < total:
+            return None
+        meta = json.loads(bytes(buf[_HEADER.size:_HEADER.size + jlen]))
+        blob = bytes(buf[_HEADER.size + jlen:total])
+        del buf[:total]
+        kind = meta.pop("kind", "?")
+        self.rx_by_kind[kind] = self.rx_by_kind.get(kind, 0) + total
+        return Frame(kind=kind, meta=meta, blob=blob)
+
+    def recv(self, timeout: float = 0.0) -> Optional[Frame]:
+        """Next frame, or ``None`` if nothing complete arrives within
+        ``timeout``.  Raises :class:`PeerDead` on EOF/reset."""
+        deadline = time.perf_counter() + timeout
+        while True:
+            frame = self._parse_one()
+            if frame is not None:
+                return frame
+            if self._sock is None:
+                raise PeerDead(f"peer {self.peer} gone: already closed")
+            left = deadline - time.perf_counter()
+            r, _, _ = select.select([self._sock], [], [], max(0.0, left))
+            if not r:
+                return None
+            try:
+                data = self._sock.recv(_RECV_CHUNK)
+            except OSError as e:
+                raise self._dead(f"recv failed ({e})") from e
+            if not data:
+                raise self._dead("EOF")
+            self._rbuf += data
+            self.rx_bytes += len(data)
+
+    def recv_expect(self, kinds: Tuple[str, ...], timeout: float,
+                    stash: Optional[List[Frame]] = None) -> Frame:
+        """Read until a frame of one of ``kinds`` arrives; unrelated
+        frames (event pushes racing a reply) go to ``stash``."""
+        deadline = time.perf_counter() + timeout
+        while True:
+            left = deadline - time.perf_counter()
+            if left <= 0:
+                raise self._dead(f"timed out waiting for {kinds}")
+            frame = self.recv(timeout=left)
+            if frame is None:
+                continue
+            if frame.kind in kinds:
+                return frame
+            if stash is not None:
+                stash.append(frame)
+
+    # ------------------------------------------------------------------
+    def ping(self, timeout: float = 5.0,
+             stash: Optional[List[Frame]] = None) -> float:
+        """Liveness probe: round-trip one ``ping`` frame, returns the
+        RTT in seconds (raises :class:`PeerDead` on a dead peer)."""
+        t0 = time.perf_counter()
+        self.send("ping", {"t": t0})
+        self.recv_expect(("pong",), timeout, stash=stash)
+        return time.perf_counter() - t0
+
+
+class FrameServer:
+    """Non-blocking accept loop + frame demux over all connections.
+
+    ``poll`` returns ``(conn, frame)`` pairs; a dying connection yields
+    one final ``(conn, None)`` so the owner can unregister it."""
+
+    def __init__(self, addr: str, backlog: int = 16):
+        family, sockaddr = parse_addr(addr)
+        self._family = family
+        sock = socket.socket(family, socket.SOCK_STREAM)
+        if family == socket.AF_INET:
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind(sockaddr)
+        sock.listen(backlog)
+        sock.setblocking(False)
+        self._listener = sock
+        self._unix_path = sockaddr if family == socket.AF_UNIX else None
+        self.addr = format_addr(family, sock.getsockname())
+        self.conns: List[FrameConn] = []
+
+    def poll(self, timeout: float = 0.0) -> List[Tuple[FrameConn,
+                                                       Optional[Frame]]]:
+        out: List[Tuple[FrameConn, Optional[Frame]]] = []
+        for conn in list(self.conns):
+            if not conn.alive:
+                # died on the SEND path (a push hit PeerDead): emit the
+                # (conn, None) notification recv-side deaths get, so
+                # owners run their disconnect cleanup either way
+                self.conns.remove(conn)
+                out.append((conn, None))
+                continue
+            # frames already buffered from a previous read: no select
+            self._pump(conn, out, readable=False)
+        watch = [self._listener] + [c for c in self.conns if c.alive]
+        r, _, _ = select.select(watch, [], [], 0.0 if out else timeout)
+        for sock in r:
+            if sock is self._listener:
+                try:
+                    raw, peer_addr = self._listener.accept()
+                except OSError:
+                    continue
+                peer = format_addr(self._family, peer_addr) \
+                    if self._family == socket.AF_INET else "unix-peer"
+                self.conns.append(FrameConn(raw, peer=peer))
+            else:
+                self._pump(sock, out, readable=True)
+        return out
+
+    def _pump(self, conn: FrameConn, out, *, readable: bool) -> None:
+        try:
+            while True:
+                frame = conn.recv(timeout=0.0) if readable \
+                    else conn._parse_one()
+                if frame is None:
+                    return
+                out.append((conn, frame))
+                readable = False  # drain what's buffered, don't re-select
+        except PeerDead:
+            if conn in self.conns:
+                self.conns.remove(conn)
+            out.append((conn, None))
+
+    def close(self) -> None:
+        for conn in self.conns:
+            conn.close()
+        self.conns.clear()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        if self._unix_path:
+            try:
+                os.unlink(self._unix_path)
+            except OSError:
+                pass
+
+
+def connect(addr: str, *, timeout: float = 10.0,
+            retry_interval: float = 0.05, peer: Optional[str] = None
+            ) -> FrameConn:
+    """Connect to a frame server, retrying until ``timeout`` — a
+    controller may race its daemons' bind."""
+    family, sockaddr = parse_addr(addr)
+    deadline = time.perf_counter() + timeout
+    while True:
+        sock = socket.socket(family, socket.SOCK_STREAM)
+        try:
+            sock.settimeout(max(0.1, deadline - time.perf_counter()))
+            sock.connect(sockaddr)
+            return FrameConn(sock, peer=peer or addr)
+        except (ConnectionError, FileNotFoundError, socket.timeout,
+                OSError) as e:
+            sock.close()
+            if time.perf_counter() + retry_interval >= deadline:
+                raise PeerDead(f"connect to {addr} failed: {e}") from e
+            time.sleep(retry_interval)

@@ -44,7 +44,7 @@ from repro.fl.round import AggregationConfig, build_train_step
 from repro.fl.server import apply_server_opt, init_server_state
 from repro.optim import sgd_apply
 from repro.runtime.driver import RoundDriver, make_runtime
-from repro.runtime.events import NodeJoined, NodeLost
+from repro.runtime.events import NodeJoined, NodeLost, PartialReady
 
 
 # ===========================================================================
@@ -159,10 +159,12 @@ class FederatedTrainer:
             if self._closed:
                 raise RuntimeError("trainer is closed")
             self._driver = RoundDriver(metrics=self.metrics)
-            # node churn reshapes the next plan: the coordinator is an
-            # ordinary event handler on the driver
+            # node churn reshapes the next plan, and every subtree's
+            # PartialReady feeds its node's RC capacity model: the
+            # coordinator is an ordinary event handler on the driver
             self._driver.on(NodeJoined, self.coordinator.handle_event)
             self._driver.on(NodeLost, self.coordinator.handle_event)
+            self._driver.on(PartialReady, self.coordinator.handle_event)
         return self._driver
 
     def _ensure_runtime(self):
@@ -178,7 +180,9 @@ class FederatedTrainer:
                       weight: float = 1.0) -> None:
         """Queue an externally-computed flat update; it rides the next
         ``run_round`` in place of a locally-trained client."""
-        flat = np.ascontiguousarray(flat, dtype=np.float32)
+        # any shape whose total size matches is accepted — flatten here
+        # so a (rows, cols) wire payload can't reach the 1-D fold loop
+        flat = np.ascontiguousarray(flat, dtype=np.float32).reshape(-1)
         if flat.size != self._flat_params_size():
             raise ValueError(
                 f"update has {flat.size} elements, model has "
@@ -190,6 +194,7 @@ class FederatedTrainer:
                   client_batch_size: Optional[int] = None,
                   client_epochs: Optional[int] = None,
                   deadline_s: Optional[float] = None,
+                  sampler: Optional[Any] = None,
                   **legacy) -> Dict[str, float]:
         """One federated round through the driver (both runtimes)."""
         vals = {"client_lr": client_lr,
@@ -219,7 +224,10 @@ class FederatedTrainer:
 
         t0 = time.perf_counter()
         self._ensure_runtime()
-        plan = self.coordinator.plan_round(self.round_cfg)
+        # sampler: per-round client selection as a pluggable policy —
+        # `sampler(round_id, pool) -> cohort` replaces the built-in
+        # diversity selector for this round (seed it for reproducibility)
+        plan = self.coordinator.plan_round(self.round_cfg, sampler=sampler)
         goal = self.round_cfg.aggregation_goal
         outcome = self.driver.run_round(
             round_id=plan.round_id,
@@ -240,14 +248,9 @@ class FederatedTrainer:
                 self.server_opt, self.params, self.server_state, delta_tree,
                 lr=-self.server_lr,  # delta = new - old, so apply +lr·delta
             )
-        # E_{i,t} from the subtree sidecars feeds the capacity model
-        for agg_id, exec_s in outcome.exec_s.items():
-            node = agg_id.split("@", 1)[-1]
-            if node in self.nodes:
-                ns = self.nodes[node]
-                ns.exec_time_s = 0.5 * ns.exec_time_s + 0.5 * max(
-                    exec_s, 1e-6)
-
+        # (E_{i,t}/k_{i,t} now reach the capacity model through the
+        # PartialReady events the coordinator subscribes to — the same
+        # events that arrive over the wire in multi-node rounds)
         version = self.coordinator.finish_round()
         if self.ckpt and version % self.checkpoint_every == 0:
             self.ckpt.submit(version, self.params)

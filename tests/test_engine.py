@@ -248,3 +248,90 @@ def test_object_store_meta():
     m = store.meta(key)
     assert m.nbytes == x.nbytes and m.shape == (17, 3)
     assert m.dtype == "float32" and m.sealed
+
+
+# ---------------------------------------------------------------------------
+# dtype-preserving folds: reduced-precision wire updates, f32 accumulation
+# ---------------------------------------------------------------------------
+
+_WIRE_DTYPES = ["float16", "bfloat16"]
+
+
+def _wire_updates(dtype_name, k=6, n=1000):
+    """f32 ground-truth updates + their wire-dtype (rounded) twins."""
+    dt = np.dtype(dtype_name) if dtype_name != "bfloat16" else np.dtype(
+        pytest.importorskip("ml_dtypes").bfloat16)
+    us32, ws = _updates(k=k, n=n)
+    wire = [u.astype(dt) for u in us32]
+    return us32, wire, ws, dt
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("wire_dtype", _WIRE_DTYPES)
+def test_reduced_dtype_fold_accumulates_in_f32(engine, wire_dtype):
+    """bf16/f16 wire updates fold without materializing f32 copies of
+    the inputs; the running sum is f32, so the only error vs the f32
+    oracle is the *per-update* wire rounding — exact against an oracle
+    fed the same rounded values, loosely bounded against the f32 one."""
+    us32, wire, ws, _ = _wire_updates(wire_dtype)
+    st = FedAvgState(engine=make_engine(engine))
+    for u, w in zip(wire, ws):
+        st.fold(u, w)
+    got, _ = st.result()
+    assert np.asarray(st.acc).dtype == np.float32  # accumulate-in-f32
+    # tight: same rounded inputs, f32 accumulation on both sides
+    rounded_oracle = fedavg_oracle([u.astype(np.float32) for u in wire], ws)
+    np.testing.assert_allclose(got, rounded_oracle, rtol=1e-5, atol=1e-5)
+    # loose: wire precision loss is bounded (bf16 ≈ 8 mantissa bits)
+    np.testing.assert_allclose(got, fedavg_oracle(us32, ws),
+                               rtol=0.05, atol=0.05)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("wire_dtype", _WIRE_DTYPES)
+def test_reduced_dtype_burst_fold_matches_rounded_oracle(engine, wire_dtype):
+    """The K-way burst path (fedavg_accumulate_k for jax engines,
+    blocked scratch staging for numpy) handles reduced wire dtypes."""
+    _, wire, ws, _ = _wire_updates(wire_dtype, k=5, n=64 * 1024 + 17)
+    st = FedAvgState(engine=make_engine(engine))
+    st.fold_many(wire, ws)
+    got, _ = st.result()
+    rounded_oracle = fedavg_oracle([u.astype(np.float32) for u in wire], ws)
+    np.testing.assert_allclose(got, rounded_oracle, rtol=1e-5, atol=1e-5)
+
+
+def test_jax_engine_slab_preserves_wire_dtype():
+    """A homogeneous bf16 burst must stage through a bf16 slab (half
+    the host-side staging bytes), not silently upcast to f32."""
+    jnp = pytest.importorskip("jax.numpy")  # noqa: F841
+    ml = pytest.importorskip("ml_dtypes")
+    from repro.core.engine import JaxEngine
+
+    eng = JaxEngine(impl="jnp")
+    _, wire, ws, dt = _wire_updates("bfloat16", k=4, n=512)
+    acc = eng.begin(512)
+    acc = eng.fold_many(acc, wire, ws)
+    assert eng._slabs[np.dtype(ml.bfloat16).str].dtype == dt
+    # mixed-dtype bursts fall back to the f32 slab
+    mixed = [wire[0], wire[1].astype(np.float32), wire[2], wire[3]]
+    acc = eng.fold_many(acc, mixed, ws)
+    assert np.dtype(np.float32).str in eng._slabs
+
+
+def test_accumulate_k_ref_path_bf16_wire():
+    """fedavg_accumulate_k's jnp ref path: (K,N) bf16 slab folded into
+    the aliased f32 accumulator matches the f32 oracle to wire
+    tolerance."""
+    jnp = pytest.importorskip("jax.numpy")
+    pytest.importorskip("ml_dtypes")
+    from repro.kernels.fedavg import fedavg_accumulate_k
+
+    us32, wire, ws, _ = _wire_updates("bfloat16", k=4, n=4096)
+    acc = jnp.zeros((4096,), jnp.float32)
+    out = fedavg_accumulate_k(
+        acc, jnp.asarray(np.stack(wire)),
+        jnp.asarray(np.asarray(ws, np.float32)), impl="jnp")
+    assert out.dtype == jnp.float32
+    expect = sum(np.float32(w) * u.astype(np.float32)
+                 for u, w in zip(wire, ws))
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-4)

@@ -37,3 +37,13 @@ def test_elastic_scaling_example_runs():
     stdout = _run_example("elastic_scaling.py")
     assert "elastic_scaling OK" in stdout
     assert "node_lost" in stdout and "node_joined" in stdout
+
+
+@pytest.mark.slow
+def test_multinode_example_runs():
+    stdout = _run_example("multinode.py")
+    assert "Multi-node LIFL" in stdout
+    assert "connected nodes: ['node0', 'node1']" in stdout
+    assert "partial from mid@" in stdout
+    assert "client:" in stdout            # the external push was acked
+    assert "done: cross-node rounds" in stdout
