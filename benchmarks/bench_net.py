@@ -16,9 +16,14 @@ Derived columns carry the acceptance-gate numbers:
   * ``bitexact``      — the cross-node delta equals the in-proc tree
     bit for bit (raw f32 partials, deterministic top-fold order);
   * ``partial_mb``    — cross-node aggregation traffic per round
-    (``object``-frame bytes: the fetched Σc·u payloads), gated by
+    (``object``-frame bytes: the fetched Σc·u payloads; plus
+    daemon→daemon ``ship_mb`` for node-top rounds), gated by
     ``run.py`` against ``bound_mb = nodes × model_size × 1.1`` —
     partials only, no per-client fan-in to the top;
+  * ``return_mb``     — node-top rounds only: what actually returns to
+    the controller — ONE folded Σc·u, gated fatally against
+    ``return_bound_mb = 1 × model_size × 1.1`` (the daemon→daemon
+    shipping win: controller-top returns nodes × model instead);
   * ``wire_mb``       — total wire bytes/round, both directions (the
     update fan-out to the nodes rides this, not the partial bound);
   * ``disp_us``       — mean remote dispatch latency (one ``deliver``
@@ -39,9 +44,12 @@ N_NODES = 2
 SLACK = 1.1
 
 
-def _net_round(drv, rt, nodes: List[str], ups, ws, N: int, round_id: int
+def _net_round(drv, rt, nodes: List[str], ups, ws, N: int, round_id: int,
+               topology: str = "controller"
                ) -> Tuple[np.ndarray, float, float]:
     """One driven cross-node round; returns (delta, wall_s, disp_s)."""
+    from repro.core.placement import build_fold_plan
+
     W = len(ups)
     assignment = {nodes[w % N_NODES]: [] for w in range(N_NODES)}
     flat_ups, flat_ws, flat_nodes = [], [], []
@@ -52,6 +60,8 @@ def _net_round(drv, rt, nodes: List[str], ups, ws, N: int, round_id: int
             flat_ups.append(u)
             flat_ws.append(c)
             flat_nodes.append(node)
+    fold_plan = build_fold_plan(assignment, top_node=nodes[0],
+                                topology=topology)
 
     disp = [0.0, 0]
 
@@ -72,7 +82,8 @@ def _net_round(drv, rt, nodes: List[str], ups, ws, N: int, round_id: int
     t0 = time.perf_counter()
     try:
         out = drv.run_round(round_id=round_id, assignment=assignment,
-                            updates=updates(), goal=len(flat_ups), n_elems=N)
+                            updates=updates(), goal=len(flat_ups), n_elems=N,
+                            fold_plan=fold_plan)
     finally:
         rt.deliver = orig
     wall = time.perf_counter() - t0
@@ -135,6 +146,22 @@ def run(fast: bool = True) -> List[Dict]:
             walls.append(wall)
             disps.append(disp)
             wire_marks.append(rt.wire_stats())
+
+        # --- node-top topology: the root fold runs ON a worker node,
+        # partials ship daemon→daemon, only the final Σc·u returns ---
+        rt.quiesce()                       # settle daemon ship counters
+        ship0 = rt.stats.get("ship_tx_bytes", 0)
+        nt_deltas, nt_walls = [], []
+        nt_marks = [rt.wire_stats()]
+        for r in range(n_warm):
+            d, wall, _ = _net_round(drv, rt, nodes, ups, ws, N,
+                                    round_id=2 + n_warm + r,
+                                    topology="node")
+            nt_deltas.append(d)
+            nt_walls.append(wall)
+            nt_marks.append(rt.wire_stats())
+        rt.quiesce()                       # flush the last round's ships
+        ship_mb = (rt.stats.get("ship_tx_bytes", 0) - ship0) / n_warm / 1e6
     finally:
         if rt is not None:
             try:
@@ -186,5 +213,31 @@ def run(fast: bool = True) -> List[Dict]:
                     f"disp_us={np.mean(disps) * 1e6:.0f};"
                     f"rtt_us={rtt_us:.0f};"
                     f"inproc_over_net={dt_in / np.mean(walls):.2f}x"),
+    })
+
+    # node-top row: return traffic (controller-fetched objects) must be
+    # ~1 × model/round — the whole point of rooting on a node — while
+    # inter-node shipping (daemon→daemon + return) stays under the
+    # partials-only bound.  Both FATAL-gated by run.py.
+    return_mb = (_partials(nt_marks[-1]) - _partials(nt_marks[0])) \
+        / n_warm / 1e6
+    nt_wire_mb = (_tot(nt_marks[-1], "tx_bytes")
+                  + _tot(nt_marks[-1], "rx_bytes")
+                  - _tot(nt_marks[0], "tx_bytes")
+                  - _tot(nt_marks[0], "rx_bytes")) / n_warm / 1e6
+    bit_nt = int(all(np.array_equal(d, ref) for d in nt_deltas))
+    rows.append({
+        "bench": "net",
+        "case": f"net_{N_NODES}node_nodetop_warm",
+        "us_per_call": float(np.mean(nt_walls)) * 1e6,
+        "derived": (f"nodes={N_NODES};bitexact={bit_nt};"
+                    f"return_mb={return_mb:.2f};"
+                    f"return_bound_mb={model_mb * SLACK / 1:.2f};"
+                    f"partial_mb={return_mb + ship_mb:.2f};"
+                    f"bound_mb={bound_mb:.2f};"
+                    f"ship_mb={ship_mb:.2f};wire_mb={nt_wire_mb:.2f};"
+                    f"model_mb={model_mb:.2f};"
+                    f"ctrltop_over_nodetop="
+                    f"{np.mean(walls) / np.mean(nt_walls):.2f}x"),
     })
     return rows

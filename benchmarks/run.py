@@ -62,9 +62,11 @@ def _check_driver_dispatch_gate(rows) -> None:
 
 
 def _check_net_traffic_gate(rows) -> None:
-    """PR-4 acceptance gate: cross-node aggregation traffic per round
-    must stay partials-only — ≤ nodes × model_size × 1.1.  More means
-    per-client updates are fanning in to the top across the wire."""
+    """PR-4/PR-5 acceptance gates: cross-node aggregation traffic per
+    round must stay partials-only — ≤ nodes × model_size × 1.1 (this
+    bound now also covers daemon→daemon shipping) — and a node-top
+    round must return ≤ 1 × model × 1.1 to the controller: more means
+    partials are coming home instead of folding on the root node."""
     import re
 
     for r in rows:
@@ -76,6 +78,14 @@ def _check_net_traffic_gate(rows) -> None:
                 f"FATAL: cross-node traffic regression — partial payloads "
                 f"{m.group(1)} MB/round > partials-only bound "
                 f"{m.group(2)} MB (row {r['case']!r}; see ROADMAP.md)")
+        g = re.search(r"return_mb=([\d.]+);return_bound_mb=([\d.]+)",
+                      r["derived"])
+        if g and float(g.group(1)) > float(g.group(2)):
+            sys.exit(
+                f"FATAL: node-top return-traffic regression — "
+                f"{g.group(1)} MB/round came back to the controller > "
+                f"1 × model bound {g.group(2)} MB (row {r['case']!r}; "
+                f"see ROADMAP.md)")
         b = re.search(r"bitexact=(\d)", r["derived"])
         if b and b.group(1) != "1":
             sys.exit(

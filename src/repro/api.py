@@ -70,6 +70,7 @@ class Session:
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 5,
         seed: int = 0,
+        wire_compress: Any = 0,
     ) -> "Session":
         """Open a session: ``model.loss(params, batch)`` plus a client
         fleet, on the chosen aggregation runtime.
@@ -78,10 +79,26 @@ class Session:
         (single-node runtimes) or a list of ``netd`` daemon addresses
         (``"host:port"`` / ``"unix:/path"``) — the multi-node mode: a
         :class:`~repro.runtime.netrt.RemoteRuntime` is connected to the
-        fleet, each daemon's name/capacity (from its welcome handshake)
-        becomes a placement ``NodeState``, and placement defaults to
-        the locality policy that minimizes cross-node partials."""
+        fleet, and each daemon's name/capacity (from its welcome
+        handshake) becomes a placement ``NodeState``.  When
+        ``round_cfg`` is omitted, the multi-node default config uses
+        the locality placement policy (minimizes cross-node partials)
+        and the ``node`` fold topology — the round's top fold runs on
+        the busiest worker node, partials ship daemon→daemon, and only
+        the final folded Σc·u returns to the controller; a caller
+        supplying its own ``RoundConfig`` picks both explicitly
+        (``topology`` defaults to ``"controller"``).
+        ``wire_compress`` (zlib level, or True for 6) compresses
+        update/partial blobs on the frame transport."""
         remote = None
+        if wire_compress and not isinstance(nodes, (list, tuple)):
+            # single-node runtimes never touch the frame transport, so
+            # silently accepting the flag would leave the caller
+            # believing their traffic is compressed
+            raise ValueError(
+                "wire_compress= requires multi-node mode (nodes as a "
+                "list of netd addresses) — single-node runtimes have "
+                "no wire to compress")
         if isinstance(nodes, (list, tuple)):
             from repro.core.placement import NodeState
             from repro.runtime.netrt import RemoteRuntime
@@ -95,14 +112,16 @@ class Session:
                     "addresses — multi-node sessions always run on the "
                     "RemoteRuntime; pick the per-node runtime with "
                     "netd --runtime instead")
-            remote = RemoteRuntime(nodes, agg_engine=agg_engine)
+            remote = RemoteRuntime(nodes, agg_engine=agg_engine,
+                                   compress=wire_compress)
             nodes = {name: NodeState(node=name, max_capacity=cap)
                      for name, cap in remote.node_info().items()}
             runtime = remote
             if round_cfg is None:
                 from repro.core import RoundConfig
                 round_cfg = RoundConfig(aggregation_goal=8,
-                                        placement_policy="locality")
+                                        placement_policy="locality",
+                                        topology="node")
         try:
             sess = cls(FederatedTrainer(
                 model, params, clients,

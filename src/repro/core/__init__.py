@@ -15,8 +15,10 @@ from repro.core.engine import (
     AggregationEngine,
     BlockedNumpyEngine,
     ENGINE_NAMES,
+    EngineConfig,
     JaxEngine,
     NaiveEngine,
+    autotune_block_elems,
     make_engine,
 )
 from repro.core.coordinator import (
@@ -45,8 +47,11 @@ from repro.core.objectstore import (
     new_object_key,
 )
 from repro.core.placement import (
+    FoldPlan,
+    FoldSite,
     NodeState,
     Placement,
+    build_fold_plan,
     choose_top_node,
     inter_node_transfers,
     measure_max_capacity,

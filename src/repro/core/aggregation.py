@@ -65,6 +65,16 @@ class FedAvgState:
         self.weight += float(sum(weights))
         self.count += len(updates)
 
+    def absorb(self, partial: np.ndarray, weight: float, count: int = 0) -> None:
+        """Fold one published raw partial Σ c·u into the running sum —
+        the root fold of a FoldPlan, identical arithmetic to the
+        driver's controller-side top fold (``engine.add_partial``), so
+        where the fold runs never changes the bits."""
+        self._ensure_acc(partial.size)
+        self.acc = self.engine.add_partial(self.acc, partial)
+        self.weight += float(weight)
+        self.count += int(count)
+
     def merge(self, other: "FedAvgState") -> None:
         if other.acc is None:
             return
@@ -109,6 +119,10 @@ class Aggregator:
         self.done = False
         self.result: Optional[Tuple[np.ndarray, float]] = None
         self.agg_exec_s = 0.0
+        # root-fold inputs (recv_partial) count toward the goal in
+        # partials, not updates — state.count then carries the subtree
+        # totals instead
+        self.partials_absorbed = 0
 
     # ------------------------------------------------------------------
     # Recv step — called by the sockmap notify hook (event-driven)
@@ -158,6 +172,26 @@ class Aggregator:
     def flush(self) -> None:
         """Lazy timing: called once the goal's worth of updates queued."""
         self._drain()
+
+    def recv_partial(self, key: str, weight: float, count: int = 0) -> None:
+        """Root-fold input: absorb a published raw partial Σ c·u from
+        the store.  Folds immediately (the driver only routes partials
+        here once every input is at hand, in plan order) and publishes
+        when ``goal`` partials have been absorbed."""
+        t0 = time.perf_counter()
+        view = np.asarray(self.store.get(key))
+        if self.sidecar:
+            self.sidecar.on_recv(view.nbytes, 0.0)
+        self.state.absorb(view, weight, count)
+        self.store.release(key)
+        self.engine.sync(self.state.acc)
+        dt = time.perf_counter() - t0
+        self.agg_exec_s += dt
+        if self.sidecar:
+            self.sidecar.on_aggregate(1, dt)
+        self.partials_absorbed += 1
+        if self.partials_absorbed >= self.goal and not self.done:
+            self._send()
 
     # ------------------------------------------------------------------
     # Send step

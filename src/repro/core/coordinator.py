@@ -26,8 +26,10 @@ import numpy as np
 
 from repro.core.hierarchy import HierarchyPlan, HierarchyPlanner
 from repro.core.placement import (
+    FoldPlan,
     NodeState,
     Placement,
+    build_fold_plan,
     choose_top_node,
     inter_node_transfers,
     place_updates,
@@ -76,6 +78,14 @@ class RoundConfig:
     # "shmproc": real aggregator worker processes over shared-memory
     # rings (repro.runtime.shmrt) — Linux, event-driven, zero-copy
     runtime: str = "inproc"
+    # where the round's root fold runs (the FoldPlan root tier):
+    # "controller" — the driver folds partials in its own process;
+    # "worker"     — the top aggregator is itself a runtime aggregator
+    #                (a parked worker process under shmproc);
+    # "node"       — the root lives on the busiest worker node and the
+    #                other nodes ship partials daemon→daemon (netrt) —
+    #                only the final folded Σc·u returns to the controller
+    topology: str = "controller"
 
 
 @dataclass
@@ -88,6 +98,7 @@ class RoundPlan:
     top_node: Optional[str]
     cold_starts: int
     reused: int
+    fold_plan: Optional[FoldPlan] = None
 
     @property
     def inter_node_updates(self) -> int:
@@ -159,10 +170,16 @@ class Coordinator:
             clients_per_leaf=cfg.fan_in,
             top_node=top or next(iter(self.nodes)),
         )
+        # the explicit fold topology the driver executes: mids from the
+        # placement, root tier from the config, root node = the RC-aware
+        # busiest node (already chosen above)
+        fold_plan = build_fold_plan(
+            placement.assignment, top_node=top, topology=cfg.topology,
+            nodes=self.nodes)
         plan = RoundPlan(
             round_id=rid, selected=selected, placement=placement,
             hierarchy=hierarchy, tag=tag, top_node=top,
-            cold_starts=cold_starts, reused=reused,
+            cold_starts=cold_starts, reused=reused, fold_plan=fold_plan,
         )
         self.history.append(plan)
         return plan

@@ -11,9 +11,21 @@ within residual capacity.  BestFit (the paper's choice) concentrates
 load to maximize shared-memory locality; WorstFit reproduces Knative's
 "Least Connection" spreading (the SL-H baseline); FirstFit trades
 locality for O(1) search.
+
+The placement's output is reified as a :class:`FoldPlan` — an explicit,
+serializable tree of fold sites that the round driver *interprets*
+instead of hard-coding where the top fold runs.  Each site binds an
+aggregator id to a node and a runtime tier; the root tier selects the
+topology: ``controller`` (the driver folds partials in its own
+process), ``worker`` (the top aggregator is itself a runtime
+aggregator — a parked worker process under shmproc), or ``node`` (the
+root lives on the busiest worker node and the other nodes ship their
+sealed partials daemon→daemon, so only the final folded Σc·u returns
+to the controller).
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -125,10 +137,130 @@ def place_updates(
 def choose_top_node(nodes: Dict[str, NodeState],
                     assignment: Dict[str, List[int]]) -> Optional[str]:
     """Top aggregator goes to the busiest used node: the largest share of
-    intermediate updates is then already local to it (§5.2)."""
+    intermediate updates is then already local to it (§5.2).  Ties are
+    broken by the RC capacity model — the node with the most residual
+    capacity absorbs the extra top fold best — then by name, so the
+    root choice is deterministic across processes."""
     if not assignment:
         return None
-    return max(assignment, key=lambda n: len(assignment[n]))
+
+    def rank(n: str):
+        ns = nodes.get(n)
+        rc = ns.residual_capacity if ns is not None else 0.0
+        return (len(assignment[n]), rc, n)
+
+    return max(assignment, key=rank)
+
+
+# ---------------------------------------------------------------------------
+# FoldPlan — the aggregation topology as an explicit, serializable tree
+# ---------------------------------------------------------------------------
+
+#: root tiers a plan may ask for (where the final fold executes)
+FOLD_TIERS = ("controller", "worker", "node")
+
+
+@dataclass(frozen=True)
+class FoldSite:
+    """One fold in the tree: an aggregator id bound to a node + tier.
+
+    ``tier`` is where the fold executes: ``worker`` for mids (a runtime
+    aggregator — an Aggregator object in-proc, a forked worker process
+    under shmproc, a daemon-side aggregator under netrt); for the root
+    it selects the round topology (see :class:`FoldPlan`)."""
+
+    agg_id: str
+    node: str
+    tier: str                      # "controller" | "worker" | "node"
+    goal: int                      # inputs this site folds
+    children: Tuple[str, ...] = ()  # child site agg_ids (root only)
+
+
+@dataclass(frozen=True)
+class FoldPlan:
+    """The round's aggregation topology: a tree of fold sites.
+
+    Produced by :func:`build_fold_plan` (via ``Coordinator.plan_round``)
+    and *executed* by ``RoundDriver`` — the driver interprets the plan
+    instead of hard-coding a controller-side top fold.  The fold order
+    is fixed by the plan (children sorted by agg_id), which is what
+    keeps all three topologies bit-identical."""
+
+    root: str = ""                 # root site agg_id ("" = empty round)
+    sites: Tuple[FoldSite, ...] = ()
+
+    def site(self, agg_id: str) -> FoldSite:
+        for s in self.sites:
+            if s.agg_id == agg_id:
+                return s
+        raise KeyError(f"no fold site {agg_id!r} in plan")
+
+    @property
+    def mids(self) -> Tuple[FoldSite, ...]:
+        """The non-root sites, in plan order (sorted by node)."""
+        return tuple(s for s in self.sites if s.agg_id != self.root)
+
+    @property
+    def topology(self) -> str:
+        return self.site(self.root).tier if self.root else "controller"
+
+    # -- wire (same seam as events.to_wire: JSON bytes) -----------------
+    def to_wire(self) -> bytes:
+        return json.dumps({
+            "plan": "FoldPlan",
+            "root": self.root,
+            "sites": [{"agg_id": s.agg_id, "node": s.node, "tier": s.tier,
+                       "goal": s.goal, "children": list(s.children)}
+                      for s in self.sites],
+        }, separators=(",", ":")).encode("utf-8")
+
+    @classmethod
+    def from_wire(cls, raw) -> "FoldPlan":
+        if isinstance(raw, (bytes, bytearray)):
+            raw = raw.decode("utf-8")
+        d = json.loads(raw)
+        if d.get("plan") != "FoldPlan":
+            raise ValueError(f"not a FoldPlan on the wire: {d.get('plan')!r}")
+        return cls(
+            root=d["root"],
+            sites=tuple(FoldSite(
+                agg_id=s["agg_id"], node=s["node"], tier=s["tier"],
+                goal=int(s["goal"]), children=tuple(s["children"]),
+            ) for s in d["sites"]),
+        )
+
+
+def build_fold_plan(
+    assignment: Dict[str, List[int]],
+    *,
+    top_node: Optional[str] = None,
+    topology: str = "controller",
+    nodes: Optional[Dict[str, NodeState]] = None,
+) -> FoldPlan:
+    """Reify a placement into the fold tree the driver executes.
+
+    One mid per node with assigned updates (goal = its update count),
+    plus a root folding the mids' partials.  ``topology`` picks the
+    root tier; the root node defaults to :func:`choose_top_node` (the
+    busiest node, RC tie-break) so under ``node`` topology the largest
+    share of partials is already local to the root."""
+    if topology not in FOLD_TIERS:
+        raise ValueError(f"unknown fold topology {topology!r} "
+                         f"(expected one of {FOLD_TIERS})")
+    planned = {node: len(idxs) for node, idxs in assignment.items() if idxs}
+    if not planned:
+        return FoldPlan()
+    mids = tuple(FoldSite(agg_id=f"mid@{node}", node=node, tier="worker",
+                          goal=planned[node])
+                 for node in sorted(planned))
+    root_node = top_node or choose_top_node(nodes or {}, assignment)
+    if root_node not in planned:
+        root_node = max(planned, key=lambda n: (planned[n], n))
+    root = FoldSite(
+        agg_id=f"top@{root_node}", node=root_node, tier=topology,
+        goal=len(mids), children=tuple(s.agg_id for s in mids),
+    )
+    return FoldPlan(root=root.agg_id, sites=mids + (root,))
 
 
 def inter_node_transfers(assignment: Dict[str, List[int]], top_node: str) -> int:

@@ -1,28 +1,40 @@
-"""RoundDriver: one event loop owns the round lifecycle, for every runtime.
+"""RoundDriver: one plan-interpreting loop owns the round lifecycle.
 
-This is the seam the multi-node dispatcher will plug into.  A *runtime*
-is anything that can host aggregators and speak the event protocol
-(`events.py`); the driver never cares whether aggregators are objects
-in this process (``InProcRuntime``) or forked worker processes over
-shared-memory rings (``ShmProcRuntime`` wrapping ``shmrt``).
+A *runtime* is anything that can host aggregators and speak the event
+protocol (`events.py`); the driver never cares whether aggregators are
+objects in this process (``InProcRuntime``), forked worker processes
+over shared-memory rings (``ShmProcRuntime`` wrapping ``shmrt``), or
+daemon-side aggregators across nodes (``netrt.RemoteRuntime``).
 
-Driver state machine (per round)::
+The round's aggregation topology is an explicit
+:class:`~repro.core.placement.FoldPlan` the driver *executes* (per
+round)::
 
-    SPAWN ──▶ DISPATCH ──▶ COLLECT ──▶ FOLD ──▶ DONE
-      │           │            │
-      │           ▼            ▼
-      │     UpdateArrived  PartialReady / WorkerCrashed / RoundDeadline
-      └──────────────────────▶ re-dispatch on crash (COLLECT loops)
+    PLAN ──▶ SPAWN ──▶ DISPATCH ──▶ COLLECT ──▶ FOLD(root site) ──▶ DONE
+                │           │            │            │
+                │           ▼            ▼            ▼ root tier:
+                │    UpdateArrived  PartialReady   controller | worker | node
+                │                   WorkerCrashed  (crash ⇒ re-root on a
+                │                   RoundDeadline   surviving node)
+                └──────────────────────▶ re-dispatch on crash
 
-Semantics both runtimes share, by construction:
+The root tier decides where the final fold runs: ``controller`` folds
+fetched partials in this process (the legacy topology, bit for bit),
+``worker`` spawns the top as a runtime aggregator (a parked worker
+process under shmproc), and ``node`` roots the fold on the busiest
+worker node — partials ship daemon→daemon and only the folded Σ c·u
+returns (~1 × model per round instead of nodes × model).
+
+Semantics every runtime shares, by construction:
 
   * mids fold in delivery order through the blocked-engine arithmetic
     and publish their **raw partial sum** Σ c·u (not the normalized
     mean) into the object store;
-  * the top fold consumes partials sorted by ``agg_id`` — a
-    deterministic order independent of completion timing — so
-    ``runtime="inproc"`` and ``runtime="shmproc"`` produce
-    **bit-identical** params (test-asserted over multi-round runs);
+  * the root fold consumes partials sorted by ``agg_id`` — the plan
+    fixes the order (explicit seq numbers on the wire), independent of
+    completion timing — so every runtime × topology combination
+    produces **bit-identical** params (test-asserted over multi-round
+    runs);
   * a :class:`~repro.runtime.events.WorkerCrashed` mid-round loses the
     crashed subtree's *unpublished folds only*: the dispatched update
     objects still live in the store, so the driver re-dispatches the
@@ -47,12 +59,14 @@ from repro.core.aggregation import Aggregator, FedAvgState
 from repro.core.engine import make_engine
 from repro.core.gateway import UpdateEnvelope
 from repro.core.objectstore import InProcObjectStore
+from repro.core.placement import FoldPlan, FoldSite, build_fold_plan
 from repro.core.sidecar import EventSidecar, MetricsMap
 from repro.runtime.events import (
     GoalReached,
     PartialReady,
     RoundDeadline,
     RoundEvent,
+    TopFolded,
     UpdateArrived,
     WorkerCrashed,
 )
@@ -75,14 +89,33 @@ class Runtime(Protocol):
     metrics: MetricsMap
 
     def spawn_aggregator(self, agg_id: str, *, goal: int, n_elems: int,
-                         round_id: int = 0) -> None: ...
+                         round_id: int = 0, kind: str = "mid") -> None: ...
 
     def deliver(self, agg_id: str, key: str, weight: float,
                 round_id: int = 0) -> None: ...
 
+    def deliver_partial(self, agg_id: str, key: str, weight: float,
+                        count: int, round_id: int = 0,
+                        seq: int = 0) -> None: ...
+
     def poll_events(self, timeout: float = 0.0) -> List[RoundEvent]: ...
 
     def quiesce(self, timeout: float = 5.0) -> None: ...
+
+
+def _partial_alive(rt, key: str) -> bool:
+    """Whether a published partial's bytes are still reachable (a node
+    death takes its store down with it).  Runtimes without the hook are
+    single-node: partials live as long as the process."""
+    fn = getattr(rt, "partial_alive", None)
+    return True if fn is None else bool(fn(key))
+
+
+def _partial_node(rt, key: str) -> Optional[str]:
+    """Which node a published partial physically lives on (None for
+    single-node runtimes, where agg ids name logical nodes only)."""
+    fn = getattr(rt, "partial_node", None)
+    return fn(key) if fn is not None else None
 
 
 class _WarmEngineMixin:
@@ -124,7 +157,7 @@ class InProcRuntime(_WarmEngineMixin):
 
     # -- protocol -------------------------------------------------------
     def spawn_aggregator(self, agg_id: str, *, goal: int, n_elems: int,
-                         round_id: int = 0) -> None:
+                         round_id: int = 0, kind: str = "mid") -> None:
         if agg_id in self._open:
             raise ValueError(f"{agg_id!r} already has an open task")
         # warm = an engine is already resident at this tree position
@@ -153,6 +186,14 @@ class InProcRuntime(_WarmEngineMixin):
         agg, _ = self._open[agg_id]
         agg.recv(UpdateEnvelope(key, round_id, agg_id, weight,
                                 enqueue_ts=time.perf_counter()))
+
+    def deliver_partial(self, agg_id: str, key: str, weight: float,
+                        count: int, round_id: int = 0, seq: int = 0) -> None:
+        agg, _ = self._open[agg_id]
+        agg.recv_partial(key, weight, count)
+
+    def partial_alive(self, key: str) -> bool:
+        return self.store.contains(key)
 
     def drain(self, agg_id: str) -> None:
         """Close out a short/lazy task: fold whatever is queued and
@@ -246,7 +287,7 @@ class ShmProcRuntime(_WarmEngineMixin):
 
     # -- protocol -------------------------------------------------------
     def spawn_aggregator(self, agg_id: str, *, goal: int, n_elems: int,
-                         round_id: int = 0) -> None:
+                         round_id: int = 0, kind: str = "mid") -> None:
         self._round_id = round_id
         self._rt.submit_task(agg_id, goal=goal, n_elems=n_elems,
                              round_id=round_id)
@@ -254,6 +295,15 @@ class ShmProcRuntime(_WarmEngineMixin):
     def deliver(self, agg_id: str, key: str, weight: float,
                 round_id: int = 0) -> None:
         self._rt.dispatch(agg_id, key, weight, round_id=round_id)
+
+    def deliver_partial(self, agg_id: str, key: str, weight: float,
+                        count: int, round_id: int = 0, seq: int = 0) -> None:
+        # ring FIFO ⇒ the worker absorbs in dispatch order (plan order)
+        self._rt.dispatch_partial(agg_id, key, weight, count,
+                                  round_id=round_id)
+
+    def partial_alive(self, key: str) -> bool:
+        return self._rt.store.contains(key)
 
     def drain(self, agg_id: str) -> None:
         self._rt.drain(agg_id)
@@ -350,6 +400,8 @@ class RoundOutcome:
     workers: int = 0
     exec_s: Dict[str, float] = field(default_factory=dict)  # agg_id → E
     dispatched: Dict[str, int] = field(default_factory=dict)  # node → n
+    fold_tier: str = "controller"          # where the root fold ran
+    root_node: str = ""                    # which node rooted the round
 
 
 @dataclass
@@ -364,6 +416,12 @@ class _RoundState:
     spawn_goals: Dict[str, int] = field(default_factory=dict)
     lost: Set[str] = field(default_factory=set)   # subtrees given up
     attempts: Dict[str, int] = field(default_factory=dict)  # re-dispatches
+    plan: Optional[FoldPlan] = None
+    deadline: Optional[float] = None              # absolute perf_counter
+    # runtime-side root fold in flight (worker/node tiers)
+    top_id: Optional[str] = None
+    top_partial: Optional[PartialReady] = None
+    top_crashed: bool = False
 
 
 class RoundDriver:
@@ -462,13 +520,19 @@ class RoundDriver:
         n_elems: int,
         top_node: Optional[str] = None,
         deadline_s: Optional[float] = None,
+        fold_plan: Optional[FoldPlan] = None,
     ) -> RoundOutcome:
         """Drive one round: spawn the planned mids, pump ``updates``
         (``(node, client_id, flat, weight)`` tuples — typically a lazy
         generator whose iteration *is* the client training) until the
         goal, collect every counted subtree's partial (re-dispatching
-        around crashes), and fold the top.  Returns the outcome; the
-        caller applies the server optimizer."""
+        around crashes), and execute the plan's root fold.  Returns the
+        outcome; the caller applies the server optimizer.
+
+        ``fold_plan`` makes the aggregation topology explicit (see
+        :class:`~repro.core.placement.FoldPlan`); without one, a
+        controller-top plan is derived from ``assignment`` +
+        ``top_node`` — the legacy behavior, bit for bit."""
         rt = self.runtime
         if rt is None:
             raise RuntimeError("RoundDriver has no runtime attached")
@@ -483,7 +547,7 @@ class RoundDriver:
             self._drive(out, rt, round_id=round_id, assignment=assignment,
                         updates=updates, goal=goal, n_elems=n_elems,
                         top_node=top_node, deadline_s=deadline_s,
-                        sent=sent, partials=partials)
+                        sent=sent, partials=partials, fold_plan=fold_plan)
             completed = True
         except BaseException:
             # a failing client/handler must not brick the driver: park
@@ -519,13 +583,17 @@ class RoundDriver:
     def _drive(self, out: RoundOutcome, rt, *, round_id, assignment,
                updates, goal, n_elems, top_node, deadline_s,
                sent: Dict[str, List[Tuple[str, float]]],
-               partials: Dict[str, PartialReady]) -> None:
+               partials: Dict[str, PartialReady],
+               fold_plan: Optional[FoldPlan] = None) -> None:
+        # --- PLAN: the fold topology the rest of the loop interprets ---
+        if fold_plan is None:
+            fold_plan = build_fold_plan(assignment, top_node=top_node,
+                                        topology="controller")
         st = _RoundState(round_id=round_id, n_elems=n_elems, out=out,
-                         sent=sent, partials=partials)
-        # --- SPAWN: one mid per planned node ---------------------------
-        planned = {node: len(idxs) for node, idxs in assignment.items()
-                   if idxs}
-        mid_ids = {node: f"mid@{node}" for node in planned}
+                         sent=sent, partials=partials, plan=fold_plan)
+        # --- SPAWN: one mid per planned fold site ----------------------
+        planned = {s.node: s.goal for s in fold_plan.mids}
+        mid_ids = {s.node: s.agg_id for s in fold_plan.mids}
         for node, k in planned.items():
             rt.spawn_aggregator(mid_ids[node], goal=k, n_elems=n_elems,
                                 round_id=round_id)
@@ -535,6 +603,7 @@ class RoundDriver:
         dispatched = {node: 0 for node in planned}
         accepted = 0
         deadline = (time.perf_counter() + deadline_s) if deadline_s else None
+        st.deadline = deadline
 
         def fire_deadline() -> None:
             # the wall-clock budget always closes the round; the
@@ -588,28 +657,167 @@ class RoundDriver:
                 break
         rt.quiesce()
 
-        # --- FOLD: the top aggregator, deterministic order -------------
+        # --- FOLD: execute the plan's root site ------------------------
         order = sorted(set(partials) & counted)
         if order:
-            top = top_node or order[0].split("@", 1)[-1]
-            engine = rt.engine_for(f"top@{top}")
-            state = FedAvgState(engine=engine)
-            state._ensure_acc(n_elems)
-            sidecar = EventSidecar("top", self.metrics)
-            t0 = time.perf_counter()
-            for agg_id in order:
-                p = partials[agg_id]
-                view = rt.get_partial(p.key)   # zero-copy shm view
-                state.acc = engine.add_partial(state.acc, view)
-                state.weight += p.weight
-                state.count += p.count
+            root = fold_plan.site(fold_plan.root) if fold_plan.root \
+                else None
+            tier = root.tier if root is not None else "controller"
+            folded = False
+            if tier != "controller" and hasattr(rt, "deliver_partial"):
+                folded = self._fold_on_runtime(st, rt, order, root)
+            if not folded:
+                # re-collected subtrees keep their agg_ids, so the
+                # counted set still names every foldable partial
+                self._fold_in_controller(
+                    st, rt, sorted(set(partials) & counted),
+                    root.node if root is not None else top_node)
+
+    # ------------------------------------------------------------------
+    # root-fold execution (plan interpretation)
+    # ------------------------------------------------------------------
+    def _fold_in_controller(self, st: "_RoundState", rt, order: List[str],
+                            top_node: Optional[str]) -> None:
+        """The controller-tier root fold: pull every partial to this
+        process and fold sorted by agg_id — the legacy topology, kept
+        bit for bit (and the fallback when a runtime-side fold gives
+        up)."""
+        out = st.out
+        order = [a for a in order
+                 if _partial_alive(rt, st.partials[a].key)]
+        if not order:
+            return
+        top = top_node or order[0].split("@", 1)[-1]
+        engine = rt.engine_for(f"top@{top}")
+        state = FedAvgState(engine=engine)
+        state._ensure_acc(st.n_elems)
+        sidecar = EventSidecar("top", self.metrics)
+        t0 = time.perf_counter()
+        for agg_id in order:
+            p = st.partials[agg_id]
+            view = rt.get_partial(p.key)   # zero-copy shm view
+            state.acc = engine.add_partial(state.acc, view)
+            state.weight += p.weight
+            state.count += p.count
+            rt.release_partial(p.key)
+            out.exec_s[agg_id] = p.exec_s
+        engine.sync(state.acc)
+        sidecar.on_aggregate(len(order), time.perf_counter() - t0)
+        out.delta, out.weight = state.result()
+        out.count = state.count
+        sidecar.on_send(out.delta.nbytes)
+        out.fold_tier, out.root_node = "controller", top
+        self.dispatch(TopFolded(
+            round_id=st.round_id, agg_id=f"top@{top}", node=top,
+            tier="controller", count=out.count, weight=out.weight))
+
+    def _fold_on_runtime(self, st: "_RoundState", rt, order: List[str],
+                         root: FoldSite) -> bool:
+        """Execute the plan's root fold *inside the runtime* — the top
+        aggregator is a runtime aggregator on the root node (a parked
+        worker process under shmproc; a daemon-side aggregator, fed by
+        daemon→daemon partial shipping, under netrt), and only its
+        folded Σ c·u comes back to the controller.
+
+        Partials are delivered in sorted-agg_id order with an explicit
+        sequence number, so the fold order — and therefore the bits —
+        match the controller-tier fold exactly.  A dead root (node
+        loss, spawn/ship failure) re-roots the round on the busiest
+        surviving node, re-collecting any partials that died with the
+        root, up to ``redispatch_limit`` attempts; returns False to
+        fall back to a controller-side fold."""
+        out = st.out
+        want = set(order)
+        root_node = root.node
+        for attempt in range(self.redispatch_limit + 1):
+            # 1. partials that died with their node: re-dispatch those
+            # subtrees from their staged update keys and re-collect
+            dead = [a for a in sorted(want) if a in st.partials
+                    and not _partial_alive(rt, st.partials[a].key)]
+            for a in dead:
+                st.partials.pop(a)
+                self._redispatch(
+                    WorkerCrashed(round_id=st.round_id, agg_id=a),
+                    st, draining=True)
+            while (want - st.lost) - set(st.partials):
+                expired = (st.deadline is not None
+                           and time.perf_counter() > st.deadline)
+                if expired:
+                    break
+                self._absorb(rt.poll_events(timeout=0.05), st,
+                             draining=True)
+            if st.deadline is not None \
+                    and time.perf_counter() > st.deadline:
+                # budget already gone: don't spawn a root and ship
+                # model-size partials only to abandon the fold — close
+                # controller-side with what's at hand
+                return False
+            live = sorted(
+                a for a in (want - st.lost) & set(st.partials)
+                if _partial_alive(rt, st.partials[a].key))
+            if not live:
+                return False
+            # 2. root placement: keep the planned root while a partial
+            # still lives there; otherwise re-root on the busiest
+            # surviving node (largest folded count, name tie-break)
+            homes = {a: (_partial_node(rt, st.partials[a].key)
+                         or a.split("@", 1)[-1]) for a in live}
+            if root_node not in set(homes.values()):
+                by_node: Dict[str, int] = {}
+                for a, n in homes.items():
+                    by_node[n] = by_node.get(n, 0) + st.partials[a].count
+                root_node = max(by_node, key=lambda n: (by_node[n], n))
+            # a fresh agg_id per attempt: a failed attempt may have left
+            # a stale open task under the old id on a surviving daemon
+            top_id = f"top@{root_node}" if attempt == 0 \
+                else f"top.{attempt}@{root_node}"
+            st.top_id, st.top_partial, st.top_crashed = top_id, None, False
+            try:
+                rt.spawn_aggregator(top_id, goal=len(live),
+                                    n_elems=st.n_elems,
+                                    round_id=st.round_id, kind="top")
+                for seq, a in enumerate(live):
+                    p = st.partials[a]
+                    rt.deliver_partial(top_id, p.key, p.weight, p.count,
+                                       round_id=st.round_id, seq=seq)
+            except BaseException:
+                st.top_id = None
+                raise  # no live node at all: run_round aborts retriable
+            while st.top_partial is None and not st.top_crashed:
+                if (st.deadline is not None
+                        and time.perf_counter() > st.deadline):
+                    break
+                self._absorb(rt.poll_events(timeout=0.05), st,
+                             draining=True)
+            st.top_id = None
+            if st.top_partial is not None:
+                p = st.top_partial
+                view = rt.get_partial(p.key)
+                # Σ weight accumulated in the same (sorted) order the
+                # controller fold uses, so the division is bit-identical
+                w, c = 0.0, 0
+                for a in live:
+                    w += st.partials[a].weight
+                    c += st.partials[a].count
+                    out.exec_s[a] = st.partials[a].exec_s
+                out.delta = np.asarray(view, dtype=np.float32) \
+                    / np.float32(w)
                 rt.release_partial(p.key)
-                out.exec_s[agg_id] = p.exec_s
-            engine.sync(state.acc)
-            sidecar.on_aggregate(len(order), time.perf_counter() - t0)
-            out.delta, out.weight = state.result()
-            out.count = state.count
-            sidecar.on_send(out.delta.nbytes)
+                out.weight, out.count = w, c
+                out.exec_s[top_id] = p.exec_s
+                out.fold_tier, out.root_node = root.tier, root_node
+                # the end-of-round sweep reclaims the top's object too
+                st.partials[top_id] = p
+                self.dispatch(TopFolded(
+                    round_id=st.round_id, agg_id=top_id, node=root_node,
+                    tier=root.tier, count=c, weight=w))
+                return True
+            if st.deadline is not None \
+                    and time.perf_counter() > st.deadline:
+                return False  # budget expired: fold what's fetchable
+            # root crashed: loop — the dead node's partials are filtered
+            # and re-collected, and the next attempt re-roots
+        return False
 
     # ------------------------------------------------------------------
     def _absorb(self, events: List[RoundEvent], st: "_RoundState", *,
@@ -618,6 +826,17 @@ class RoundDriver:
         rt = self.runtime
         for ev in events:
             if isinstance(ev, PartialReady):
+                if (st.top_id is not None and ev.agg_id == st.top_id
+                        and ev.round_id == st.round_id
+                        and st.top_partial is None):
+                    # the runtime-side root fold published its Σ c·u.
+                    # Absorbed silently — TopFolded is the public
+                    # signal: handlers (the coordinator's RC model
+                    # included) must see the same event stream whatever
+                    # tier the root ran on, or the next round's
+                    # placement would diverge between topologies.
+                    st.top_partial = ev
+                    continue
                 if (ev.round_id != st.round_id or ev.agg_id not in st.sent
                         or ev.agg_id in st.partials):
                     # stale leftover (aborted round / force-released
@@ -636,6 +855,11 @@ class RoundDriver:
                     continue
                 st.out.crashes += 1
                 self.stats["crashes"] += 1
+                if st.top_id is not None and ev.agg_id == st.top_id:
+                    # the root fold died (node loss / ship failure):
+                    # _fold_on_runtime re-roots; nothing to re-dispatch
+                    st.top_crashed = True
+                    continue
                 self._redispatch(ev, st, draining=draining)
             else:
                 self.dispatch(ev)

@@ -23,6 +23,8 @@ Catalog (see runtime/README.md for the full state machine):
 
   ``UpdateArrived``   a client/gateway update was delivered to a mid
   ``PartialReady``    a subtree published its partial sum (key in store)
+  ``PartialShipped``  a sealed partial moved daemon→daemon to the root
+  ``TopFolded``       the round's root fold completed (plan's root site)
   ``GoalReached``     the round's aggregation goal n was met
   ``WorkerCrashed``   an aggregator worker died mid-task (shmproc)
   ``NodeJoined``      a worker node joined the cluster
@@ -69,6 +71,31 @@ class PartialReady(RoundEvent):
     count: int = 0         # updates folded into this partial
     exec_s: float = 0.0    # aggregation execution time E_{i,t}
     worker: int = -1       # worker index (-1: in-process)
+
+
+@dataclass(frozen=True)
+class PartialShipped(RoundEvent):
+    """A sealed partial Σ c·u was shipped daemon→daemon to the round's
+    root node (node-top topology) instead of returning to the
+    controller — the wire cost this event carries is exactly what the
+    locality root choice minimizes."""
+
+    agg_id: str = ""       # the root fold the partial feeds
+    key: str = ""
+    src: str = ""          # shipping node
+    dst: str = ""          # root node
+    nbytes: int = 0
+
+
+@dataclass(frozen=True)
+class TopFolded(RoundEvent):
+    """The round's root fold completed at the plan's root site."""
+
+    agg_id: str = ""
+    node: str = ""         # where the root fold ran
+    tier: str = ""         # 'controller' | 'worker' | 'node'
+    count: int = 0         # updates folded end-to-end
+    weight: float = 0.0    # Σ c over the round
 
 
 @dataclass(frozen=True)
@@ -123,8 +150,9 @@ class ScaleDecision(RoundEvent):
 EVENT_TYPES: Dict[str, Type[RoundEvent]] = {
     cls.__name__: cls
     for cls in (
-        UpdateArrived, PartialReady, GoalReached, WorkerCrashed,
-        NodeJoined, NodeLost, RoundDeadline, ScaleDecision,
+        UpdateArrived, PartialReady, PartialShipped, TopFolded,
+        GoalReached, WorkerCrashed, NodeJoined, NodeLost, RoundDeadline,
+        ScaleDecision,
     )
 }
 

@@ -37,17 +37,18 @@ import json
 import os
 import signal
 import sys
-from typing import List, Optional
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
 from repro.runtime.driver import make_runtime
-from repro.runtime.events import to_wire
+from repro.runtime.events import RoundEvent, PartialShipped, WorkerCrashed, to_wire
 from repro.runtime.netrt.transport import (
     Frame,
     FrameConn,
     FrameServer,
     PeerDead,
+    connect,
     resolve_dtype,
 )
 
@@ -59,18 +60,29 @@ class NodeDaemon:
 
     def __init__(self, node: str, listen: str = "127.0.0.1:0", *,
                  runtime: str = "inproc", agg_engine: str = "auto",
-                 capacity: float = 20.0, poll_interval: float = 0.02):
+                 capacity: float = 20.0, poll_interval: float = 0.02,
+                 compress: int = 0):
         self.node = node
         self.capacity = float(capacity)
         self.poll_interval = poll_interval
+        self.compress = int(compress)
         self.rt = make_runtime(runtime, agg_engine=agg_engine)
         self.server = FrameServer(listen)
         self.addr = self.server.addr
         self._controllers: List[FrameConn] = []
+        # node-top state: open root folds buffering their inputs until
+        # all `goal` partials arrived (controller `deliver` + peer
+        # `partial` frames race — the seq numbers fix the fold order),
+        # cached peer connections, and peer-shipped copies to reclaim
+        self._tops: Dict[str, Dict] = {}
+        self._peers: Dict[str, FrameConn] = {}
+        self._peer_landed: Set[str] = set()
         self._stop = False
         self._closed = False
         self.stats = {"frames": 0, "events_pushed": 0, "updates_landed": 0,
-                      "redelivered_keys": 0, "partials_served": 0}
+                      "redelivered_keys": 0, "partials_served": 0,
+                      "partials_shipped": 0, "ship_tx_bytes": 0,
+                      "partials_landed": 0, "ship_rx_bytes": 0}
 
     # ------------------------------------------------------------------
     def step(self, timeout: Optional[float] = None) -> None:
@@ -110,18 +122,110 @@ class NodeDaemon:
                     self.rt.quiesce()
                 except Exception:
                     pass
+                self._round_cleanup()
+
+    def _round_cleanup(self) -> None:
+        """Inter-round housekeeping for the node-top path: drop stale
+        root-fold buffers and reclaim peer-shipped partial copies (the
+        originals are discarded by their home's controller sweep; the
+        shipped copies are ours to delete)."""
+        self._tops.clear()
+        for key in list(self._peer_landed):
+            try:
+                self.rt.discard_update(key)
+            except Exception:
+                pass
+        self._peer_landed.clear()
+
+    # ------------------------------------------------------------------
+    # node-top: daemon→daemon partial shipping + ordered root folds
+    # ------------------------------------------------------------------
+    def _peer_conn(self, addr: str) -> FrameConn:
+        conn = self._peers.get(addr)
+        if conn is not None and conn.alive:
+            return conn
+        conn = connect(addr, timeout=5.0, peer=addr,
+                       compress=self.compress)
+        self._peers[addr] = conn
+        return conn
+
+    def _ship_partial(self, m: Dict) -> None:
+        """Send our sealed partial Σ c·u to the root node's daemon.
+        Raises on failure (translated below so the generic error reply
+        reaches the *controller*, never misread as a controller
+        death)."""
+        key = m["key"]
+        view = self.rt.get_partial(key)
+        arr = np.ascontiguousarray(view)
+        meta = {"agg_id": m["agg_id"], "key": key,
+                "weight": float(m["weight"]), "count": int(m["count"]),
+                "seq": int(m.get("seq", 0)), "round_id": int(m["round_id"]),
+                "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "src": self.node}
+        addr = m["peer"]
+        try:
+            try:
+                self._peer_conn(addr).send("partial", meta, blob=arr)
+            except PeerDead:
+                # a stale cached conn (root restarted): one fresh dial
+                self._peers.pop(addr, None)
+                self._peer_conn(addr).send("partial", meta, blob=arr)
+        except PeerDead as e:
+            self._peers.pop(addr, None)
+            raise RuntimeError(f"peer {addr} unreachable: {e}") from e
+        finally:
+            self.rt.release_partial(key)
+        self.stats["partials_shipped"] += 1
+        self.stats["ship_tx_bytes"] += arr.nbytes
+        self._push_event_obj(PartialShipped(
+            round_id=int(m["round_id"]), agg_id=m["agg_id"], key=key,
+            src=self.node, dst=m.get("dst", ""), nbytes=arr.nbytes))
+
+    def _top_in(self, agg_id: str, key: str, weight: float, count: int,
+                seq: int, round_id: int) -> None:
+        t = self._tops.setdefault(
+            agg_id, {"goal": None, "round_id": round_id, "buf": {}})
+        t["buf"][int(seq)] = (key, weight, count)
+        self._flush_top(agg_id)
+
+    def _flush_top(self, agg_id: str) -> None:
+        """All inputs at hand: fold them in seq order — arrival order
+        races (controller deliver vs peer ships) never reach the
+        engine, so the root fold is bit-identical wherever it runs."""
+        t = self._tops.get(agg_id)
+        if t is None or t["goal"] is None or len(t["buf"]) < t["goal"]:
+            return
+        del self._tops[agg_id]
+        try:
+            for seq in sorted(t["buf"]):
+                key, weight, count = t["buf"][seq]
+                self.rt.deliver_partial(agg_id, key, weight, count,
+                                        round_id=t["round_id"], seq=seq)
+        except Exception:
+            # the root fold is wedged (an input vanished mid-fold): it
+            # will never publish — surface its crash so the driver
+            # re-roots instead of waiting forever
+            self._push_event_obj(WorkerCrashed(
+                round_id=t["round_id"], agg_id=agg_id, worker=-1))
+            return
+        self._push_events()
 
     def _push_events(self) -> None:
         for ev in self.rt.poll_events(0.0):
-            self.stats["events_pushed"] += 1
-            payload = json.loads(to_wire(ev))
-            for conn in list(self._controllers):
-                if not conn.alive:
-                    continue  # server.poll emits (conn, None) next tick
-                try:
-                    conn.send("event", payload)
-                except PeerDead:
-                    pass  # ditto: the park-clean path runs via poll
+            self._push_event_obj(ev)
+
+    def _push_event_obj(self, ev: RoundEvent) -> None:
+        """Push one typed event to every controller (``to_wire`` JSON
+        riding an ``event`` frame)."""
+        self.stats["events_pushed"] += 1
+        payload = json.loads(to_wire(ev))
+        for conn in list(self._controllers):
+            if not conn.alive:
+                continue  # server.poll emits (conn, None) next tick
+            try:
+                conn.send("event", payload)
+            except PeerDead:
+                pass  # ditto: the park-clean path runs via poll
 
     # ------------------------------------------------------------------
     def _handle(self, conn: FrameConn, frame: Frame) -> None:
@@ -130,16 +234,35 @@ class NodeDaemon:
             if m.get("role", "controller") == "controller":
                 if conn not in self._controllers:
                     self._controllers.append(conn)
+            # mirror the controller's compression choice on our replies
+            conn.compress = int(m.get("compress", 0) or 0)
             conn.send("welcome", {
                 "node": self.node, "proto": PROTO_VERSION,
                 "capacity": self.capacity, "runtime": self.rt.name,
                 "pid": os.getpid(),
             })
         elif kind == "spawn":
+            agg_id = m["agg_id"]
+            if m.get("agg_kind") == "top":
+                # a root fold: inputs are buffered until all `goal`
+                # partials arrived, then folded in seq order
+                t = self._tops.setdefault(
+                    agg_id, {"goal": None, "round_id": int(m["round_id"]),
+                             "buf": {}})
+                t["goal"] = int(m["goal"])
+                t["round_id"] = int(m["round_id"])
             self.rt.spawn_aggregator(
                 m["agg_id"], goal=int(m["goal"]), n_elems=int(m["n_elems"]),
-                round_id=int(m["round_id"]))
+                round_id=int(m["round_id"]), kind=m.get("agg_kind", "mid"))
+            if m.get("agg_kind") == "top":
+                self._flush_top(agg_id)  # peer partials may have raced
         elif kind == "deliver":
+            if m.get("partial"):
+                # a resident sealed partial routed into the root fold
+                self._top_in(m["agg_id"], m["key"], float(m["weight"]),
+                             int(m.get("count", 0)), int(m.get("seq", 0)),
+                             int(m["round_id"]))
+                return
             key = m["key"]
             if frame.blob and not self.rt.update_alive(key):
                 # serialize-once boundary: the blob becomes a sealed
@@ -156,6 +279,33 @@ class NodeDaemon:
             self.rt.deliver(m["agg_id"], key, float(m["weight"]),
                             round_id=int(m["round_id"]))
             self._push_events()  # eager mids may have published already
+        elif kind == "ship_partial":
+            # daemon→daemon: send our sealed partial straight to the
+            # round's root node — the controller never carries it
+            self._ship_partial(m)
+        elif kind == "partial":
+            # a peer daemon shipped us a partial for our root fold.
+            # Failures must reach the CONTROLLER as a root crash — the
+            # generic error reply would go back on this write-only peer
+            # conn, which the shipper never reads, and a starved root
+            # fold would hang a deadline-less round forever.
+            key = m["key"]
+            try:
+                if frame.blob and not self.rt.update_alive(key):
+                    arr = np.frombuffer(
+                        frame.blob, dtype=resolve_dtype(m["dtype"]),
+                    ).reshape(m["shape"])
+                    self.rt.store.put(arr, key=key)
+                    self._peer_landed.add(key)  # reclaimed at quiesce
+                self.stats["partials_landed"] += 1
+                self.stats["ship_rx_bytes"] += len(frame.blob)
+                self._top_in(m["agg_id"], key, float(m["weight"]),
+                             int(m.get("count", 0)), int(m.get("seq", 0)),
+                             int(m["round_id"]))
+            except Exception:
+                self._push_event_obj(WorkerCrashed(
+                    round_id=int(m.get("round_id", 0)),
+                    agg_id=m.get("agg_id", ""), worker=-1))
         elif kind == "drain":
             self.rt.drain(m["agg_id"])
             self._push_events()
@@ -183,6 +333,7 @@ class NodeDaemon:
         elif kind == "quiesce":
             self._push_events()  # published partials reach the wire first
             self.rt.quiesce()
+            self._round_cleanup()
             conn.send("quiesced", {
                 "stats": {k: v for k, v in self.rt.stats.items()
                           if isinstance(v, (int, float))},
@@ -214,6 +365,9 @@ class NodeDaemon:
         if self._closed:
             return
         self._closed = True
+        for conn in self._peers.values():
+            conn.close()
+        self._peers.clear()
         self.server.close()
         self.rt.close()
 
@@ -221,7 +375,7 @@ class NodeDaemon:
 def spawn_local_daemon(node: str, *, runtime: str = "inproc",
                        agg_engine: str = "auto", capacity: float = 20.0,
                        listen: str = "127.0.0.1:0", timeout: float = 30.0,
-                       stdout=None):
+                       compress: int = 0, stdout=None):
     """Spawn a netd as a local child process and wait for its bound
     address (the port-file handshake).  Returns ``(Popen, addr)`` —
     the caller owns the process.  One helper so benches, tests, and
@@ -243,7 +397,7 @@ def spawn_local_daemon(node: str, *, runtime: str = "inproc",
         [sys.executable, "-m", "repro.runtime.netrt.netd",
          "--node", node, "--listen", listen, "--runtime", runtime,
          "--agg-engine", agg_engine, "--capacity", str(capacity),
-         "--port-file", pf],
+         "--compress", str(int(compress)), "--port-file", pf],
         env=env, stdout=stdout)
     deadline = time.perf_counter() + timeout
     try:
@@ -270,13 +424,16 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--agg-engine", default="auto")
     ap.add_argument("--capacity", type=float, default=20.0,
                     help="MC_i for the controller's placement model")
+    ap.add_argument("--compress", type=int, default=0,
+                    help="zlib level for outbound blobs (0 = off)")
     ap.add_argument("--port-file", default="",
                     help="write the bound address here (atomic rename)")
     args = ap.parse_args(argv)
 
     daemon = NodeDaemon(
         args.node, args.listen, runtime=args.runtime,
-        agg_engine=args.agg_engine, capacity=args.capacity)
+        agg_engine=args.agg_engine, capacity=args.capacity,
+        compress=args.compress)
     if args.port_file:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:

@@ -88,9 +88,13 @@ class RemoteRuntime(_WarmEngineMixin):
     def __init__(self, nodes: Iterable[str], *,
                  metrics: Optional[MetricsMap] = None,
                  agg_engine: Any = "auto",
-                 connect_timeout: float = 10.0):
+                 connect_timeout: float = 10.0,
+                 compress: Any = 0):
         self.metrics = metrics if metrics is not None else MetricsMap()
         self.agg_engine = agg_engine
+        # zlib level for outbound update/partial blobs; the hello meta
+        # carries it so the daemon compresses its replies too
+        self.compress = 6 if compress is True else int(compress or 0)
         self._engines: Dict[str, Any] = {}    # driver-side (top) engines
         self._staged: Dict[str, np.ndarray] = {}
         self._route: Dict[str, str] = {}      # agg_id → node name
@@ -110,8 +114,9 @@ class RemoteRuntime(_WarmEngineMixin):
     # connection management
     # ------------------------------------------------------------------
     def _attach(self, addr: str, timeout: float) -> None:
-        conn = connect(addr, timeout=timeout)
-        conn.send("hello", {"role": "controller", "proto": 1})
+        conn = connect(addr, timeout=timeout, compress=self.compress)
+        conn.send("hello", {"role": "controller", "proto": 1,
+                            "compress": self.compress})
         stash: List[Frame] = []
         w = conn.recv_expect(("welcome",), timeout, stash=stash).meta
         node = _Node(w["node"], addr, conn, float(w.get("capacity", 20.0)),
@@ -209,9 +214,11 @@ class RemoteRuntime(_WarmEngineMixin):
     # Runtime protocol
     # ------------------------------------------------------------------
     def spawn_aggregator(self, agg_id: str, *, goal: int, n_elems: int,
-                         round_id: int = 0) -> None:
+                         round_id: int = 0, kind: str = "mid") -> None:
+        # "agg_kind", not "kind": the frame codec owns the meta key
+        # "kind" (it is the frame type itself)
         meta = {"agg_id": agg_id, "goal": goal, "n_elems": n_elems,
-                "round_id": round_id}
+                "round_id": round_id, "agg_kind": kind}
         # each failed send tears one dead node down, so this walks the
         # survivors and terminates: _resolve raises NoLiveNodeError
         # once nobody is left
@@ -236,6 +243,53 @@ class RemoteRuntime(_WarmEngineMixin):
         if self._send(node, "deliver", meta, blob=flat):
             node.delivered.add(key)
             self._net_sidecar.on_send(flat.nbytes)
+
+    def deliver_partial(self, agg_id: str, key: str, weight: float,
+                        count: int, round_id: int = 0, seq: int = 0) -> None:
+        """Route a published partial into the node-side root fold.
+
+        A partial homed on the root node is delivered by key alone (its
+        bytes never move); one homed elsewhere triggers daemon→daemon
+        shipping — the home daemon dials the root and sends the sealed
+        Σ c·u directly, so the controller never carries it.  Any
+        failure surfaces as a :class:`WorkerCrashed` for the root fold,
+        which the driver answers by re-rooting."""
+        root = self._resolve(agg_id)
+        meta = {"agg_id": agg_id, "key": key, "weight": float(weight),
+                "count": int(count), "seq": int(seq),
+                "round_id": round_id, "partial": True}
+        home_name = self._partial_home.get(key)
+        home = self._nodes.get(home_name) if home_name else None
+        if home is None or not home.alive:
+            # lost between the driver's liveness filter and this send:
+            # the root fold can never complete — tell the driver now
+            self._local["synth_crashes"] += 1
+            self._pending.append(WorkerCrashed(
+                round_id=round_id, agg_id=agg_id, worker=-1))
+            return
+        if home_name == root.name:
+            # resident on the root already: 16-byte key, no payload.
+            # A send failure means the ROOT died — _lose_node already
+            # queued the root fold's WorkerCrashed (it is in _open).
+            self._send(root, "deliver", meta)
+            return
+        meta["peer"] = root.addr
+        meta["dst"] = root.name
+        if not self._send(home, "ship_partial", meta):
+            # the home died mid-ship: its teardown only covers subtrees
+            # routed *there* — the root fold is routed to the root, so
+            # surface its crash explicitly
+            self._local["synth_crashes"] += 1
+            self._pending.append(WorkerCrashed(
+                round_id=round_id, agg_id=agg_id, worker=-1))
+
+    def partial_alive(self, key: str) -> bool:
+        home = self._partial_home.get(key)
+        node = self._nodes.get(home) if home else None
+        return node is not None and node.alive
+
+    def partial_node(self, key: str) -> Optional[str]:
+        return self._partial_home.get(key)
 
     def drain(self, agg_id: str) -> None:
         name = self._route.get(agg_id)
@@ -306,6 +360,16 @@ class RemoteRuntime(_WarmEngineMixin):
                 self._local["synth_crashes"] += 1
                 return WorkerCrashed(round_id=rid, agg_id=agg_id,
                                      worker=-1, exitcode=None)
+            # a failed ship (home daemon couldn't read the partial or
+            # dial the root) starves the root fold of one input — it
+            # will never publish, so surface its crash; the driver
+            # re-roots on a survivor
+            if frame.meta.get("for") == "ship_partial" \
+                    and agg_id in self._open:
+                rid = self._open.pop(agg_id)
+                self._local["synth_crashes"] += 1
+                return WorkerCrashed(round_id=rid, agg_id=agg_id,
+                                     worker=-1, exitcode=None)
         return None  # stray pong / late reply: bookkeeping only
 
     def _note(self, node: _Node, ev: RoundEvent) -> None:
@@ -333,6 +397,9 @@ class RemoteRuntime(_WarmEngineMixin):
                     if ev is not None:
                         self._pending.append(ev)
                 node.stats = dict(reply.meta.get("stats", {}))
+                # daemon-level counters (ship_tx_bytes & co) ride along
+                # so bench_net can bound inter-node partial shipping
+                node.stats.update(reply.meta.get("daemon", {}))
                 node.workers = int(reply.meta.get("workers", 0))
             except PeerDead:
                 self._pending.extend(self._lose_node(node))

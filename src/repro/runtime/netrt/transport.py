@@ -12,7 +12,16 @@ Control fields ride the JSON body (``kind`` names the frame type; typed
 round events are carried verbatim as ``events.to_wire`` dicts under
 ``kind="event"``); payloads — serialized-once model updates and sealed
 partial sums — ride the blob, so a frame is decoded without ever
-copying the payload through a JSON string.
+copying the payload through a JSON string.  Because ``kind`` belongs
+to the codec, frame metas must not use it for their own fields (spawn
+frames carry ``agg_kind`` instead).
+
+Optional zlib compression (``FrameConn(compress=level)``): outbound
+blobs ≥ :data:`COMPRESS_MIN_BYTES` are compressed when that actually
+shrinks them — the ``_z`` meta key then carries the raw size, so any
+receiver can decode without negotiation; incompressible blobs ship
+raw.  ``tx_raw_by_kind``/``rx_raw_by_kind`` track pre-compression
+frame sizes next to the wire counters, making the win measurable.
 
 Failure model: every socket error, EOF, or handshake timeout surfaces
 as :class:`PeerDead`; callers translate that into a ``NodeLost`` event
@@ -29,8 +38,9 @@ import select
 import socket
 import struct
 import time
+import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -39,6 +49,8 @@ _HEADER = struct.Struct("!II")
 MAX_JSON_BYTES = 1 << 22
 MAX_BLOB_BYTES = 1 << 31
 _RECV_CHUNK = 1 << 16
+#: blobs below this never compress (zlib overhead dominates tiny frames)
+COMPRESS_MIN_BYTES = 512
 
 
 class PeerDead(ConnectionError):
@@ -93,7 +105,7 @@ class FrameConn:
     connection is closed and unusable."""
 
     def __init__(self, sock: socket.socket, peer: str = "?",
-                 send_timeout: float = 30.0):
+                 send_timeout: float = 30.0, compress: Any = 0):
         sock.setblocking(True)
         try:  # latency matters more than throughput for 64-byte frames
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -102,11 +114,20 @@ class FrameConn:
         self._sock: Optional[socket.socket] = sock
         self.peer = peer
         self.send_timeout = send_timeout
+        # zlib level for outbound blobs (0 = off).  Sender-only choice:
+        # the `_z` meta marker makes every receiver able to decode, so
+        # no negotiation is needed.  Incompressible blobs fall back to
+        # raw (the marker is only set when compression actually won).
+        self.compress = 6 if compress is True else int(compress or 0)
         self._rbuf = bytearray()
         self.tx_bytes = 0
         self.rx_bytes = 0
         self.tx_by_kind: Dict[str, int] = {}
         self.rx_by_kind: Dict[str, int] = {}
+        # pre-compression ("raw") frame sizes, per kind, both ways —
+        # wire minus raw is the measured compression win
+        self.tx_raw_by_kind: Dict[str, int] = {}
+        self.rx_raw_by_kind: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     def fileno(self) -> int:
@@ -138,9 +159,15 @@ class FrameConn:
             raise PeerDead(f"peer {self.peer} gone: already closed")
         body = dict(meta or {})
         body["kind"] = kind
-        js = json.dumps(body, separators=(",", ":")).encode("utf-8")
         mv = memoryview(blob).cast("B") if not isinstance(blob, bytes) \
             else blob
+        raw_blob = len(mv)
+        if self.compress and raw_blob >= COMPRESS_MIN_BYTES:
+            comp = zlib.compress(mv, self.compress)  # buffer proto: no copy
+            if len(comp) < raw_blob:
+                body["_z"] = raw_blob   # marker + uncompressed size
+                mv = comp
+        js = json.dumps(body, separators=(",", ":")).encode("utf-8")
         head = _HEADER.pack(len(js), len(mv))
         n = len(head) + len(js) + len(mv)
         try:
@@ -153,6 +180,8 @@ class FrameConn:
             raise self._dead(f"send failed ({e})") from e
         self.tx_bytes += n
         self.tx_by_kind[kind] = self.tx_by_kind.get(kind, 0) + n
+        raw_n = len(head) + len(js) + raw_blob
+        self.tx_raw_by_kind[kind] = self.tx_raw_by_kind.get(kind, 0) + raw_n
 
     # ------------------------------------------------------------------
     def _parse_one(self) -> Optional[Frame]:
@@ -170,6 +199,24 @@ class FrameConn:
         del buf[:total]
         kind = meta.pop("kind", "?")
         self.rx_by_kind[kind] = self.rx_by_kind.get(kind, 0) + total
+        raw_total = total
+        z = meta.pop("_z", None)
+        if z is not None:
+            z = int(z)
+            if z > MAX_BLOB_BYTES:
+                raise self._dead(f"oversized compressed blob ({z})")
+            try:
+                # bound the EXPANSION, not just the declared size — a
+                # frame lying about _z must not decompress to GBs
+                d = zlib.decompressobj()
+                blob = d.decompress(blob, z)
+                if d.unconsumed_tail or not d.eof or len(blob) != z:
+                    raise self._dead("compressed blob size mismatch")
+            except zlib.error as e:
+                raise self._dead(f"corrupt compressed blob ({e})") from e
+            raw_total = _HEADER.size + jlen + len(blob)
+        self.rx_raw_by_kind[kind] = \
+            self.rx_raw_by_kind.get(kind, 0) + raw_total
         return Frame(kind=kind, meta=meta, blob=blob)
 
     def recv(self, timeout: float = 0.0) -> Optional[Frame]:
@@ -301,8 +348,8 @@ class FrameServer:
 
 
 def connect(addr: str, *, timeout: float = 10.0,
-            retry_interval: float = 0.05, peer: Optional[str] = None
-            ) -> FrameConn:
+            retry_interval: float = 0.05, peer: Optional[str] = None,
+            compress: Any = 0) -> FrameConn:
     """Connect to a frame server, retrying until ``timeout`` — a
     controller may race its daemons' bind."""
     family, sockaddr = parse_addr(addr)
@@ -312,7 +359,7 @@ def connect(addr: str, *, timeout: float = 10.0,
         try:
             sock.settimeout(max(0.1, deadline - time.perf_counter()))
             sock.connect(sockaddr)
-            return FrameConn(sock, peer=peer or addr)
+            return FrameConn(sock, peer=peer or addr, compress=compress)
         except (ConnectionError, FileNotFoundError, socket.timeout,
                 OSError) as e:
             sock.close()

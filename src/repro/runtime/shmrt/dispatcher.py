@@ -237,6 +237,23 @@ class ShmRuntime:
                 f"update ring for {agg_id!r} blocked >30s (worker "
                 f"{w.idx} alive={w.proc.is_alive()})")
 
+    def dispatch_partial(self, agg_id: str, object_key: str, weight: float,
+                         count: int, round_id: int = 0) -> None:
+        """Route one published raw partial Σ c·u into a root-fold task.
+        The ring is FIFO, so the worker absorbs partials exactly in the
+        order they are dispatched — the caller fixes the fold order."""
+        w = self._route[agg_id]
+        ok = w.task_ring.push(Record(
+            kind=RecordKind.PARTIAL_IN, key=object_key, round_id=round_id,
+            num_samples=weight, a=int(count), ts=time.perf_counter(),
+        ).pack(), timeout=30.0)
+        if not ok:
+            if not w.proc.is_alive():
+                self._reap(w)
+            raise RuntimeError(
+                f"partial ring for {agg_id!r} blocked >30s (worker "
+                f"{w.idx} alive={w.proc.is_alive()})")
+
     def drain(self, agg_id: str) -> None:
         """Close out a straggler-shortened task: the worker publishes
         whatever it has folded."""

@@ -35,6 +35,9 @@ class RecordKind(IntEnum):
     ERROR = 8     # worker → dispatcher: dropped/failed record
     EMPTY = 9     # worker → dispatcher: task closed with nothing folded
                   #   (DRAIN before any update arrived)
+    PARTIAL_IN = 10  # dispatcher → worker: fold a published raw partial
+                  #   Σ c·u (root fold): key=partial object,
+                  #   num_samples=Σ weight, a=subtree update count
 
 
 @dataclass

@@ -61,10 +61,12 @@ def worker_main(widx: int, task_ring: SpscRing, result_ring: SpscRing,
 
     def publish(t: _OpenTask) -> str:
         key = engine.publish()
+        # a = updates folded end-to-end: equals t.folded for a mid,
+        # and the subtree total for a root task absorbing partials
         result_ring.push(Record(
             kind=RecordKind.PARTIAL, key=key, round_id=t.round_id,
             flags=t.seq, num_samples=t.state.weight,
-            ts=time.perf_counter(), a=t.folded, b=t.exec_ns,
+            ts=time.perf_counter(), a=t.state.count, b=t.exec_ns,
         ).pack(), timeout=5.0)
         return key
 
@@ -129,6 +131,30 @@ def worker_main(widx: int, task_ring: SpscRing, result_ring: SpscRing,
                 ).pack(), timeout=5.0)
                 close_task(task, None)
             task = None
+            continue
+
+        if rec.kind == RecordKind.PARTIAL_IN:
+            # root fold: absorb a published raw partial Σ c·u straight
+            # out of the store (zero-copy), in ring order — the
+            # dispatcher delivers in plan order, so the fold sequence
+            # is deterministic and bit-identical to the controller fold
+            if task is None:
+                result_ring.push(Record(
+                    kind=RecordKind.ERROR, key=rec.key,
+                ).pack(), timeout=5.0)
+                continue
+            t0 = time.perf_counter_ns()
+            view = store.get(rec.key)
+            task.state.absorb(np.asarray(view), rec.num_samples, int(rec.a))
+            del view  # drop the view before detaching the mapping
+            store.release(rec.key)
+            store.detach(rec.key)  # the dispatcher owns the segment
+            task.folded += 1
+            task.exec_ns += time.perf_counter_ns() - t0
+            if task.folded >= task.goal:
+                key = publish(task)
+                close_task(task, key)
+                task = None
             continue
 
         if rec.kind == RecordKind.UPDATE:

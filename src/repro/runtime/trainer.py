@@ -239,6 +239,7 @@ class FederatedTrainer:
             n_elems=self._flat_params_size(),
             top_node=plan.top_node,
             deadline_s=deadline_s,
+            fold_plan=plan.fold_plan,
         )
 
         # --- server applies the aggregated update -----------------------

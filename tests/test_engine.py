@@ -335,3 +335,57 @@ def test_accumulate_k_ref_path_bf16_wire():
     expect = sum(np.float32(w) * u.astype(np.float32)
                  for u, w in zip(wire, ws))
     np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block-size autotune (EngineConfig(block="auto"))
+# ---------------------------------------------------------------------------
+
+def test_autotune_block_picks_candidate_and_caches():
+    from repro.core import engine as engine_mod
+    from repro.core.engine import (EngineConfig, autotune_block_elems,
+                                   make_engine)
+
+    # tiny probe: the result must come from the candidate set and be
+    # cached for the rest of the process (keyed by the probe arguments:
+    # a caller constraining the candidates gets its own answer, never a
+    # tile outside its requested set)
+    engine_mod._AUTOTUNE_CACHE.clear()
+    try:
+        blk = autotune_block_elems(candidates=(8 * 1024, 32 * 1024),
+                                   n_elems=1 << 17, repeats=1)
+        assert blk in (8 * 1024, 32 * 1024)
+        # same arguments: answered from the cache, no re-probe
+        assert len(engine_mod._AUTOTUNE_CACHE) == 1
+        assert autotune_block_elems(candidates=(8 * 1024, 32 * 1024),
+                                    n_elems=1 << 17, repeats=1) == blk
+        assert len(engine_mod._AUTOTUNE_CACHE) == 1
+        # different candidate set: a fresh probe honoring it
+        assert autotune_block_elems(candidates=(123,), n_elems=1 << 14,
+                                    repeats=1) == 123
+        eng = make_engine(EngineConfig(name="blocked", block="auto"))
+        assert eng.name == "blocked"
+        assert eng.block_elems in engine_mod._AUTOTUNE_CANDIDATES
+        eng2 = make_engine("blocked", block_elems="auto")
+        assert eng2.block_elems == eng.block_elems  # default-key cache
+    finally:
+        engine_mod._AUTOTUNE_CACHE.clear()
+
+
+def test_engine_config_explicit_block_and_autotuned_bits_match():
+    from repro.core.engine import EngineConfig, make_engine
+
+    rng = np.random.default_rng(3)
+    ups = [rng.normal(size=5000).astype(np.float32) for _ in range(4)]
+    ws = [1.0, 2.0, 0.5, 3.0]
+
+    def run(engine):
+        acc = engine.begin(5000)
+        acc = engine.fold_many(acc, ups, ws)
+        return np.asarray(acc)
+
+    base = run(make_engine("blocked"))
+    cfgd = run(make_engine(EngineConfig(name="blocked", block=16 * 1024)))
+    # tile size changes the blocking, never the bits (per-element fold
+    # order within a block is element-independent)
+    np.testing.assert_array_equal(base, cfgd)

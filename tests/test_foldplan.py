@@ -1,0 +1,348 @@
+"""FoldPlan: plan-driven aggregation topology.
+
+The explicit fold tree (core/placement.py) interpreted by RoundDriver:
+controller-top (the legacy fold, bit for bit), worker-top (the top
+aggregator is itself a runtime aggregator — a parked worker process
+under shmproc), and node-top (the root lives on a worker node, partials
+ship daemon→daemon, only the final folded Σc·u returns).  The
+acceptance claims: all three topologies are bit-identical across
+multi-round runs, node-top return traffic is ~1 × model, and a
+SIGKILLed root node re-roots the round on a survivor.
+"""
+import os
+import signal
+import subprocess
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import fedavg_oracle
+from repro.core.placement import (
+    FoldPlan,
+    FoldSite,
+    NodeState,
+    build_fold_plan,
+    choose_top_node,
+)
+from repro.runtime.driver import InProcRuntime, RoundDriver
+from repro.runtime.events import NodeLost, PartialShipped, TopFolded
+
+
+# ---------------------------------------------------------------------------
+# plan construction + wire round-trip
+# ---------------------------------------------------------------------------
+
+ASSIGNMENT = {"nodeA": [0, 2, 4], "nodeB": [1, 3, 5]}
+
+
+def test_build_fold_plan_structure():
+    plan = build_fold_plan(ASSIGNMENT, top_node="nodeA", topology="node")
+    assert plan.root == "top@nodeA"
+    assert plan.topology == "node"
+    root = plan.site(plan.root)
+    assert root.node == "nodeA" and root.goal == 2
+    assert root.children == ("mid@nodeA", "mid@nodeB")
+    mids = {s.agg_id: s for s in plan.mids}
+    assert mids["mid@nodeA"].goal == 3 and mids["mid@nodeA"].tier == "worker"
+    assert mids["mid@nodeB"].goal == 3
+
+
+def test_build_fold_plan_empty_and_bad_topology():
+    assert build_fold_plan({}) == FoldPlan()
+    assert build_fold_plan({"n": []}) == FoldPlan()
+    with pytest.raises(ValueError, match="topology"):
+        build_fold_plan(ASSIGNMENT, topology="cloud")
+
+
+def test_build_fold_plan_root_defaults_to_busiest():
+    plan = build_fold_plan({"a": [0], "b": [1, 2, 3]}, topology="worker")
+    assert plan.site(plan.root).node == "b"
+    # a top_node outside the assignment falls back to the busiest too
+    plan2 = build_fold_plan({"a": [0], "b": [1, 2]}, top_node="ghost")
+    assert plan2.site(plan2.root).node == "b"
+
+
+def test_fold_plan_wire_roundtrip():
+    plan = build_fold_plan(ASSIGNMENT, top_node="nodeB", topology="worker")
+    raw = plan.to_wire()
+    assert isinstance(raw, bytes)
+    back = FoldPlan.from_wire(raw)
+    assert back == plan
+    assert FoldPlan.from_wire(raw.decode()) == plan  # str transport too
+    with pytest.raises(ValueError, match="FoldPlan"):
+        FoldPlan.from_wire(b'{"plan":"NotAPlan"}')
+
+
+def test_choose_top_node_rc_tiebreak():
+    nodes = {
+        "a": NodeState(node="a", max_capacity=10.0),
+        "b": NodeState(node="b", max_capacity=30.0),
+    }
+    # equal update counts: the larger residual capacity wins
+    assert choose_top_node(nodes, {"a": [0], "b": [1]}) == "b"
+    # update count still dominates RC
+    assert choose_top_node(nodes, {"a": [0, 2], "b": [1]}) == "a"
+
+
+# ---------------------------------------------------------------------------
+# driven rounds per topology
+# ---------------------------------------------------------------------------
+
+def _mk_updates(n_updates=6, n_elems=4096, seed=0):
+    rng = np.random.default_rng(seed)
+    ups = [rng.normal(size=n_elems).astype(np.float32)
+           for _ in range(n_updates)]
+    ws = [float(1 + i % 3) for i in range(n_updates)]
+    return ups, ws
+
+
+def _drive(drv, ups, ws, n_elems, round_id, plan):
+    def updates():
+        for i, (u, w) in enumerate(zip(ups, ws)):
+            yield ("nodeA" if i % 2 == 0 else "nodeB"), f"c{i}", u, w
+
+    return drv.run_round(round_id=round_id, assignment=ASSIGNMENT,
+                         updates=updates(), goal=len(ups), n_elems=n_elems,
+                         fold_plan=plan)
+
+
+def _inproc_refs(ups, ws, n_elems, rounds):
+    plan = build_fold_plan(ASSIGNMENT, top_node="nodeA",
+                           topology="controller")
+    rt = InProcRuntime()
+    drv = RoundDriver(rt)
+    refs = [_drive(drv, ups, ws, n_elems, r, plan) for r in range(rounds)]
+    rt.close()
+    return refs
+
+
+def test_worker_top_inproc_bitexact_vs_controller_top():
+    """The plan's root as a runtime aggregator (worker tier) folds the
+    exact same bits as the controller-side fold."""
+    N = 4096
+    ups, ws = _mk_updates(6, N)
+    refs = _inproc_refs(ups, ws, N, 2)
+
+    rt = InProcRuntime()
+    drv = RoundDriver(rt)
+    events = []
+    drv.on(TopFolded, events.append)
+    plan = build_fold_plan(ASSIGNMENT, top_node="nodeA", topology="worker")
+    for r in range(2):
+        out = _drive(drv, ups, ws, N, r, plan)
+        assert out.fold_tier == "worker" and out.root_node == "nodeA"
+        assert out.count == 6 and out.weight == refs[r].weight
+        np.testing.assert_array_equal(out.delta, refs[r].delta)
+    rt.close()
+    assert [e.tier for e in events] == ["worker", "worker"]
+    # the controller fold also announces itself
+    assert refs[0].fold_tier == "controller"
+
+
+@pytest.mark.slow
+def test_worker_top_shmproc_bitexact_vs_controller_top():
+    """shmrt middle-tier option: the top aggregator is a parked worker
+    process, not the dispatcher — and still bit-identical."""
+    if not os.path.isdir("/dev/shm"):
+        pytest.skip("POSIX shared memory required")
+    from repro.runtime.driver import ShmProcRuntime
+
+    N = 4096
+    ups, ws = _mk_updates(6, N)
+    refs = _inproc_refs(ups, ws, N, 2)
+
+    rt = ShmProcRuntime()
+    try:
+        drv = RoundDriver(rt)
+        plan = build_fold_plan(ASSIGNMENT, top_node="nodeA",
+                               topology="worker")
+        for r in range(2):
+            out = _drive(drv, ups, ws, N, r, plan)
+            assert out.fold_tier == "worker"
+            assert out.count == 6
+            np.testing.assert_array_equal(out.delta, refs[r].delta)
+            # the top fold ran in a worker process, not this one
+            assert out.workers >= 1
+    finally:
+        rt.close()
+
+
+# ---------------------------------------------------------------------------
+# node-top over real daemons
+# ---------------------------------------------------------------------------
+
+def _spawn_fleet(runtime="inproc"):
+    from repro.runtime.netrt import spawn_local_daemon
+
+    procs, addrs = [], []
+    for name in ("nodeA", "nodeB"):
+        p, a = spawn_local_daemon(name, runtime=runtime,
+                                  stdout=subprocess.DEVNULL)
+        procs.append(p)
+        addrs.append(a)
+    return procs, addrs
+
+
+def _kill_fleet(procs):
+    for p in procs:
+        if p.poll() is None:
+            p.terminate()
+    for p in procs:
+        try:
+            p.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            p.kill()
+
+
+@pytest.mark.slow
+def test_node_top_two_daemons_bitexact_and_return_traffic():
+    """THE node-top acceptance scenario: the root fold runs on nodeA's
+    daemon, nodeB ships its sealed partial daemon→daemon, the
+    controller fetches only the final folded Σc·u — return traffic
+    ≤ 1 × model × 1.1 per round — and params are bit-identical to the
+    single-node inproc tree over 3 rounds."""
+    from repro.runtime.netrt import RemoteRuntime
+
+    N = 4096
+    ups, ws = _mk_updates(6, N)
+    refs = _inproc_refs(ups, ws, N, 3)
+    plan = build_fold_plan(ASSIGNMENT, top_node="nodeA", topology="node")
+
+    procs, addrs = _spawn_fleet()
+    try:
+        rt = RemoteRuntime(addrs)
+        drv = RoundDriver(rt)
+        shipped, folded = [], []
+        drv.on(PartialShipped, shipped.append)
+        drv.on(TopFolded, folded.append)
+        for r in range(3):
+            out = _drive(drv, ups, ws, N, r, plan)
+            assert out.fold_tier == "node" and out.root_node == "nodeA"
+            assert out.count == 6 and out.crashes == 0
+            np.testing.assert_array_equal(out.delta, refs[r].delta)
+        # return traffic: one model-size object per ROUND total (from
+        # the root only), not one per node
+        wire = rt.wire_stats()
+        model_bytes = 4 * N
+        assert wire["nodeA"]["rx_by_kind"]["object"] <= \
+            3 * model_bytes * 1.1
+        assert wire["nodeB"]["rx_by_kind"].get("object", 0) == 0
+        # nodeB's partial went daemon→daemon, once per round
+        assert [(e.src, e.dst) for e in shipped] == \
+            [("nodeB", "nodeA")] * 3
+        assert all(e.nbytes == model_bytes for e in shipped)
+        assert [(e.node, e.tier) for e in folded] == [("nodeA", "node")] * 3
+        # nothing in-flight leaks at rest
+        assert not rt._staged and not rt._partial_home
+        rt.shutdown_nodes()
+        rt.close()
+    finally:
+        _kill_fleet(procs)
+
+
+@pytest.mark.slow
+def test_sigkilled_root_node_reroots_on_survivor():
+    """Acceptance: SIGKILL the ROOT node as the fold phase begins — the
+    driver re-roots the round on the survivor (which re-collects the
+    dead node's subtree from staged keys) and still reaches the full
+    goal."""
+    from repro.runtime.netrt import RemoteRuntime
+
+    N = 2048
+    ups, ws = _mk_updates(6, N, seed=1)
+    plan = build_fold_plan(ASSIGNMENT, top_node="nodeA", topology="node")
+
+    procs, addrs = _spawn_fleet()
+    try:
+        rt = RemoteRuntime(addrs)
+        drv = RoundDriver(rt)
+        lost, folded = [], []
+        drv.on(NodeLost, lost.append)
+        drv.on(TopFolded, folded.append)
+
+        orig = rt.deliver_partial
+
+        def killing_deliver(agg_id, key, weight, count, round_id=0, seq=0):
+            # the first root-fold input: take the root down right now
+            if procs[0].poll() is None:
+                os.kill(procs[0].pid, signal.SIGKILL)
+                procs[0].wait()
+                time.sleep(0.05)
+            return orig(agg_id, key, weight, count, round_id=round_id,
+                        seq=seq)
+
+        rt.deliver_partial = killing_deliver
+        out = _drive(drv, ups, ws, N, 0, plan)
+        rt.deliver_partial = orig
+
+        assert out.count == 6                       # FULL goal
+        assert out.fold_tier == "node"
+        assert out.root_node == "nodeB"             # re-rooted
+        assert out.crashes >= 1 and out.redispatched >= 1
+        assert [e.node for e in lost] == ["nodeA"]
+        assert folded and folded[-1].node == "nodeB"
+        np.testing.assert_allclose(out.delta, fedavg_oracle(ups, ws),
+                                   rtol=1e-5, atol=1e-6)
+        # dead-peer teardown + end-of-round sweep left nothing behind
+        assert not rt._staged and not rt._partial_home
+        rt.close()
+    finally:
+        _kill_fleet(procs)
+
+
+@pytest.mark.slow
+def test_session_node_top_matches_controller_top_params():
+    """Session-level: the same rounds under topology='node' (2 daemons)
+    and topology='controller' produce bit-identical params — the
+    topology changes where bytes move, never what they say."""
+    jax = pytest.importorskip("jax")
+    from repro.api import Session
+    from repro.configs.resnet import RESNET18
+    from repro.core import ClientInfo, RoundConfig
+    from repro.data import (build_client_datasets, dirichlet_partition,
+                            synthetic_femnist)
+    from repro.models import build_resnet
+    from repro.runtime import ClientRuntime
+
+    model = build_resnet(RESNET18.reduced())
+    params = model.init(jax.random.PRNGKey(0))
+    imgs, labels = synthetic_femnist(120, num_classes=10, seed=0)
+    shards = dirichlet_partition(labels, 8, alpha=0.5)
+
+    def clients():
+        return [ClientRuntime(ClientInfo(d.client_id, d.num_samples), d)
+                for d in build_client_datasets(imgs, labels, shards)]
+
+    def rc(topology):
+        return RoundConfig(aggregation_goal=4, over_provision=1.5,
+                           placement_policy="locality", topology=topology)
+
+    procs, addrs = _spawn_fleet()
+    try:
+        with Session.open(model, params, clients(), nodes=list(addrs),
+                          round_cfg=rc("node")) as s:
+            roots = []
+            s.on(TopFolded, lambda ev: roots.append((ev.node, ev.tier)))
+            for _ in range(2):
+                s.run_round(client_lr=0.05)
+            node_params = s.params
+            assert all(t == "node" for _, t in roots) and len(roots) == 2
+            side = s.metrics()["sidecar"]
+            assert side.get("net/rx_bytes", 0) > 0
+    finally:
+        _kill_fleet(procs)
+
+    from repro.core import NodeState as NS
+    with Session.open(
+            model, params, clients(),
+            nodes={"nodeA": NS(node="nodeA", max_capacity=20.0),
+                   "nodeB": NS(node="nodeB", max_capacity=20.0)},
+            round_cfg=rc("controller")) as s2:
+        for _ in range(2):
+            s2.run_round(client_lr=0.05)
+        ref_params = s2.params
+
+    for a, b in zip(jax.tree.leaves(node_params),
+                    jax.tree.leaves(ref_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

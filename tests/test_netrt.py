@@ -569,3 +569,64 @@ def test_node_death_between_publish_and_fetch_aborts_retriable(
     np.testing.assert_allclose(out.delta, fedavg_oracle(ups, ws),
                                rtol=1e-5, atol=1e-6)
     rt.close()
+
+
+# ---------------------------------------------------------------------------
+# wire compression (FrameConn(compress=...))
+# ---------------------------------------------------------------------------
+
+def test_compressed_frame_roundtrip_and_counters():
+    a, b = _pair()
+    a.compress = 6
+    payload = np.tile(np.arange(256, dtype=np.float32), 64)  # compressible
+    a.send("deliver", {"agg_id": "mid@n0", "weight": 1.0}, blob=payload)
+    f = b.recv(timeout=2.0)
+    np.testing.assert_array_equal(np.frombuffer(f.blob, np.float32), payload)
+    assert "_z" not in f.meta            # the marker never leaks upward
+    # the wire carried far fewer bytes than the raw frame
+    assert a.tx_by_kind["deliver"] < a.tx_raw_by_kind["deliver"] / 2
+    assert b.rx_raw_by_kind["deliver"] == a.tx_raw_by_kind["deliver"]
+    assert b.rx_by_kind["deliver"] == a.tx_by_kind["deliver"]
+    a.close(), b.close()
+
+
+def test_compression_falls_back_to_raw():
+    a, b = _pair()
+    a.compress = 6
+    # incompressible blob: sent raw (no size win), decoded unchanged
+    rnd = np.random.default_rng(0).integers(0, 256, 4096) \
+        .astype(np.uint8).tobytes()
+    a.send("x", {}, blob=rnd)
+    assert b.recv(timeout=2.0).blob == rnd
+    assert a.tx_by_kind["x"] == a.tx_raw_by_kind["x"]
+    # tiny blobs below the threshold are never compressed
+    a.send("y", {}, blob=b"abc")
+    assert b.recv(timeout=2.0).blob == b"abc"
+    a.close(), b.close()
+
+
+def test_compressed_remote_round_bitexact(two_inproc_daemons):
+    """End-to-end with compress on: the daemons decode the compressed
+    update blobs, the round's delta is bit-identical to the
+    uncompressed in-proc reference, and the update traffic measurably
+    shrank (float32 model weights compress)."""
+    _, addrs = two_inproc_daemons
+    N = 4096
+    # compressible updates (real weights compress less than this, but
+    # the transport must win when the payload allows it)
+    ups = [np.tile(np.float32(i + 1), N) for i in range(4)]
+    ws = [1.0, 2.0, 1.0, 3.0]
+
+    in_rt = InProcRuntime()
+    ref = _drive(RoundDriver(in_rt), ["nodeA", "nodeB"], ups, ws, N, 0)
+    in_rt.close()
+
+    rt = RemoteRuntime(addrs, compress=6)
+    out = _drive(RoundDriver(rt), ["nodeA", "nodeB"], ups, ws, N, 0)
+    np.testing.assert_array_equal(out.delta, ref.delta)
+    wire = rt.wire_stats()
+    rt.close()
+    total_tx = sum(v["tx_bytes"] for v in wire.values())
+    # 4 updates × 16 KiB raw: with compression the deliver path must
+    # ship far less than the raw payload bytes
+    assert total_tx < 4 * 4 * N / 2

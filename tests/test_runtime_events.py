@@ -25,9 +25,11 @@ from repro.runtime.events import (
     NodeJoined,
     NodeLost,
     PartialReady,
+    PartialShipped,
     RoundDeadline,
     RoundEvent,
     ScaleDecision,
+    TopFolded,
     UpdateArrived,
     WorkerCrashed,
     from_wire,
@@ -45,6 +47,10 @@ _SAMPLES = [
                   key="deadbeef" * 2, weight=12.5),
     PartialReady(round_id=4, agg_id="mid@n0", key="ab" * 8, weight=7.0,
                  count=3, exec_s=0.125, worker=2),
+    PartialShipped(round_id=4, agg_id="top@n1", key="cd" * 8, src="n0",
+                   dst="n1", nbytes=4096),
+    TopFolded(round_id=4, agg_id="top@n1", node="n1", tier="node",
+              count=8, weight=21.0),
     GoalReached(round_id=5, goal=8, accepted=8),
     WorkerCrashed(round_id=6, agg_id="mid@n2", worker=1, exitcode=-9),
     NodeJoined(round_id=None, node="n9", capacity=25.0),
