@@ -45,9 +45,11 @@ SLACK = 1.1
 
 
 def _net_round(drv, rt, nodes: List[str], ups, ws, N: int, round_id: int,
-               topology: str = "controller"
+               topology: str = "controller", kill=None
                ) -> Tuple[np.ndarray, float, float]:
-    """One driven cross-node round; returns (delta, wall_s, disp_s)."""
+    """One driven cross-node round; returns (delta, wall_s, disp_s).
+    ``kill=(idx, fn)`` calls ``fn`` right after update ``idx`` is
+    delivered — the recovery row's mid-round daemon restart."""
     from repro.core.placement import build_fold_plan
 
     W = len(ups)
@@ -68,6 +70,8 @@ def _net_round(drv, rt, nodes: List[str], ups, ws, N: int, round_id: int,
     def updates():
         for i, (u, c) in enumerate(zip(flat_ups, flat_ws)):
             yield flat_nodes[i], f"c{i}", u, c
+            if kill is not None and i == kill[0]:
+                kill[1]()
 
     # instrument deliver to get per-dispatch latency without new code
     orig = rt.deliver
@@ -162,6 +166,40 @@ def run(fast: bool = True) -> List[Dict]:
             nt_marks.append(rt.wire_stats())
         rt.quiesce()                       # flush the last round's ships
         ship_mb = (rt.stats.get("ship_tx_bytes", 0) - ship0) / n_warm / 1e6
+
+        # --- recovery: SIGKILL the non-root daemon mid-round, respawn
+        # it on the same port under its old name.  The round must still
+        # land bit-exact (staged keys re-dispatch to the survivor) and
+        # the restarted daemon is re-adopted — epoch bump — in time to
+        # serve the following round.  bitexact gated FATAL by run.py. ---
+        def _restart_bn1():
+            procs[1].kill()
+            procs[1].wait(timeout=10)
+            p2, _ = spawn_local_daemon(nodes[1], runtime=node_runtime,
+                                       listen=addrs[1],
+                                       stdout=subprocess.DEVNULL)
+            procs[1] = p2
+
+        t_rec0 = time.perf_counter()
+        d_rec, wall_rec, _ = _net_round(
+            drv, rt, nodes, ups, ws, N, round_id=2 + 2 * n_warm,
+            kill=(W * G // 2, _restart_bn1))
+        # the crash round re-dispatches the dead subtree into the
+        # survivor's accumulator: same sum, different fold order — so
+        # numerically equivalent, not bit-identical
+        rec_close = int(np.allclose(d_rec, ref, rtol=1e-5, atol=1e-6))
+        # bounded wait for re-adoption, then one clean post-restart
+        # round: THAT one must be bit-exact again — any leaked residency
+        # or partial bookkeeping from the dead epoch would break it
+        ra_deadline = time.perf_counter() + 15.0
+        while (not rt.try_readopt(force=True)
+               and time.perf_counter() < ra_deadline):
+            time.sleep(0.1)
+        readopt_s = time.perf_counter() - t_rec0
+        d_post, wall_post, _ = _net_round(
+            drv, rt, nodes, ups, ws, N, round_id=3 + 2 * n_warm)
+        bit_rec = int(np.array_equal(d_post, ref)) & rec_close
+        readopted = sum(1 for n in rt._nodes.values() if n.alive)
     finally:
         if rt is not None:
             try:
@@ -239,5 +277,21 @@ def run(fast: bool = True) -> List[Dict]:
                     f"model_mb={model_mb:.2f};"
                     f"ctrltop_over_nodetop="
                     f"{np.mean(walls) / np.mean(nt_walls):.2f}x"),
+    })
+
+    # recovery row: the survivability cost — one mid-round SIGKILL +
+    # same-name restart vs a clean warm round, and how long until the
+    # fleet is whole again (re-adoption latency incl. python startup).
+    rows.append({
+        "bench": "net",
+        "case": f"net_{N_NODES}node_recovery",
+        "us_per_call": wall_rec * 1e6,
+        "derived": (f"nodes={N_NODES};bitexact={bit_rec};"
+                    f"rec_close={rec_close};"
+                    f"alive_after={readopted};"
+                    f"readopt_s={readopt_s:.2f};"
+                    f"post_restart_round_us={wall_post * 1e6:.0f};"
+                    f"recovery_over_warm="
+                    f"{wall_rec / np.mean(walls):.2f}x"),
     })
     return rows

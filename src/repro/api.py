@@ -153,15 +153,22 @@ class Session:
         return self._trainer.run_round(**kwargs)
 
     def submit_update(self, client_id: str, update: Any,
-                      weight: float = 1.0) -> None:
+                      weight: float = 1.0, *,
+                      submission_id: Optional[str] = None,
+                      round_id: Optional[int] = None) -> bool:
         """Inject an externally-computed model update (a flat float32
         vector or a params-shaped pytree delta); it takes a cohort slot
-        in the next round."""
+        in the next round.  Pass a ``submission_id`` to make retries
+        idempotent (duplicates return ``False`` without queueing) and a
+        ``round_id`` to refuse submissions aimed at an already-finished
+        round.  Returns ``True`` when the update was queued."""
         if isinstance(update, np.ndarray) and update.ndim == 1:
             flat = update
         else:
             flat, _, _ = _flatten_tree(update)
-        self._trainer.submit_update(client_id, flat, weight)
+        return self._trainer.submit_update(
+            client_id, flat, weight,
+            submission_id=submission_id, round_id=round_id)
 
     def metrics(self) -> Dict[str, Any]:
         """Snapshot of the job: per-round records, model version, the
@@ -176,6 +183,7 @@ class Session:
                         (owner, metric), (total, _n)
                         in tr.metrics.snapshot().items()},
         }
+        out["ingress"] = dict(tr.ingress)
         if tr._driver is not None:
             out["driver"] = dict(tr._driver.stats)
         return out
@@ -240,10 +248,14 @@ class Session:
             flat = np.frombuffer(
                 frame.blob, dtype=resolve_dtype(frame.meta["dtype"]),
             ).reshape(frame.meta["shape"])
-            self.submit_update(frame.meta["client_id"], flat,
-                               weight=frame.meta.get("weight", 1.0))
+            accepted = self.submit_update(
+                frame.meta["client_id"], flat,
+                weight=frame.meta.get("weight", 1.0),
+                submission_id=frame.meta.get("submission_id"),
+                round_id=frame.meta.get("round_id"))
             conn.send("ack", {"client_id": frame.meta["client_id"],
-                              "queued": len(self._trainer._external)})
+                              "queued": len(self._trainer._external),
+                              "duplicate": not accepted})
         else:
             conn.send("error", {"msg": f"unknown frame {frame.kind!r}"})
 

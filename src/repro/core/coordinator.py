@@ -210,11 +210,19 @@ class Coordinator:
         E_{i,t} from the measured fold time, k_{i,t} from the folded
         count — so multi-node placement learns per-node speed from the
         same events that ride the wire."""
-        from repro.runtime.events import NodeJoined, NodeLost, PartialReady
+        from repro.runtime.events import (NodeJoined, NodeLost,
+                                          NodeRejoined, PartialReady)
 
         if isinstance(event, NodeJoined):
             self.nodes[event.node] = NodeState(
                 node=event.node, max_capacity=event.capacity or 20.0)
+        elif isinstance(event, NodeRejoined):
+            # a restarted daemon re-adopted under its old name: put it
+            # back in the RC capacity model iff NodeLost removed it
+            # (same-epoch re-dials never lost capacity state)
+            if event.node not in self.nodes:
+                self.nodes[event.node] = NodeState(
+                    node=event.node, max_capacity=event.capacity or 20.0)
         elif isinstance(event, NodeLost):
             self.nodes.pop(event.node, None)
             for agg_id, inst in list(self.pool.instances.items()):

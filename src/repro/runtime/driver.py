@@ -64,6 +64,7 @@ from repro.core.sidecar import EventSidecar, MetricsMap
 from repro.runtime.events import (
     GoalReached,
     PartialReady,
+    PartialShipped,
     RoundDeadline,
     RoundEvent,
     TopFolded,
@@ -402,6 +403,14 @@ class RoundOutcome:
     dispatched: Dict[str, int] = field(default_factory=dict)  # node → n
     fold_tier: str = "controller"          # where the root fold ran
     root_node: str = ""                    # which node rooted the round
+    # updates the dispatch loop PULLED from the cohort generator but
+    # never delivered (deadline expired mid-cohort, subtree given up,
+    # node already full).  Pulling IS the client's training — dropping
+    # these on the floor silently loses externally submitted updates,
+    # so the trainer requeues its externals from here (the locally
+    # trained ones are regenerable and stay dropped, as before).
+    skipped: List[Tuple[str, str, np.ndarray, float]] = \
+        field(default_factory=list)
 
 
 @dataclass
@@ -466,8 +475,13 @@ class RoundDriver:
         """Route one event through the ordering guards and handlers.
         Returns ``False`` when a guard dropped it."""
         rid = event.round_id
-        if rid is not None and rid < self._next_round:
-            # leftovers from a finished round: drop, whoever sent them
+        if rid is not None and rid < self._next_round \
+                and not isinstance(event, PartialShipped):
+            # leftovers from a finished round: drop, whoever sent them.
+            # PartialShipped is exempt: it is pure telemetry (mutates
+            # no round state) pushed async by a *remote* daemon, so it
+            # routinely loses the race with its own round's close-out —
+            # dropping it would make observed ship counts flap
             self.stats["stale_dropped"] += 1
             return False
         if isinstance(event, RoundDeadline) and self._goal_reached \
@@ -617,12 +631,18 @@ class RoundDriver:
         # --- DISPATCH: pump updates until the aggregation goal ---------
         for node, client_id, flat, weight in updates:
             if deadline is not None and time.perf_counter() > deadline:
-                fire_deadline()  # budget expired mid-cohort: stop pumping
+                # budget expired mid-cohort: stop pumping — but the
+                # update already pulled from the generator is real
+                # work; record it so the owner can requeue it
+                out.skipped.append((node, client_id, flat, weight))
+                fire_deadline()
                 break
             agg_id = mid_ids.get(node)
             if (agg_id is None or agg_id in st.lost
                     or dispatched[node] >= planned[node]):
-                continue  # nothing planned / subtree given up / node full
+                # nothing planned / subtree given up / node full
+                out.skipped.append((node, client_id, flat, weight))
+                continue
             key = rt.put_update(flat)
             rt.deliver(agg_id, key, weight, round_id=round_id)
             sent[agg_id].append((key, weight))

@@ -29,6 +29,7 @@ Catalog (see runtime/README.md for the full state machine):
   ``WorkerCrashed``   an aggregator worker died mid-task (shmproc)
   ``NodeJoined``      a worker node joined the cluster
   ``NodeLost``        a worker node left / was lost
+  ``NodeRejoined``    a restarted daemon was re-adopted (epoch bump)
   ``RoundDeadline``   the round's wall-clock budget expired
   ``ScaleDecision``   the elastic controller re-sized the hierarchy
 """
@@ -129,6 +130,19 @@ class NodeLost(RoundEvent):
 
 
 @dataclass(frozen=True)
+class NodeRejoined(RoundEvent):
+    """A daemon restarted under its old node name was re-adopted: the
+    welcome handshake's epoch counter bumped, the dead epoch's
+    residency/partial bookkeeping is gone, and the node is placeable
+    again (the coordinator re-enters it into the RC capacity model)."""
+
+    node: str = ""
+    epoch: int = 0         # the NEW epoch (the daemon's start stamp)
+    old_epoch: int = 0     # what the controller had recorded
+    capacity: float = 0.0
+
+
+@dataclass(frozen=True)
 class RoundDeadline(RoundEvent):
     """The round's wall-clock budget expired.  Fired at most once per
     round, and ignored if the goal was already reached."""
@@ -151,8 +165,8 @@ EVENT_TYPES: Dict[str, Type[RoundEvent]] = {
     cls.__name__: cls
     for cls in (
         UpdateArrived, PartialReady, PartialShipped, TopFolded,
-        GoalReached, WorkerCrashed, NodeJoined, NodeLost, RoundDeadline,
-        ScaleDecision,
+        GoalReached, WorkerCrashed, NodeJoined, NodeLost, NodeRejoined,
+        RoundDeadline, ScaleDecision,
     )
 }
 

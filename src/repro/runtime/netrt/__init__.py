@@ -9,12 +9,14 @@ so the unchanged ``RoundDriver`` drives cross-node hierarchical
 rounds.  See README.md in this package for the frame format, the
 handshake, and the failure model.
 """
+from repro.runtime.netrt.faults import FaultPlan
 from repro.runtime.netrt.remote import (
     NoLiveNodeError,
     RemoteRuntime,
     push_update,
 )
 from repro.runtime.netrt.transport import (
+    Backoff,
     Frame,
     FrameConn,
     FrameServer,
@@ -32,6 +34,8 @@ def __getattr__(name):
 
 
 __all__ = [
+    "Backoff",
+    "FaultPlan",
     "Frame",
     "FrameConn",
     "FrameServer",

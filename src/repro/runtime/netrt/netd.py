@@ -37,13 +37,23 @@ import json
 import os
 import signal
 import sys
+import time
+import weakref
 from typing import Dict, List, Optional, Set
 
 import numpy as np
 
 from repro.runtime.driver import make_runtime
-from repro.runtime.events import RoundEvent, PartialShipped, WorkerCrashed, to_wire
+from repro.runtime.events import (
+    PartialReady,
+    PartialShipped,
+    RoundEvent,
+    WorkerCrashed,
+    to_wire,
+)
+from repro.runtime.netrt.faults import FaultPlan
 from repro.runtime.netrt.transport import (
+    Backoff,
     Frame,
     FrameConn,
     FrameServer,
@@ -54,6 +64,27 @@ from repro.runtime.netrt.transport import (
 
 PROTO_VERSION = 1
 
+# shmproc aggregator workers are fork()ed while the daemon holds its
+# listening socket and every accepted/peer connection.  Without
+# intervention the workers inherit those fds: SIGKILL the daemon and
+# the orphaned workers keep the port bound (a same-port restart can't
+# bind → re-adoption is impossible) and keep the controller's TCP
+# connections ESTABLISHED (dead-peer EOF never fires).  Every live
+# daemon registers here and an at-fork hook closes its sockets in the
+# child, so only the daemon process itself ever owns them.
+_LIVE_DAEMONS: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def _at_fork_close_daemon_sockets() -> None:
+    for d in list(_LIVE_DAEMONS):
+        try:
+            d._close_inherited_sockets()
+        except Exception:
+            pass
+
+
+os.register_at_fork(after_in_child=_at_fork_close_daemon_sockets)
+
 
 class NodeDaemon:
     """One node's frame-server front end over a local runtime."""
@@ -61,13 +92,19 @@ class NodeDaemon:
     def __init__(self, node: str, listen: str = "127.0.0.1:0", *,
                  runtime: str = "inproc", agg_engine: str = "auto",
                  capacity: float = 20.0, poll_interval: float = 0.02,
-                 compress: int = 0):
+                 compress: int = 0, fault_plan: Optional[FaultPlan] = None):
         self.node = node
         self.capacity = float(capacity)
         self.poll_interval = poll_interval
         self.compress = int(compress)
+        # the re-adoption epoch: a start stamp unique across restarts
+        # of this node name.  The welcome handshake carries it, so a
+        # controller re-dialing a known name can tell "same daemon,
+        # transient disconnect" from "fresh process, empty store".
+        self.epoch = time.time_ns()
+        self.faults = fault_plan
         self.rt = make_runtime(runtime, agg_engine=agg_engine)
-        self.server = FrameServer(listen)
+        self.server = FrameServer(listen, faults=fault_plan)
         self.addr = self.server.addr
         self._controllers: List[FrameConn] = []
         # node-top state: open root folds buffering their inputs until
@@ -77,12 +114,34 @@ class NodeDaemon:
         self._tops: Dict[str, Dict] = {}
         self._peers: Dict[str, FrameConn] = {}
         self._peer_landed: Set[str] = set()
+        # keys whose lifetime the CONTROLLER owns: landed update blobs
+        # and published-but-unfetched partials.  Swept when the last
+        # controller disconnects — its delivered-set died with it, so
+        # nothing will ever discard them over the wire.
+        self._landed: Set[str] = set()
+        self._published: Set[str] = set()
         self._stop = False
         self._closed = False
         self.stats = {"frames": 0, "events_pushed": 0, "updates_landed": 0,
                       "redelivered_keys": 0, "partials_served": 0,
                       "partials_shipped": 0, "ship_tx_bytes": 0,
                       "partials_landed": 0, "ship_rx_bytes": 0}
+        _LIVE_DAEMONS.add(self)
+
+    # ------------------------------------------------------------------
+    def _close_inherited_sockets(self) -> None:
+        """Runs in a freshly fork()ed child (shmproc worker): close the
+        socket fds the child inherited so the daemon process is their
+        sole owner — see the at-fork hook above."""
+        try:
+            self.server._listener.close()
+        except OSError:
+            pass
+        for c in list(self.server.conns) + list(self._peers.values()):
+            try:
+                c._sock.close()
+            except OSError:
+                pass
 
     # ------------------------------------------------------------------
     def step(self, timeout: Optional[float] = None) -> None:
@@ -93,6 +152,12 @@ class NodeDaemon:
                 self._drop_controller(conn)
                 continue
             self.stats["frames"] += 1
+            if (self.faults is not None
+                    and self.faults.kill_after is not None
+                    and self.stats["frames"] >= self.faults.kill_after):
+                # the FaultPlan's deterministic restart trigger: die the
+                # way a crashed daemon dies (no drain, no goodbye)
+                os.kill(os.getpid(), signal.SIGKILL)
             try:
                 self._handle(conn, frame)
             except PeerDead:
@@ -123,6 +188,23 @@ class NodeDaemon:
                 except Exception:
                     pass
                 self._round_cleanup()
+                # controller-owned objects must not outlive the
+                # controller: its delivered-set and partial-home maps
+                # died with the connection, so no discard frame will
+                # ever reclaim these — sweep them now (a re-adopting
+                # controller re-ships blobs from its staging dict)
+                for key in list(self._landed):
+                    try:
+                        self.rt.discard_update(key)
+                    except Exception:
+                        pass
+                for key in list(self._published):
+                    try:
+                        self.rt.discard_partial(key)
+                    except Exception:
+                        pass
+                self._landed.clear()
+                self._published.clear()
 
     def _round_cleanup(self) -> None:
         """Inter-round housekeeping for the node-top path: drop stale
@@ -140,12 +222,12 @@ class NodeDaemon:
     # ------------------------------------------------------------------
     # node-top: daemon→daemon partial shipping + ordered root folds
     # ------------------------------------------------------------------
-    def _peer_conn(self, addr: str) -> FrameConn:
+    def _peer_conn(self, addr: str, timeout: float = 5.0) -> FrameConn:
         conn = self._peers.get(addr)
         if conn is not None and conn.alive:
             return conn
-        conn = connect(addr, timeout=5.0, peer=addr,
-                       compress=self.compress)
+        conn = connect(addr, timeout=timeout, peer=addr,
+                       compress=self.compress, faults=self.faults)
         self._peers[addr] = conn
         return conn
 
@@ -163,16 +245,23 @@ class NodeDaemon:
                 "dtype": str(arr.dtype), "shape": list(arr.shape),
                 "src": self.node}
         addr = m["peer"]
+        # redial on the shared backoff schedule: a stale cached conn
+        # (root restarted) or a root mid-restart gets a few dense
+        # probes, then the deadline surfaces the failure — the
+        # controller answers by re-rooting, so a daemon must never
+        # block long on a dead peer
+        bo = Backoff(base=0.05, cap=0.5, deadline_s=4.0)
         try:
-            try:
-                self._peer_conn(addr).send("partial", meta, blob=arr)
-            except PeerDead:
-                # a stale cached conn (root restarted): one fresh dial
-                self._peers.pop(addr, None)
-                self._peer_conn(addr).send("partial", meta, blob=arr)
-        except PeerDead as e:
-            self._peers.pop(addr, None)
-            raise RuntimeError(f"peer {addr} unreachable: {e}") from e
+            while True:
+                try:
+                    self._peer_conn(addr, timeout=2.0).send(
+                        "partial", meta, blob=arr)
+                    break
+                except PeerDead as e:
+                    self._peers.pop(addr, None)
+                    if not bo.sleep():
+                        raise RuntimeError(
+                            f"peer {addr} unreachable: {e}") from e
         finally:
             self.rt.release_partial(key)
         self.stats["partials_shipped"] += 1
@@ -217,6 +306,10 @@ class NodeDaemon:
     def _push_event_obj(self, ev: RoundEvent) -> None:
         """Push one typed event to every controller (``to_wire`` JSON
         riding an ``event`` frame)."""
+        if isinstance(ev, PartialReady):
+            # published partials are controller-owned from here on;
+            # swept at controller-disconnect if never fetched/discarded
+            self._published.add(ev.key)
         self.stats["events_pushed"] += 1
         payload = json.loads(to_wire(ev))
         for conn in list(self._controllers):
@@ -239,7 +332,7 @@ class NodeDaemon:
             conn.send("welcome", {
                 "node": self.node, "proto": PROTO_VERSION,
                 "capacity": self.capacity, "runtime": self.rt.name,
-                "pid": os.getpid(),
+                "pid": os.getpid(), "epoch": self.epoch,
             })
         elif kind == "spawn":
             agg_id = m["agg_id"]
@@ -271,6 +364,7 @@ class NodeDaemon:
                     frame.blob, dtype=resolve_dtype(m["dtype"]),
                 ).reshape(m["shape"])
                 self.rt.store.put(arr, key=key)
+                self._landed.add(key)
                 self.stats["updates_landed"] += 1
             elif not frame.blob and not self.rt.update_alive(key):
                 raise KeyError(f"deliver without blob for unknown {key!r}")
@@ -319,13 +413,16 @@ class NodeDaemon:
                 "shape": list(arr.shape),
             }, blob=arr)
             self.rt.release_partial(m["key"])
+            self._published.discard(m["key"])
             self.stats["partials_served"] += 1
         elif kind == "discard_partial":
+            self._published.discard(m["key"])
             try:
                 self.rt.discard_partial(m["key"])
             except Exception:
                 pass  # already reclaimed (quiesce raced the discard)
         elif kind == "discard_update":
+            self._landed.discard(m["key"])
             try:
                 self.rt.discard_update(m["key"])
             except Exception:
@@ -375,7 +472,8 @@ class NodeDaemon:
 def spawn_local_daemon(node: str, *, runtime: str = "inproc",
                        agg_engine: str = "auto", capacity: float = 20.0,
                        listen: str = "127.0.0.1:0", timeout: float = 30.0,
-                       compress: int = 0, stdout=None):
+                       compress: int = 0, stdout=None,
+                       fault_spec: Optional[FaultPlan] = None):
     """Spawn a netd as a local child process and wait for its bound
     address (the port-file handshake).  Returns ``(Popen, addr)`` —
     the caller owns the process.  One helper so benches, tests, and
@@ -393,12 +491,13 @@ def spawn_local_daemon(node: str, *, runtime: str = "inproc",
     src_root = os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.dirname(os.path.abspath(__file__)))))
     env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.Popen(
-        [sys.executable, "-m", "repro.runtime.netrt.netd",
-         "--node", node, "--listen", listen, "--runtime", runtime,
-         "--agg-engine", agg_engine, "--capacity", str(capacity),
-         "--compress", str(int(compress)), "--port-file", pf],
-        env=env, stdout=stdout)
+    argv = [sys.executable, "-m", "repro.runtime.netrt.netd",
+            "--node", node, "--listen", listen, "--runtime", runtime,
+            "--agg-engine", agg_engine, "--capacity", str(capacity),
+            "--compress", str(int(compress)), "--port-file", pf]
+    if fault_spec is not None:
+        argv += ["--fault-spec", fault_spec.to_json()]
+    proc = subprocess.Popen(argv, env=env, stdout=stdout)
     deadline = time.perf_counter() + timeout
     try:
         while not os.path.exists(pf):
@@ -428,12 +527,17 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="zlib level for outbound blobs (0 = off)")
     ap.add_argument("--port-file", default="",
                     help="write the bound address here (atomic rename)")
+    ap.add_argument("--fault-spec", default="",
+                    help="FaultPlan JSON (deterministic fault injection "
+                         "for chaos tests; see netrt/faults.py)")
     args = ap.parse_args(argv)
 
     daemon = NodeDaemon(
         args.node, args.listen, runtime=args.runtime,
         agg_engine=args.agg_engine, capacity=args.capacity,
-        compress=args.compress)
+        compress=args.compress,
+        fault_plan=FaultPlan.from_json(args.fault_spec)
+        if args.fault_spec else None)
     if args.port_file:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:

@@ -43,12 +43,14 @@ from repro.core.sidecar import MetricsMap
 from repro.runtime.driver import _WarmEngineMixin
 from repro.runtime.events import (
     NodeLost,
+    NodeRejoined,
     PartialReady,
     RoundEvent,
     WorkerCrashed,
     from_wire,
 )
 from repro.runtime.netrt.transport import (
+    Backoff,
     Frame,
     FrameConn,
     PeerDead,
@@ -65,15 +67,16 @@ class _Node:
     """Controller-side state for one netd peer."""
 
     __slots__ = ("name", "addr", "conn", "capacity", "workers", "alive",
-                 "delivered", "stats", "runtime_name")
+                 "delivered", "stats", "runtime_name", "epoch")
 
     def __init__(self, name: str, addr: str, conn: FrameConn,
-                 capacity: float, runtime_name: str):
+                 capacity: float, runtime_name: str, epoch: int = 0):
         self.name = name
         self.addr = addr
         self.conn = conn
         self.capacity = capacity
         self.runtime_name = runtime_name
+        self.epoch = epoch                 # welcome's restart counter
         self.workers = 0
         self.alive = True
         self.delivered: Set[str] = set()   # keys resident in its store
@@ -89,19 +92,31 @@ class RemoteRuntime(_WarmEngineMixin):
                  metrics: Optional[MetricsMap] = None,
                  agg_engine: Any = "auto",
                  connect_timeout: float = 10.0,
-                 compress: Any = 0):
+                 compress: Any = 0,
+                 readopt: bool = True,
+                 readopt_timeout: float = 0.5,
+                 fault_plan: Any = None):
         self.metrics = metrics if metrics is not None else MetricsMap()
         self.agg_engine = agg_engine
         # zlib level for outbound update/partial blobs; the hello meta
         # carries it so the daemon compresses its replies too
         self.compress = 6 if compress is True else int(compress or 0)
+        # re-adoption: probe dead nodes' addresses (jittered backoff)
+        # on every poll — a daemon restarted under its old node name
+        # re-registers via the welcome handshake and rejoins the fleet
+        self.readopt = bool(readopt)
+        self.readopt_timeout = float(readopt_timeout)
+        self.fault_plan = fault_plan   # faults.FaultPlan (chaos tests)
         self._engines: Dict[str, Any] = {}    # driver-side (top) engines
         self._staged: Dict[str, np.ndarray] = {}
         self._route: Dict[str, str] = {}      # agg_id → node name
         self._open: Dict[str, int] = {}       # agg_id → spawn round_id
         self._partial_home: Dict[str, str] = {}
         self._pending: Deque[RoundEvent] = deque()
-        self._local = {"node_lost": 0, "synth_crashes": 0, "refused": 0}
+        self._local = {"node_lost": 0, "synth_crashes": 0, "refused": 0,
+                       "readopted": 0, "epoch_bumps": 0}
+        self._readopt_bo: Dict[str, Backoff] = {}   # dead node → schedule
+        self._readopt_next: Dict[str, float] = {}   # dead node → next try
         self._closed = False
         self._nodes: Dict[str, _Node] = {}
         addrs = list(nodes)
@@ -114,18 +129,93 @@ class RemoteRuntime(_WarmEngineMixin):
     # connection management
     # ------------------------------------------------------------------
     def _attach(self, addr: str, timeout: float) -> None:
-        conn = connect(addr, timeout=timeout, compress=self.compress)
+        conn = connect(addr, timeout=timeout, compress=self.compress,
+                       faults=self.fault_plan)
         conn.send("hello", {"role": "controller", "proto": 1,
                             "compress": self.compress})
         stash: List[Frame] = []
         w = conn.recv_expect(("welcome",), timeout, stash=stash).meta
         node = _Node(w["node"], addr, conn, float(w.get("capacity", 20.0)),
-                     w.get("runtime", "?"))
+                     w.get("runtime", "?"), epoch=int(w.get("epoch", 0)))
         if node.name in self._nodes:
             conn.close()
             raise ValueError(f"duplicate node name {node.name!r} "
                              f"({addr} vs {self._nodes[node.name].addr})")
         self._nodes[node.name] = node
+
+    # ------------------------------------------------------------------
+    # re-adoption of restarted daemons
+    # ------------------------------------------------------------------
+    def try_readopt(self, force: bool = False) -> List[str]:
+        """One re-adoption pass over the dead nodes: re-dial each one's
+        recorded address (non-blocking-ish: a single connect attempt
+        per node, paced by a per-node jittered backoff unless
+        ``force``), re-run the welcome handshake, and re-adopt a daemon
+        that answers under the old node name.  The epoch counter in the
+        welcome tells a restarted process (epoch bump — its store is
+        empty, so residency is cleared and staged keys re-ship on the
+        driver's re-dispatch) from a transient disconnect (same epoch —
+        the daemon parked and swept when we vanished, so the controller
+        treats both identically).  Dead-epoch teardown itself already
+        ran in ``_lose_node``; re-adoption only has to bring the node
+        back.  Returns the re-adopted node names; a ``NodeRejoined``
+        event per adoption reaches the driver on the next poll."""
+        if not self.readopt or self._closed:
+            return []
+        adopted: List[str] = []
+        now = time.perf_counter()
+        for node in self._nodes.values():
+            if node.alive:
+                continue
+            if not force and now < self._readopt_next.get(node.name, 0.0):
+                continue
+            bo = self._readopt_bo.setdefault(
+                node.name, Backoff(base=0.2, cap=2.0))
+            try:
+                # single dial (deadline_s=0 disables connect's retry
+                # loop): a refused port must cost one syscall, not a
+                # blocking retry window inside poll_events
+                conn = connect(node.addr, timeout=self.readopt_timeout,
+                               compress=self.compress,
+                               faults=self.fault_plan,
+                               backoff=Backoff(deadline_s=0.0))
+                conn.send("hello", {"role": "controller", "proto": 1,
+                                    "compress": self.compress})
+                w = conn.recv_expect(
+                    ("welcome",), max(self.readopt_timeout, 2.0)).meta
+            except PeerDead:
+                self._readopt_next[node.name] = \
+                    time.perf_counter() + (bo.next_delay() or bo.cap)
+                continue
+            if w.get("node") != node.name:
+                # the address answers, but it isn't our daemon anymore
+                conn.close()
+                self._readopt_next[node.name] = \
+                    time.perf_counter() + (bo.next_delay() or bo.cap)
+                continue
+            self._adopt(node, conn, w)
+            adopted.append(node.name)
+        return adopted
+
+    def _adopt(self, node: _Node, conn: FrameConn, w: Dict) -> None:
+        old_epoch = node.epoch
+        node.conn = conn
+        node.alive = True
+        node.capacity = float(w.get("capacity", node.capacity))
+        node.runtime_name = w.get("runtime", node.runtime_name)
+        node.epoch = int(w.get("epoch", 0))
+        # whatever epoch we got, the daemon-side store owes us nothing:
+        # a restarted process is empty, a parked one swept on our
+        # disconnect — every staged key re-ships its blob on demand
+        node.delivered.clear()
+        self._readopt_bo.pop(node.name, None)
+        self._readopt_next.pop(node.name, None)
+        self._local["readopted"] += 1
+        if node.epoch != old_epoch:
+            self._local["epoch_bumps"] += 1
+        self._pending.append(NodeRejoined(
+            node=node.name, epoch=node.epoch, old_epoch=old_epoch,
+            capacity=node.capacity))
 
     def _alive(self) -> List[_Node]:
         return [n for n in self._nodes.values() if n.alive]
@@ -158,6 +248,10 @@ class RemoteRuntime(_WarmEngineMixin):
         node.alive = False
         node.conn.close()
         self._local["node_lost"] += 1
+        # fresh re-adoption schedule: the first probe may run at the
+        # very next poll (a rolling restart should rejoin quickly)
+        self._readopt_bo.pop(node.name, None)
+        self._readopt_next.pop(node.name, None)
         evs: List[RoundEvent] = [NodeLost(node=node.name)]
         # its store died with it: partials homed there are unreachable
         for key, home in list(self._partial_home.items()):
@@ -205,7 +299,13 @@ class RemoteRuntime(_WarmEngineMixin):
         if node is None or not node.alive:
             live = self._alive()
             if not live:
-                raise NoLiveNodeError("all node daemons are unreachable")
+                # last resort before giving up the round: a restarted
+                # daemon may already be listening again — force one
+                # re-adoption pass (ignores the backoff pacing)
+                self.try_readopt(force=True)
+                live = self._alive()
+                if not live:
+                    raise NoLiveNodeError("all node daemons are unreachable")
             node = live[0]
         self._route[agg_id] = node.name
         return node
@@ -298,6 +398,10 @@ class RemoteRuntime(_WarmEngineMixin):
             self._send(node, "drain", {"agg_id": agg_id})
 
     def poll_events(self, timeout: float = 0.0) -> List[RoundEvent]:
+        # restarted daemons rejoin through the ordinary poll loop: the
+        # probe is backoff-paced per dead node, so a fleet with no
+        # deaths pays one attribute check per node here
+        self.try_readopt()
         out: List[RoundEvent] = list(self._pending)
         self._pending.clear()
         deadline = time.perf_counter() + timeout
@@ -566,22 +670,50 @@ class RemoteRuntime(_WarmEngineMixin):
 # ---------------------------------------------------------------------------
 
 def push_update(addr: str, client_id: str, update: np.ndarray,
-                weight: float = 1.0, *, timeout: float = 10.0) -> Dict:
+                weight: float = 1.0, *, timeout: float = 10.0,
+                submission_id: Optional[str] = None,
+                round_id: Optional[int] = None,
+                retries: int = 2,
+                backoff: Optional[Backoff] = None) -> Dict:
     """Submit one externally-computed model update to a serving
     :class:`~repro.api.Session` (``Session.serve(addr)``) from any
-    process.  Returns the server's ack meta; raises on rejection."""
+    process.  Returns the server's ack meta; raises on rejection.
+
+    Transport failures (connect refused, the connection dying before
+    the ack) are retried up to ``retries`` times on the shared
+    jittered-exponential :class:`Backoff` schedule, and every attempt
+    carries the same ``submission_id`` (client-chosen, or generated
+    once per call) — the serving session dedupes on
+    ``(round_id, client_id, submission_id)``, so a retry racing an
+    ack that was sent but never read can never double-fold (its ack
+    comes back ``duplicate=True`` instead).  An explicit *rejection*
+    (``error`` frame: wrong size, stale ``round_id``) raises
+    ``ValueError`` immediately — retrying a refusal cannot succeed."""
     flat = np.ascontiguousarray(update)
-    conn = connect(addr, timeout=timeout)
-    try:
-        conn.send("hello", {"role": "client"})
-        conn.recv_expect(("welcome",), timeout)
-        conn.send("submit_update", {
-            "client_id": client_id, "weight": float(weight),
-            "dtype": str(flat.dtype), "shape": list(flat.shape),
-        }, blob=flat)
-        reply = conn.recv_expect(("ack", "error"), timeout)
-        if reply.kind == "error":
-            raise ValueError(f"submit_update rejected: {reply.meta['msg']}")
-        return reply.meta
-    finally:
-        conn.close()
+    if submission_id is None:
+        submission_id = new_object_key()
+    meta = {"client_id": client_id, "weight": float(weight),
+            "submission_id": submission_id,
+            "dtype": str(flat.dtype), "shape": list(flat.shape)}
+    if round_id is not None:
+        meta["round_id"] = int(round_id)
+    bo = backoff if backoff is not None else Backoff(base=0.1, cap=1.0)
+    attempt = 0
+    while True:
+        try:
+            conn = connect(addr, timeout=timeout)
+            try:
+                conn.send("hello", {"role": "client"})
+                conn.recv_expect(("welcome",), timeout)
+                conn.send("submit_update", meta, blob=flat)
+                reply = conn.recv_expect(("ack", "error"), timeout)
+            finally:
+                conn.close()
+            if reply.kind == "error":
+                raise ValueError(
+                    f"submit_update rejected: {reply.meta['msg']}")
+            return reply.meta
+        except PeerDead:
+            attempt += 1
+            if attempt > retries or not bo.sleep():
+                raise

@@ -34,13 +34,14 @@ from __future__ import annotations
 
 import json
 import os
+import random
 import select
 import socket
 import struct
 import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -56,6 +57,90 @@ COMPRESS_MIN_BYTES = 512
 class PeerDead(ConnectionError):
     """The remote end of a frame connection is unreachable (EOF, reset,
     refused, or a hard send/handshake timeout)."""
+
+
+class Backoff:
+    """Jittered exponential backoff — the one retry schedule every
+    redial in this package uses (``connect``, netd's peer redials, the
+    ``push_update`` client helper, RemoteRuntime's re-adoption probe).
+
+    Delays grow ``base · factor^k`` up to ``cap``, each scaled by a
+    uniform jitter in ``[1-jitter, 1+jitter]`` so a fleet of retriers
+    never thunders in lockstep.  Deterministic under ``seed`` (tests
+    pin schedules); an unseeded instance draws from the process RNG.
+    ``deadline_s`` bounds the TOTAL time budget: ``next_delay`` returns
+    ``None`` (and ``sleep`` returns ``False``) once sleeping again
+    would overrun it, and the last delay is clipped to the remainder.
+    """
+
+    def __init__(self, base: float = 0.05, factor: float = 2.0,
+                 cap: float = 2.0, jitter: float = 0.25,
+                 deadline_s: Optional[float] = None,
+                 seed: Optional[int] = None):
+        if base <= 0 or factor < 1.0 or not (0.0 <= jitter < 1.0):
+            raise ValueError(
+                f"bad backoff policy (base={base}, factor={factor}, "
+                f"jitter={jitter})")
+        self.base = float(base)
+        self.factor = float(factor)
+        self.cap = float(cap)
+        self.jitter = float(jitter)
+        self.deadline_s = deadline_s
+        self._rng = random.Random(seed)
+        self._attempt = 0
+        self._raw = self.base               # grown by factor, capped
+        self._deadline: Optional[float] = None  # armed at first use
+
+    def _arm(self) -> None:
+        if self.deadline_s is not None and self._deadline is None:
+            self._deadline = time.perf_counter() + self.deadline_s
+
+    @property
+    def attempt(self) -> int:
+        """Delays handed out so far."""
+        return self._attempt
+
+    def remaining(self) -> Optional[float]:
+        """Seconds left in the budget (``None`` = unbounded)."""
+        self._arm()
+        if self._deadline is None:
+            return None
+        return max(0.0, self._deadline - time.perf_counter())
+
+    def next_delay(self) -> Optional[float]:
+        """The next delay in seconds, or ``None`` when the deadline
+        budget is exhausted."""
+        self._arm()
+        # incremental growth, clamped at the cap — never an overflowing
+        # factor**attempt, however long the schedule runs
+        raw = min(self.cap, self._raw)
+        self._raw = min(self.cap, self._raw * self.factor)
+        delay = raw * (1.0 + self.jitter * (2.0 * self._rng.random() - 1.0))
+        if self._deadline is not None:
+            left = self._deadline - time.perf_counter()
+            if left <= 0:
+                return None
+            delay = min(delay, left)
+        self._attempt += 1
+        return delay
+
+    def sleep(self) -> bool:
+        """Sleep the next delay; ``False`` once the budget is gone (the
+        caller's cue to give up and surface the failure)."""
+        delay = self.next_delay()
+        if delay is None:
+            return False
+        time.sleep(delay)
+        return True
+
+    def __iter__(self) -> Iterator[float]:
+        """Yield the schedule (for tests / non-sleeping pacers); ends
+        when the deadline budget does, never for an unbounded policy."""
+        while True:
+            delay = self.next_delay()
+            if delay is None:
+                return
+            yield delay
 
 
 def resolve_dtype(name: str) -> np.dtype:
@@ -105,7 +190,8 @@ class FrameConn:
     connection is closed and unusable."""
 
     def __init__(self, sock: socket.socket, peer: str = "?",
-                 send_timeout: float = 30.0, compress: Any = 0):
+                 send_timeout: float = 30.0, compress: Any = 0,
+                 faults: Any = None):
         sock.setblocking(True)
         try:  # latency matters more than throughput for 64-byte frames
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -119,6 +205,9 @@ class FrameConn:
         # no negotiation is needed.  Incompressible blobs fall back to
         # raw (the marker is only set when compression actually won).
         self.compress = 6 if compress is True else int(compress or 0)
+        # deterministic fault injection (faults.FaultPlan): consulted on
+        # every outbound frame; None (production) costs one attr check
+        self.faults = faults
         self._rbuf = bytearray()
         self.tx_bytes = 0
         self.rx_bytes = 0
@@ -157,6 +246,16 @@ class FrameConn:
         numpy array) — it is never copied into the JSON body."""
         if self._sock is None:
             raise PeerDead(f"peer {self.peer} gone: already closed")
+        if self.faults is not None:
+            action, delay = self.faults.on_send(kind, len(memoryview(
+                blob).cast("B")) if not isinstance(blob, bytes) else
+                len(blob))
+            if action == "drop":
+                return  # the frame never reaches the wire
+            if action == "reset":
+                raise self._dead("fault-injected reset")
+            if action == "delay":
+                time.sleep(delay)
         body = dict(meta or {})
         body["kind"] = kind
         mv = memoryview(blob).cast("B") if not isinstance(blob, bytes) \
@@ -170,12 +269,26 @@ class FrameConn:
         js = json.dumps(body, separators=(",", ":")).encode("utf-8")
         head = _HEADER.pack(len(js), len(mv))
         n = len(head) + len(js) + len(mv)
+        # one gathered write per frame: header+meta+blob leave as a
+        # single sendmsg, so a frame costs one syscall and one skb —
+        # three separate sendalls triple the kernel's per-skb buffer
+        # accounting and can wedge a burst of small frames against an
+        # unread peer long before the nominal SO_SNDBUF is full
+        bufs: List[memoryview] = [memoryview(head), memoryview(js)]
+        if len(mv):
+            bufs.append(mv if isinstance(mv, memoryview)
+                        else memoryview(mv))
         try:
             self._sock.settimeout(self.send_timeout)
-            self._sock.sendall(head)
-            self._sock.sendall(js)
-            if len(mv):
-                self._sock.sendall(mv)
+            while bufs:
+                sent = self._sock.sendmsg(bufs)
+                while sent:
+                    if sent >= len(bufs[0]):
+                        sent -= len(bufs[0])
+                        bufs.pop(0)
+                    else:
+                        bufs[0] = bufs[0][sent:]
+                        sent = 0
         except (OSError, ValueError) as e:
             raise self._dead(f"send failed ({e})") from e
         self.tx_bytes += n
@@ -276,9 +389,10 @@ class FrameServer:
     ``poll`` returns ``(conn, frame)`` pairs; a dying connection yields
     one final ``(conn, None)`` so the owner can unregister it."""
 
-    def __init__(self, addr: str, backlog: int = 16):
+    def __init__(self, addr: str, backlog: int = 16, faults: Any = None):
         family, sockaddr = parse_addr(addr)
         self._family = family
+        self.faults = faults   # inherited by every accepted FrameConn
         sock = socket.socket(family, socket.SOCK_STREAM)
         if family == socket.AF_INET:
             sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -313,7 +427,8 @@ class FrameServer:
                     continue
                 peer = format_addr(self._family, peer_addr) \
                     if self._family == socket.AF_INET else "unix-peer"
-                self.conns.append(FrameConn(raw, peer=peer))
+                self.conns.append(FrameConn(raw, peer=peer,
+                                            faults=self.faults))
             else:
                 self._pump(sock, out, readable=True)
         return out
@@ -349,20 +464,27 @@ class FrameServer:
 
 def connect(addr: str, *, timeout: float = 10.0,
             retry_interval: float = 0.05, peer: Optional[str] = None,
-            compress: Any = 0) -> FrameConn:
+            compress: Any = 0, faults: Any = None,
+            backoff: Optional[Backoff] = None) -> FrameConn:
     """Connect to a frame server, retrying until ``timeout`` — a
-    controller may race its daemons' bind."""
+    controller may race its daemons' bind.  Retries follow the shared
+    jittered-exponential :class:`Backoff` schedule (``retry_interval``
+    is its base; ``timeout`` its total deadline), so a refused port is
+    probed densely at first and gently once it looks genuinely down."""
     family, sockaddr = parse_addr(addr)
+    bo = backoff if backoff is not None else Backoff(
+        base=retry_interval, cap=max(retry_interval, 0.5),
+        deadline_s=timeout)
     deadline = time.perf_counter() + timeout
     while True:
         sock = socket.socket(family, socket.SOCK_STREAM)
         try:
             sock.settimeout(max(0.1, deadline - time.perf_counter()))
             sock.connect(sockaddr)
-            return FrameConn(sock, peer=peer or addr, compress=compress)
+            return FrameConn(sock, peer=peer or addr, compress=compress,
+                             faults=faults)
         except (ConnectionError, FileNotFoundError, socket.timeout,
                 OSError) as e:
             sock.close()
-            if time.perf_counter() + retry_interval >= deadline:
+            if not bo.sleep():
                 raise PeerDead(f"connect to {addr} failed: {e}") from e
-            time.sleep(retry_interval)

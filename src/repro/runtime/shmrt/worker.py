@@ -88,6 +88,7 @@ def worker_main(widx: int, task_ring: SpscRing, result_ring: SpscRing,
         kind=RecordKind.READY, ts=time.perf_counter(), a=os.getpid(),
     ).pack(), timeout=5.0)
 
+    parent = os.getppid()
     pending: deque = deque()  # control records found mid-burst
     while True:
         if pending:
@@ -95,6 +96,13 @@ def worker_main(widx: int, task_ring: SpscRing, result_ring: SpscRing,
         else:
             raw = task_ring.pop(timeout=IDLE_TIMEOUT_S)
             if raw is None:
+                if os.getppid() != parent:
+                    # orphaned: the dispatcher died without sending
+                    # SHUTDOWN (SIGKILLed daemon).  Exit through the
+                    # normal path so atexit sweeps our segments —
+                    # otherwise the orphan pins its inherited fds and
+                    # /dev/shm mappings forever
+                    break
                 continue
             rec = Record.unpack(raw)
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import time
 import warnings
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import (
     Any, Deque, Dict, Iterator, List, Optional, Sequence, Tuple,
@@ -44,7 +44,12 @@ from repro.fl.round import AggregationConfig, build_train_step
 from repro.fl.server import apply_server_opt, init_server_state
 from repro.optim import sgd_apply
 from repro.runtime.driver import RoundDriver, make_runtime
-from repro.runtime.events import NodeJoined, NodeLost, PartialReady
+from repro.runtime.events import (
+    NodeJoined,
+    NodeLost,
+    NodeRejoined,
+    PartialReady,
+)
 
 
 # ===========================================================================
@@ -143,6 +148,20 @@ class FederatedTrainer:
         # externally submitted updates (Session.submit_update): each one
         # takes a selected client's slot in the next round's cohort
         self._external: Deque[Tuple[str, np.ndarray, float]] = deque()
+        # idempotent ingress: (client_id, submission_id) pairs already
+        # accepted — a retried submission (lost ack, client backoff)
+        # dedupes here instead of double-folding.  Bounded LRU so a
+        # long job can't grow it without limit; `ingress` counts every
+        # accept/dedupe/refusal for Session.metrics.
+        self._seen_submissions: "OrderedDict[Tuple[str, str], int]" = \
+            OrderedDict()
+        self._seen_submissions_cap = 4096
+        self.ingress: Dict[str, int] = {
+            "queued": 0, "duplicates": 0, "refused": 0,
+            "stale_round": 0, "requeued": 0}
+        # externals popped by the current round's cohort generator —
+        # the requeue pass matches them against RoundOutcome.skipped
+        self._popped_external: List[Tuple[str, np.ndarray, float]] = []
         self._runtime = None          # lazy: persists across rounds (warm)
         self._driver: Optional[RoundDriver] = None
         self._closed = False
@@ -164,6 +183,7 @@ class FederatedTrainer:
             # coordinator is an ordinary event handler on the driver
             self._driver.on(NodeJoined, self.coordinator.handle_event)
             self._driver.on(NodeLost, self.coordinator.handle_event)
+            self._driver.on(NodeRejoined, self.coordinator.handle_event)
             self._driver.on(PartialReady, self.coordinator.handle_event)
         return self._driver
 
@@ -177,17 +197,45 @@ class FederatedTrainer:
 
     # ------------------------------------------------------------------
     def submit_update(self, client_id: str, flat: np.ndarray,
-                      weight: float = 1.0) -> None:
+                      weight: float = 1.0, *,
+                      submission_id: Optional[str] = None,
+                      round_id: Optional[int] = None) -> bool:
         """Queue an externally-computed flat update; it rides the next
-        ``run_round`` in place of a locally-trained client."""
+        ``run_round`` in place of a locally-trained client.
+
+        Idempotent when the caller supplies a ``submission_id``: a
+        ``(client_id, submission_id)`` pair already accepted is counted
+        and ignored (returns ``False``) — the retry contract that lets
+        :func:`~repro.runtime.netrt.push_update` redeliver after a lost
+        ack without ever double-folding.  A ``round_id`` pins the
+        submission to a round: one older than the next round to run is
+        refused (``ValueError``) — it could only fold into a round its
+        sender never meant.  Returns ``True`` when queued."""
+        if round_id is not None and round_id < self.coordinator.round_id:
+            self.ingress["stale_round"] += 1
+            raise ValueError(
+                f"stale round_id {round_id}: next round is "
+                f"{self.coordinator.round_id}")
+        if submission_id is not None:
+            seen_key = (client_id, submission_id)
+            if seen_key in self._seen_submissions:
+                self.ingress["duplicates"] += 1
+                return False
         # any shape whose total size matches is accepted — flatten here
         # so a (rows, cols) wire payload can't reach the 1-D fold loop
         flat = np.ascontiguousarray(flat, dtype=np.float32).reshape(-1)
         if flat.size != self._flat_params_size():
+            self.ingress["refused"] += 1
             raise ValueError(
                 f"update has {flat.size} elements, model has "
                 f"{self._flat_params_size()}")
+        if submission_id is not None:
+            self._seen_submissions[seen_key] = self.coordinator.round_id
+            while len(self._seen_submissions) > self._seen_submissions_cap:
+                self._seen_submissions.popitem(last=False)
         self._external.append((client_id, flat, float(weight)))
+        self.ingress["queued"] += 1
+        return True
 
     # ------------------------------------------------------------------
     def run_round(self, *, client_lr: Optional[float] = None,
@@ -224,6 +272,7 @@ class FederatedTrainer:
 
         t0 = time.perf_counter()
         self._ensure_runtime()
+        self._popped_external = []
         # sampler: per-round client selection as a pluggable policy —
         # `sampler(round_id, pool) -> cohort` replaces the built-in
         # diversity selector for this round (seed it for reproducibility)
@@ -241,6 +290,22 @@ class FederatedTrainer:
             deadline_s=deadline_s,
             fold_plan=plan.fold_plan,
         )
+
+        # --- requeue skipped external submissions -----------------------
+        # An external update the driver pulled but never dispatched
+        # (deadline hit, lost subtree, full node) must not vanish: unlike
+        # a locally trained client it cannot be regenerated, so it rides
+        # the next cohort instead.  Match by array identity — the same
+        # object the generator yielded comes back in outcome.skipped.
+        if outcome.skipped and self._popped_external:
+            ext_ids = {id(flat): (cid, flat, w)
+                       for cid, flat, w in self._popped_external}
+            requeued = [ext_ids[id(flat)]
+                        for _node, _cid, flat, _w in outcome.skipped
+                        if id(flat) in ext_ids]
+            for item in reversed(requeued):
+                self._external.appendleft(item)
+            self.ingress["requeued"] += len(requeued)
 
         # --- server applies the aggregated update -----------------------
         if outcome.delta is not None:
@@ -292,6 +357,7 @@ class FederatedTrainer:
         for cid, node in client_nodes.items():
             if self._external:
                 ext_cid, flat, weight = self._external.popleft()
+                self._popped_external.append((ext_cid, flat, weight))
                 yield node, ext_cid, flat, weight
                 continue
             cr = self.clients[cid]

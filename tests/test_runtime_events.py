@@ -24,6 +24,7 @@ from repro.runtime.events import (
     GoalReached,
     NodeJoined,
     NodeLost,
+    NodeRejoined,
     PartialReady,
     PartialShipped,
     RoundDeadline,
@@ -55,6 +56,8 @@ _SAMPLES = [
     WorkerCrashed(round_id=6, agg_id="mid@n2", worker=1, exitcode=-9),
     NodeJoined(round_id=None, node="n9", capacity=25.0),
     NodeLost(round_id=7, node="n3"),
+    NodeRejoined(round_id=None, node="n3", epoch=1723190400123456789,
+                 old_epoch=1723190300987654321, capacity=16.0),
     RoundDeadline(round_id=8, deadline_s=30.0),
     ScaleDecision(round_id=9, aggregators_planned=12, nodes=4, levels=2,
                   direction="up"),
@@ -139,6 +142,20 @@ def test_stale_round_events_dropped():
     # round-agnostic events (round_id=None) always pass
     assert drv.dispatch(NodeLost(node="n1"))
     assert len(seen) == 1
+
+
+def test_late_partial_shipped_is_not_stale_dropped():
+    """PartialShipped is pushed async by a remote daemon and routinely
+    loses the race with its own round's close-out; it is telemetry, so
+    the stale-round guard must let it through to handlers."""
+    drv = RoundDriver()
+    seen = []
+    drv.on(PartialShipped, seen.append)
+    drv.begin_round(1)
+    drv.end_round(1)
+    assert drv.dispatch(PartialShipped(
+        round_id=1, src="nodeB", dst="nodeA", key="k", nbytes=16))
+    assert len(seen) == 1 and drv.stats["stale_dropped"] == 0
 
 
 def test_driver_refuses_nested_rounds():

@@ -1,0 +1,720 @@
+"""Fleet survivability: netd re-adoption, idempotent client retries,
+and the deterministic fault-injection harness.
+
+Three layers under test:
+
+  * the shared :class:`Backoff` schedule (``connect``, peer redials,
+    ``push_update``) — deterministic under seed, cap and deadline
+    respected;
+  * idempotent ingress — ``(client_id, submission_id)`` dedupe at the
+    trainer, stale-round refusal, requeue of cohort-skipped externals:
+    a retried submission can never double-fold;
+  * re-adoption + :class:`FaultPlan` — a daemon SIGKILLed mid-round
+    and restarted under its old name rejoins the fleet (epoch bump,
+    ``NodeRejoined``), and seeded fault soaks (drops / resets / a
+    daemon restart) land every round on the FedAvg oracle over exactly
+    the updates that arrived.
+
+On bit-exactness: a round where a node dies re-dispatches its staged
+updates into a surviving subtree — same sum, different fold order — so
+crash rounds assert ``allclose`` (as the PR-4 crash tests do) plus
+bit-exact *determinism* (same seed → same bytes); fault-free rounds,
+drop-only rounds, and every post-recovery clean round assert
+bit-for-bit equality against the in-proc reference.
+"""
+import os
+import signal
+import socket
+import subprocess
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import fedavg_oracle
+from repro.runtime.driver import InProcRuntime, RoundDriver
+from repro.runtime.events import NodeLost, NodeRejoined
+from repro.runtime.netrt import (
+    Backoff,
+    FaultPlan,
+    FrameConn,
+    PeerDead,
+    RemoteRuntime,
+    connect,
+    push_update,
+    spawn_local_daemon,
+)
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+# ---------------------------------------------------------------------------
+# Backoff: the one retry schedule
+# ---------------------------------------------------------------------------
+
+def test_backoff_deterministic_under_seed():
+    import itertools
+    mk = lambda: Backoff(base=0.01, factor=2.0, cap=0.5, jitter=0.25,
+                         seed=7, deadline_s=1e9)
+    # a deadline that large never truncates the early schedule
+    sched1 = list(itertools.islice(iter(mk()), 200))
+    sched2 = list(itertools.islice(iter(mk()), 200))
+    assert sched1 == sched2
+    assert Backoff(seed=7, deadline_s=30.0).next_delay() is not None
+
+
+def test_backoff_grows_to_cap_with_bounded_jitter():
+    bo = Backoff(base=0.01, factor=2.0, cap=0.4, jitter=0.25, seed=3)
+    delays = [bo.next_delay() for _ in range(12)]
+    for k, d in enumerate(delays):
+        raw = min(0.4, 0.01 * (2.0 ** k))
+        assert raw * 0.75 <= d <= raw * 1.25
+    # tail is pinned at the cap (± jitter)
+    assert all(0.4 * 0.75 <= d <= 0.4 * 1.25 for d in delays[-3:])
+
+
+def test_backoff_deadline_budget_exhausts():
+    bo = Backoff(base=0.005, cap=0.01, jitter=0.0, deadline_s=0.05, seed=0)
+    total = 0.0
+    for d in bo:
+        total += d
+        time.sleep(d)
+    # the schedule ended because the budget did, and never overran it
+    assert bo.next_delay() is None and not bo.sleep()
+    assert total <= 0.05 + 0.02
+
+
+def test_backoff_zero_deadline_is_single_attempt():
+    # deadline_s=0 arms an already-expired budget: the first sleep()
+    # returns False — how try_readopt makes connect() dial exactly once
+    bo = Backoff(deadline_s=0.0)
+    assert bo.next_delay() is None
+    assert not bo.sleep()
+
+
+def test_backoff_rejects_bad_policy():
+    for kw in ({"base": 0.0}, {"factor": 0.5}, {"jitter": 1.0},
+               {"jitter": -0.1}):
+        with pytest.raises(ValueError):
+            Backoff(**kw)
+
+
+def test_connect_gives_up_within_deadline():
+    # nothing listens here; the retry loop must respect the budget
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    t0 = time.perf_counter()
+    with pytest.raises(PeerDead):
+        connect(f"127.0.0.1:{port}", timeout=0.3)
+    assert time.perf_counter() - t0 < 5.0
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: seeded schedules
+# ---------------------------------------------------------------------------
+
+_FRAME_SEQ = (["deliver"] * 20 + ["event"] * 10 + ["spawn"] * 5
+              + ["partial"] * 10) * 4
+
+
+def test_faultplan_deterministic_under_seed():
+    mk = lambda: FaultPlan(seed=11, drop=0.2, reset=0.1, delay=0.1)
+    p1, p2 = mk(), mk()
+    acts1 = [p1.on_send(k) for k in _FRAME_SEQ]
+    acts2 = [p2.on_send(k) for k in _FRAME_SEQ]
+    assert acts1 == acts2
+    assert p1.injected == p2.injected and p1.total_injected > 0
+
+
+def test_faultplan_scopes_and_budget():
+    # drops only touch drop_kinds; the budget stops all injection
+    p = FaultPlan(seed=5, drop=0.9, drop_kinds=("deliver",), max_faults=3)
+    acts = [p.on_send(k)[0] for k in ["spawn", "event", "quiesce"] * 10]
+    assert all(a == "pass" for a in acts)        # out of scope: untouched
+    acts = [p.on_send("deliver")[0] for _ in range(50)]
+    assert acts.count("drop") == 3               # budget spent...
+    last = len(acts) - 1 - acts[::-1].index("drop")
+    assert all(a == "pass" for a in acts[last + 1:])   # ...then inert
+    assert p.total_injected == 3
+
+
+def test_faultplan_json_roundtrip():
+    p = FaultPlan(seed=9, drop=0.25, reset=0.5, delay_s=0.01,
+                  drop_kinds=("deliver",), max_faults=7, kill_after=40)
+    q = FaultPlan.from_json(p.to_json())
+    assert (q.seed, q.drop, q.reset, q.delay_s) == (9, 0.25, 0.5, 0.01)
+    assert q.drop_kinds == ("deliver",)
+    assert q.max_faults == 7 and q.kill_after == 40
+    # same seed, same stream
+    assert [q.on_send(k) for k in _FRAME_SEQ[:40]] == \
+           [p.on_send(k) for k in _FRAME_SEQ[:40]]
+
+
+def test_frameconn_fault_hooks():
+    sa, sb = socket.socketpair()
+    plan = FaultPlan(seed=0, drop=1.0, drop_kinds=("deliver",))
+    a = FrameConn(sa, peer="a", faults=plan)
+    b = FrameConn(sb, peer="b")
+    a.send("deliver", {"i": 1})          # dropped: never hits the wire
+    a.send("spawn", {"i": 2})            # out of drop scope: arrives
+    f = b.recv(timeout=2.0)
+    assert f.kind == "spawn" and plan.injected == {"drop": 1}
+    # reset: the injected failure closes the conn like a real one
+    a.faults = FaultPlan(seed=0, reset=1.0)
+    with pytest.raises(PeerDead):
+        a.send("spawn", {"i": 3})
+    assert not a.alive
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# driver: skipped externals are reported, not dropped
+# ---------------------------------------------------------------------------
+
+def test_driver_reports_skipped_updates():
+    rt = InProcRuntime()
+    drv = RoundDriver(rt)
+    u0, u1 = np.ones(8, np.float32), np.full(8, 2.0, np.float32)
+
+    def ups():
+        yield "n0", "c0", u0, 1.0
+        yield "n0", "c1", u1, 1.0      # node full (planned goal 1)
+
+    out = drv.run_round(round_id=0, assignment={"n0": [0]},
+                        updates=ups(), goal=2, n_elems=8)
+    assert out.accepted == 1
+    assert len(out.skipped) == 1
+    node, cid, flat, w = out.skipped[0]
+    assert cid == "c1" and flat is u1    # the very object, requeueable
+    rt.close()
+
+
+# ---------------------------------------------------------------------------
+# idempotent ingress (trainer / Session level)
+# ---------------------------------------------------------------------------
+
+jax = pytest.importorskip("jax")
+
+from repro.api import Session                              # noqa: E402
+from repro.configs.resnet import RESNET18                  # noqa: E402
+from repro.core import ClientInfo, RoundConfig             # noqa: E402
+from repro.data import (build_client_datasets,             # noqa: E402
+                        dirichlet_partition, synthetic_femnist)
+from repro.models import build_resnet                      # noqa: E402
+from repro.runtime import ClientRuntime, FederatedTrainer  # noqa: E402
+
+
+def _mk_clients(n_samples=120, n_clients=8):
+    cfg = RESNET18.reduced()
+    model = build_resnet(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    imgs, labels = synthetic_femnist(n_samples, num_classes=10, seed=0)
+    shards = dirichlet_partition(labels, n_clients, alpha=0.5)
+    clients = [
+        ClientRuntime(ClientInfo(d.client_id, d.num_samples), d)
+        for d in build_client_datasets(imgs, labels, shards)
+    ]
+    return model, params, clients
+
+
+def _mk_trainer(seed=0, **kw):
+    model, params, clients = _mk_clients()
+    return FederatedTrainer(
+        model, params, clients,
+        round_cfg=RoundConfig(aggregation_goal=4, over_provision=1.5),
+        seed=seed, **kw)
+
+
+def _nparams(tr):
+    return int(sum(int(np.prod(np.shape(l)))
+                   for l in jax.tree.leaves(tr.params)))
+
+
+def _assert_params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_duplicate_submission_id_folds_once():
+    """The same submission retried twice folds exactly once: params are
+    bit-equal to the single-submission run, and the dupe is counted."""
+    tr, ref = _mk_trainer(seed=0), _mk_trainer(seed=0)
+    n = _nparams(tr)
+    up = np.full(n, 0.25, np.float32)
+
+    assert ref.submit_update("edge-1", up, weight=2.0,
+                             submission_id="s-1") is True
+    assert tr.submit_update("edge-1", up, weight=2.0,
+                            submission_id="s-1") is True
+    assert tr.submit_update("edge-1", up.copy(), weight=2.0,
+                            submission_id="s-1") is False   # the retry
+    assert tr.ingress["duplicates"] == 1 and tr.ingress["queued"] == 1
+    assert len(tr._external) == 1
+
+    tr.run_round(client_lr=0.05)
+    ref.run_round(client_lr=0.05)
+    _assert_params_equal(tr.params, ref.params)
+
+
+def test_retry_after_goal_reached_is_still_deduped():
+    """A retry that loses the race with round completion (the original
+    already folded, GoalReached fired, the round is over) must be
+    dropped by the dedupe record, not fold into the next round."""
+    tr, ref = _mk_trainer(seed=0), _mk_trainer(seed=0)
+    n = _nparams(tr)
+    up = np.full(n, 0.125, np.float32)
+    for t in (tr, ref):
+        assert t.submit_update("edge-9", up, weight=1.5,
+                               submission_id="s-42") is True
+        t.run_round(client_lr=0.05)
+    # the late retry: same (client_id, submission_id), next round open
+    assert tr.submit_update("edge-9", up.copy(), weight=1.5,
+                            submission_id="s-42") is False
+    assert tr.ingress["duplicates"] == 1 and not tr._external
+    tr.run_round(client_lr=0.05)
+    ref.run_round(client_lr=0.05)
+    _assert_params_equal(tr.params, ref.params)
+
+
+def test_stale_round_id_is_refused_and_counted():
+    tr = _mk_trainer()
+    n = _nparams(tr)
+    tr.run_round(client_lr=0.05)                 # round 0 is history
+    with pytest.raises(ValueError, match="stale round_id"):
+        tr.submit_update("edge-2", np.zeros(n, np.float32),
+                         submission_id="s-2", round_id=0)
+    assert tr.ingress["stale_round"] == 1 and not tr._external
+    # pinning the CURRENT round is fine
+    assert tr.submit_update("edge-2", np.zeros(n, np.float32),
+                            submission_id="s-3", round_id=1) is True
+
+
+def test_skipped_external_requeues_for_next_round():
+    """An external update the driver pulled but could not place (the
+    round's wall-clock budget expired first) rides the next cohort
+    instead of vanishing — the PR-6 fix for the silent drop."""
+    tr = _mk_trainer()
+    n = _nparams(tr)
+    assert tr.submit_update("edge-5", np.full(n, 0.5, np.float32),
+                            weight=3.0, submission_id="s-5") is True
+    tr.run_round(client_lr=0.05, deadline_s=1e-9)
+    assert tr.ingress["requeued"] == 1
+    assert len(tr._external) == 1                # buffered, not lost
+    arrived = []
+    from repro.runtime.events import UpdateArrived
+    tr.driver.on(UpdateArrived, lambda ev: arrived.append(ev.client_id))
+    tr.run_round(client_lr=0.05)
+    assert "edge-5" in arrived                   # folded this time
+
+
+def test_session_metrics_expose_ingress_counters():
+    model, params, clients = _mk_clients()
+    with Session.open(
+            model, params, clients,
+            round_cfg=RoundConfig(aggregation_goal=4,
+                                  over_provision=1.5)) as sess:
+        n = int(sum(int(np.prod(np.shape(l)))
+                    for l in jax.tree.leaves(params)))
+        up = np.full(n, 0.25, np.float32)
+        assert sess.submit_update("e1", up, submission_id="a") is True
+        assert sess.submit_update("e1", up, submission_id="a") is False
+        ing = sess.metrics()["ingress"]
+        assert ing["queued"] == 1 and ing["duplicates"] == 1
+
+
+@pytest.mark.slow
+def test_push_update_wire_retry_is_idempotent():
+    """The wire client retries on the shared Backoff with a stable
+    submission_id: re-sending the same submission gets duplicate=True
+    and the round's params are bit-equal to the single-send run."""
+    model, params, clients = _mk_clients()
+    # the reference session needs its OWN client objects: ClientRuntime
+    # is stateful (training advances its batch/rng state), so sharing
+    # one list would let sess's round perturb ref's
+    _, _, ref_clients = _mk_clients()
+    n = int(sum(int(np.prod(np.shape(l)))
+                for l in jax.tree.leaves(params)))
+    up = np.full(n, 0.25, np.float32)
+    cfg = RoundConfig(aggregation_goal=4, over_provision=1.5)
+    with Session.open(model, params, clients, round_cfg=cfg) as sess, \
+            Session.open(model, params, ref_clients,
+                         round_cfg=cfg) as ref:
+        addr = sess.serve("127.0.0.1:0")
+        ack1 = push_update(addr, "edge-7", up, weight=2.0,
+                           submission_id="wire-1", round_id=0)
+        assert ack1["duplicate"] is False
+        # the retry: same submission_id, e.g. after a lost ack
+        ack2 = push_update(addr, "edge-7", up, weight=2.0,
+                           submission_id="wire-1", round_id=0)
+        assert ack2["duplicate"] is True
+        # an explicit refusal is not retried: stale round errors out
+        sess.run_round(client_lr=0.05)
+        with pytest.raises(ValueError, match="stale"):
+            push_update(addr, "edge-7", up, submission_id="wire-2",
+                        round_id=0)
+        ref.submit_update("edge-7", up, weight=2.0)
+        ref.run_round(client_lr=0.05)
+        _assert_params_equal(sess.params, ref.params)
+        ing = sess.metrics()["ingress"]
+        assert ing["duplicates"] == 1 and ing["stale_round"] == 1
+
+
+# ---------------------------------------------------------------------------
+# re-adoption: SIGKILL + same-name restart
+# ---------------------------------------------------------------------------
+
+def _mk_updates(n_updates=6, n_elems=4096, seed=0, pow2=False):
+    rng = np.random.default_rng(seed)
+    ups = [rng.normal(size=n_elems).astype(np.float32)
+           for _ in range(n_updates)]
+    ws = ([2.0 ** i for i in range(n_updates)] if pow2
+          else [float(1 + i % 3) for i in range(n_updates)])
+    return ups, ws
+
+
+def _spawn(name, listen="127.0.0.1:0", fault_spec=None):
+    return spawn_local_daemon(name, runtime="inproc", listen=listen,
+                              stdout=subprocess.DEVNULL,
+                              fault_spec=fault_spec)
+
+
+def _kill_fleet(procs):
+    for p in procs:
+        if p.poll() is None:
+            p.terminate()
+    for p in procs:
+        try:
+            p.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            p.kill()
+
+
+def _assert_no_leaks(rt):
+    assert not rt._staged and not rt._partial_home
+    assert all(not n.delivered for n in rt._nodes.values())
+
+
+def _inproc_ref(ups, ws, n_elems, nodes=("rjA", "rjB"), round_id=0):
+    """The bit-exactness reference: the same driven round in-proc."""
+    rt = InProcRuntime()
+    drv = RoundDriver(rt)
+    assignment = {nodes[0]: [i for i in range(len(ups)) if i % 2 == 0],
+                  nodes[1]: [i for i in range(len(ups)) if i % 2 == 1]}
+    out = drv.run_round(
+        round_id=round_id, assignment=assignment,
+        updates=((nodes[i % 2], f"c{i}", u, w)
+                 for i, (u, w) in enumerate(zip(ups, ws))),
+        goal=len(ups), n_elems=n_elems)
+    rt.close()
+    return out.delta
+
+
+def _spin_readopt(rt, name, old_epoch, budget_s, required=True):
+    """Probe until ``name`` is re-adopted at a NEW epoch (bounded)."""
+    deadline = time.perf_counter() + budget_s
+    while time.perf_counter() < deadline:
+        node = rt._nodes[name]
+        if node.alive and node.epoch != old_epoch:
+            return True
+        rt.try_readopt(force=True)
+        time.sleep(0.05)
+    if required:
+        raise AssertionError(f"{name} was never re-adopted")
+    return False
+
+
+def _readopt_round(kill_name, procs, addrs):
+    """One mid-round SIGKILL + same-port restart of ``kill_name``; the
+    round must finish on the oracle and the daemon must be re-adopted
+    under its old name with a bumped epoch."""
+    N = 4096
+    ups, ws = _mk_updates(6, N)
+    names = ["rjA", "rjB"]
+    kill_idx = names.index(kill_name)
+    rt = RemoteRuntime(addrs, readopt_timeout=2.0)
+    try:
+        assert list(rt.node_info()) == names
+        drv = RoundDriver(rt)
+        lost, rejoined = [], []
+        drv.on(NodeLost, lost.append)
+        drv.on(NodeRejoined, rejoined.append)
+        old_epoch = rt._nodes[kill_name].epoch
+
+        def kill_and_restart():
+            os.kill(procs[kill_idx].pid, signal.SIGKILL)
+            procs[kill_idx].wait(timeout=10)
+            p2, _ = _spawn(kill_name, listen=addrs[kill_idx])
+            procs[kill_idx] = p2
+
+        assignment = {names[0]: [0, 2, 4], names[1]: [1, 3, 5]}
+
+        def updates():
+            for i, (u, w) in enumerate(zip(ups, ws)):
+                yield names[i % 2], f"c{i}", u, w
+                if i == 2:
+                    kill_and_restart()
+                if i == 3:
+                    # by now the failed delivery has marked the node
+                    # dead: re-adopt it MID-ROUND so the tail of the
+                    # cohort flows through the restarted daemon (no
+                    # assert — late discovery just adopts post-round)
+                    _spin_readopt(rt, kill_name, old_epoch, 15.0,
+                                  required=False)
+
+        out = drv.run_round(round_id=0, assignment=assignment,
+                            updates=updates(), goal=6, n_elems=N)
+        # oracle-exact over ALL six updates: the dead subtree's staged
+        # keys re-dispatched, nothing was lost with the daemon
+        assert out.count == 6
+        np.testing.assert_allclose(out.delta, fedavg_oracle(ups, ws),
+                                   rtol=1e-5, atol=1e-6)
+        assert [e.node for e in lost] == [kill_name]
+        _spin_readopt(rt, kill_name, old_epoch, 30.0)
+        assert rt.stats["readopted"] == 1 and rt.stats["epoch_bumps"] == 1
+        assert rt._nodes[kill_name].alive
+        _assert_no_leaks(rt)
+
+        # the next round runs on the re-adopted fleet and is bit-exact
+        out2 = drv.run_round(
+            round_id=1, assignment=assignment,
+            updates=((names[i % 2], f"c{i}", u, w)
+                     for i, (u, w) in enumerate(zip(ups, ws))),
+            goal=6, n_elems=N)
+        np.testing.assert_array_equal(
+            out2.delta, _inproc_ref(ups, ws, N, nodes=names, round_id=1))
+        assert out2.crashes == 0
+        # the NodeRejoined event reached the driver's handlers (during
+        # whichever round's poll absorbed it)
+        assert [e.node for e in rejoined] == [kill_name]
+        assert rejoined[0].old_epoch == old_epoch
+        assert rejoined[0].epoch != old_epoch        # a NEW process
+        _assert_no_leaks(rt)
+    finally:
+        rt.close()
+
+
+@pytest.mark.slow
+def test_nonroot_daemon_restart_readopted_mid_round():
+    procs, addrs = [], []
+    try:
+        for name in ("rjA", "rjB"):
+            p, a = _spawn(name)
+            procs.append(p)
+            addrs.append(a)
+        _readopt_round("rjB", procs, addrs)      # rjB: not the top node
+    finally:
+        _kill_fleet(procs)
+
+
+@pytest.mark.slow
+def test_root_daemon_restart_readopted_mid_round():
+    procs, addrs = [], []
+    try:
+        for name in ("rjA", "rjB"):
+            p, a = _spawn(name)
+            procs.append(p)
+            addrs.append(a)
+        _readopt_round("rjA", procs, addrs)      # rjA: the top node
+    finally:
+        _kill_fleet(procs)
+
+
+@pytest.mark.slow
+def test_same_epoch_reconnect_after_controller_restart():
+    """A controller that closes and reopens against a parked daemon
+    re-adopts it at the SAME epoch (the daemon never died): no epoch
+    bump, and staged state re-ships because the daemon swept on our
+    disconnect."""
+    procs, addrs = [], []
+    try:
+        p, a = _spawn("rjS")
+        procs.append(p)
+        addrs.append(a)
+        rt1 = RemoteRuntime([a])
+        ep1 = rt1._nodes["rjS"].epoch
+        rt1.close()                              # daemon parks + sweeps
+        rt2 = RemoteRuntime([a])
+        assert rt2._nodes["rjS"].epoch == ep1    # same process answered
+        N = 1024
+        ups, ws = _mk_updates(2, N)
+        drv = RoundDriver(rt2)
+        out = drv.run_round(
+            round_id=0, assignment={"rjS": [0, 1]},
+            updates=(("rjS", f"c{i}", u, w)
+                     for i, (u, w) in enumerate(zip(ups, ws))),
+            goal=2, n_elems=N)
+        np.testing.assert_allclose(out.delta, fedavg_oracle(ups, ws),
+                                   rtol=1e-5, atol=1e-6)
+        rt2.close()
+    finally:
+        _kill_fleet(procs)
+
+
+# ---------------------------------------------------------------------------
+# the fault soak: seeded chaos, oracle-exact rounds
+# ---------------------------------------------------------------------------
+
+def _decode_arrived(weight_sum, ws):
+    """Power-of-2 weights make the folded subset exactly decodable:
+    the float64 sum of distinct powers of two is lossless, so the
+    round's Σc names exactly which updates folded."""
+    arrived, rem = [], float(weight_sum)
+    for i in reversed(range(len(ws))):
+        if rem >= ws[i] - 1e-9:
+            arrived.append(i)
+            rem -= ws[i]
+    assert abs(rem) < 1e-9, f"undecodable weight sum {weight_sum}"
+    return sorted(arrived)
+
+
+def _soak_round(rt, names, ups, ws, N, round_id, deadline_s=20.0):
+    drv = RoundDriver(rt)
+    assignment = {names[0]: [i for i in range(len(ups)) if i % 2 == 0],
+                  names[1]: [i for i in range(len(ups)) if i % 2 == 1]}
+    out = drv.run_round(
+        round_id=round_id, assignment=assignment,
+        updates=((names[i % 2], f"c{i}", u, w)
+                 for i, (u, w) in enumerate(zip(ups, ws))),
+        goal=len(ups), n_elems=N, deadline_s=deadline_s)
+    return out
+
+
+def _subset_ref(ups, ws, arrived, N, names, round_id):
+    """In-proc reference over exactly the arrived subset, preserving
+    each update's node assignment and relative order."""
+    rt = InProcRuntime()
+    drv = RoundDriver(rt)
+    assignment = {names[0]: [i for i in arrived if i % 2 == 0],
+                  names[1]: [i for i in arrived if i % 2 == 1]}
+    assignment = {k: v for k, v in assignment.items() if v}
+    out = drv.run_round(
+        round_id=round_id, assignment=assignment,
+        updates=((names[i % 2], f"c{i}", ups[i], ws[i]) for i in arrived),
+        goal=len(arrived), n_elems=N)
+    rt.close()
+    return out.delta
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", [101, 202, 303])
+def test_fault_soak_rounds_match_arrived_oracle(seed):
+    """Three seeded fault schedules — pure drops, drops + resets, and
+    drops + a mid-round daemon SIGKILL/restart — each drive a round
+    that must land on the FedAvg oracle over exactly the updates that
+    arrived, and a clean follow-up round that is bit-exact again."""
+    N = 1024
+    n_updates = 10
+    ups, ws = _mk_updates(n_updates, N, seed=seed, pow2=True)
+    names = ["skA", "skB"]
+
+    drop_only = seed == 101
+    with_kill = seed == 303
+    plan = FaultPlan(seed=seed,
+                     drop=0.25,
+                     reset=0.0 if (drop_only or with_kill) else 0.2,
+                     drop_kinds=("deliver",),
+                     # resets scoped to frames whose failure the round
+                     # machinery recovers from (dead-peer teardown +
+                     # re-dispatch), not the construction handshake
+                     reset_kinds=("deliver", "drain"),
+                     max_faults=4)
+    daemon_spec = FaultPlan(kill_after=5) if with_kill else None
+
+    procs, addrs = [], []
+    try:
+        for i, name in enumerate(names):
+            p, a = _spawn(name,
+                          fault_spec=daemon_spec if i == 1 else None)
+            procs.append(p)
+            addrs.append(a)
+        if with_kill:
+            # respawn skB on its old port the moment it dies; the
+            # controller re-adopts it via poll_events' readopt pass
+            def respawner():
+                procs[1].wait()
+                p2, _ = _spawn(names[1], listen=addrs[1])
+                procs[1] = p2
+            threading.Thread(target=respawner, daemon=True).start()
+
+        rt = RemoteRuntime(addrs, fault_plan=plan, readopt_timeout=2.0)
+        try:
+            out = _soak_round(rt, names, ups, ws, N, round_id=0)
+            arrived = _decode_arrived(out.weight, ws)
+            assert out.count == len(arrived)
+            if plan.injected.get("drop"):
+                # dropped delivers are truly lost (the daemon never saw
+                # them) — unlike a dead node's staged keys, which
+                # re-dispatch recovers
+                assert len(arrived) < n_updates
+            # the FedAvg oracle over exactly the arrived updates
+            sub_u = [ups[i] for i in arrived]
+            sub_w = [ws[i] for i in arrived]
+            np.testing.assert_allclose(
+                out.delta, fedavg_oracle(sub_u, sub_w),
+                rtol=1e-5, atol=1e-6)
+            if drop_only:
+                # no node ever died → per-node fold order is exactly
+                # the arrived sub-sequence: bit-for-bit reproducible
+                np.testing.assert_array_equal(
+                    out.delta,
+                    _subset_ref(ups, ws, arrived, N, names, round_id=0))
+
+            # recovery: wait out the fleet (kill seed: re-adoption),
+            # then a clean round must be bit-exact vs the in-proc tree
+            if with_kill:
+                deadline = time.perf_counter() + 30.0
+                while not all(n.alive for n in rt._nodes.values()):
+                    rt.try_readopt(force=True)
+                    if time.perf_counter() > deadline:
+                        raise AssertionError("fleet never whole again")
+                    time.sleep(0.05)
+            assert plan.max_faults is not None
+            plan.injected["drop"] = plan.max_faults   # spend the budget
+            out2 = _soak_round(rt, names, ups, ws, N, round_id=1)
+            assert out2.count == n_updates
+            np.testing.assert_array_equal(
+                out2.delta,
+                _inproc_ref(ups, ws, N, nodes=names, round_id=1))
+            _assert_no_leaks(rt)
+        finally:
+            rt.close()
+    finally:
+        _kill_fleet(procs)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_fault_soak_same_seed_is_bit_identical():
+    """Determinism contract: the same controller-side fault seed over
+    the same frame sequence injects the same faults — two runs of a
+    drop-only soak produce byte-identical deltas and identical
+    injection counts."""
+    N = 1024
+    ups, ws = _mk_updates(8, N, seed=7, pow2=True)
+    names = ["dtA", "dtB"]
+    deltas, counts = [], []
+    for _ in range(2):
+        plan = FaultPlan(seed=17, drop=0.3, drop_kinds=("deliver",),
+                         max_faults=3)
+        procs, addrs = [], []
+        try:
+            for name in names:
+                p, a = _spawn(name)
+                procs.append(p)
+                addrs.append(a)
+            rt = RemoteRuntime(addrs, fault_plan=plan)
+            try:
+                out = _soak_round(rt, names, ups, ws, N, round_id=0)
+                deltas.append(out.delta.copy())
+                counts.append(dict(plan.injected))
+            finally:
+                rt.close()
+        finally:
+            _kill_fleet(procs)
+    assert counts[0] == counts[1]
+    np.testing.assert_array_equal(deltas[0], deltas[1])
