@@ -19,49 +19,65 @@ import time
 
 # suites whose rows land in the --json perf-trajectory file
 JSON_SUITES = ("agg_kernel", "dataplane_fig7", "shmrt", "control_overhead",
-               "net")
+               "net", "obs")
 
 # PR-1 acceptance floor: blocked fold ≥ 2× naive.  A regression here
 # silently rots every throughput claim downstream, so the harness fails
 # loudly instead of recording the bad rows.
 ENGINE_FOLD_FLOOR = 2.0
 
+# Every gate check stamps its verdict into the row (``gates:
+# {name: pass|fail}``) and RETURNS failure messages instead of exiting,
+# so a failing run still writes the JSON rows — with the verdicts — and
+# exits FATAL afterwards (main collects the messages).
 
-def _check_engine_fold_floor(rows) -> None:
-    """Parse engine_fold_* speedups out of the agg_kernel rows and die
-    loudly if the blocked/naive ratio fell below the PR-1 floor."""
+
+def _stamp(r, gate: str, ok: bool) -> bool:
+    r.setdefault("gates", {})[gate] = "pass" if ok else "fail"
+    return ok
+
+
+def _check_engine_fold_floor(rows) -> list:
+    """Parse engine_fold_* speedups out of the agg_kernel rows and fail
+    the run if the blocked/naive ratio fell below the PR-1 floor."""
     import re
 
+    fails = []
     for r in rows:
         if r["bench"] != "agg_kernel" or "speedup_blocked" not in r["derived"]:
             continue
         m = re.search(r"speedup_blocked=([\d.]+)x", r["derived"])
-        if m and float(m.group(1)) < ENGINE_FOLD_FLOOR:
-            sys.exit(
+        if m and not _stamp(r, "engine_fold_floor",
+                            float(m.group(1)) >= ENGINE_FOLD_FLOOR):
+            fails.append(
                 f"FATAL: engine_fold regression — blocked/naive = "
                 f"{m.group(1)}x < {ENGINE_FOLD_FLOOR}x floor "
                 f"(row {r['case']!r}; see ROADMAP.md perf trajectory)")
+    return fails
 
 
-def _check_driver_dispatch_gate(rows) -> None:
+def _check_driver_dispatch_gate(rows) -> list:
     """PR-3 acceptance gate: one RoundDriver event dispatch must stay
     under 5% of a warm shmrt task dispatch (the event seam is free
     relative to the cheapest real control-plane action it mediates)."""
     import re
 
+    fails = []
     for r in rows:
         if r["case"] != "driver_dispatch":
             continue
         m = re.search(r"overhead_frac=([\d.]+)", r["derived"])
         g = re.search(r"gate_frac=([\d.]+)", r["derived"])
-        if m and g and float(m.group(1)) >= float(g.group(1)):
-            sys.exit(
+        if m and g and not _stamp(r, "driver_dispatch",
+                                  float(m.group(1)) < float(g.group(1))):
+            fails.append(
                 f"FATAL: driver dispatch overhead regression — "
                 f"{float(m.group(1)):.4f} ≥ {g.group(1)} of warm shmrt "
                 f"dispatch (row {r['case']!r}; see ROADMAP.md)")
+    return fails
 
 
-def _check_net_traffic_gate(rows) -> None:
+def _check_net_traffic_gate(rows) -> list:
     """PR-4/PR-5 acceptance gates: cross-node aggregation traffic per
     round must stay partials-only — ≤ nodes × model_size × 1.1 (this
     bound now also covers daemon→daemon shipping) — and a node-top
@@ -69,28 +85,53 @@ def _check_net_traffic_gate(rows) -> None:
     partials are coming home instead of folding on the root node."""
     import re
 
+    fails = []
     for r in rows:
         if r["bench"] != "net":
             continue
         m = re.search(r"partial_mb=([\d.]+);bound_mb=([\d.]+)", r["derived"])
-        if m and float(m.group(1)) > float(m.group(2)):
-            sys.exit(
+        if m and not _stamp(r, "net_partials_only",
+                            float(m.group(1)) <= float(m.group(2))):
+            fails.append(
                 f"FATAL: cross-node traffic regression — partial payloads "
                 f"{m.group(1)} MB/round > partials-only bound "
                 f"{m.group(2)} MB (row {r['case']!r}; see ROADMAP.md)")
         g = re.search(r"return_mb=([\d.]+);return_bound_mb=([\d.]+)",
                       r["derived"])
-        if g and float(g.group(1)) > float(g.group(2)):
-            sys.exit(
+        if g and not _stamp(r, "net_return_traffic",
+                            float(g.group(1)) <= float(g.group(2))):
+            fails.append(
                 f"FATAL: node-top return-traffic regression — "
                 f"{g.group(1)} MB/round came back to the controller > "
                 f"1 × model bound {g.group(2)} MB (row {r['case']!r}; "
                 f"see ROADMAP.md)")
         b = re.search(r"bitexact=(\d)", r["derived"])
-        if b and b.group(1) != "1":
-            sys.exit(
+        if b and not _stamp(r, "net_bitexact", b.group(1) == "1"):
+            fails.append(
                 f"FATAL: cross-node round is not bit-identical to the "
                 f"single-node tree (row {r['case']!r})")
+    return fails
+
+
+def _check_obs_overhead_gate(rows) -> list:
+    """Tracing must be control-plane noise: a fully-traced warm shmproc
+    round ≤ 2% over the untraced round (the obs layer's event-edge-only
+    contract, paper §4.3)."""
+    import re
+
+    fails = []
+    for r in rows:
+        if r["bench"] != "obs" or "obs_overhead_frac" not in r["derived"]:
+            continue
+        m = re.search(r"obs_overhead_frac=([\d.]+)", r["derived"])
+        g = re.search(r"gate_frac=([\d.]+)", r["derived"])
+        if m and g and not _stamp(r, "obs_overhead",
+                                  float(m.group(1)) < float(g.group(1))):
+            fails.append(
+                f"FATAL: tracing overhead regression — traced round is "
+                f"{float(m.group(1)):.4f} over untraced ≥ {g.group(1)} "
+                f"gate (row {r['case']!r}; see ROADMAP.md)")
+    return fails
 
 
 def main() -> None:
@@ -114,6 +155,7 @@ def main() -> None:
         bench_dataplane,
         bench_hierarchy,
         bench_net,
+        bench_obs,
         bench_orchestration,
         bench_queuing,
         bench_shmrt,
@@ -129,12 +171,20 @@ def main() -> None:
         "agg_kernel": bench_agg_kernel.run,
         "shmrt": bench_shmrt.run,
         "net": bench_net.run,
+        "obs": bench_obs.run,
         "tta_fig9": bench_tta.run,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if args.only in k}
 
+    gate_checks = {
+        "agg_kernel": _check_engine_fold_floor,
+        "control_overhead": _check_driver_dispatch_gate,
+        "net": _check_net_traffic_gate,
+        "obs": _check_obs_overhead_gate,
+    }
     json_rows = []
+    fatal: list = []
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         t0 = time.time()
@@ -143,21 +193,22 @@ def main() -> None:
         except Exception as e:  # a failed suite must not hide the others
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             continue
+        check = gate_checks.get(name)
+        if check is not None:
+            fatal.extend(check(rows))
         for r in rows:
             print(f"{r['bench']}/{r['case']},{r['us_per_call']:.1f},"
                   f"{r['derived']}", flush=True)
         if name in JSON_SUITES:
             json_rows.extend(rows)
-        if name == "agg_kernel":
-            _check_engine_fold_floor(rows)
-        if name == "control_overhead":
-            _check_driver_dispatch_gate(rows)
-        if name == "net":
-            _check_net_traffic_gate(rows)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
 
     if args.json:
         if json_rows:
+            # every row carries its gate verdicts (possibly empty) so
+            # the baseline records what was checked, not just measured
+            for r in json_rows:
+                r.setdefault("gates", {})
             with open(args.json, "w") as f:
                 json.dump({"mode": "full" if args.full else "fast",
                            "rows": json_rows}, f, indent=2)
@@ -168,6 +219,10 @@ def main() -> None:
             # (e.g. --only filtered out both JSON suites)
             print(f"# no {'/'.join(JSON_SUITES)} rows produced; "
                   f"left {args.json} untouched", file=sys.stderr)
+
+    if fatal:
+        # verdicts are stamped and the JSON is on disk — NOW fail loudly
+        sys.exit("\n".join(fatal))
 
 
 if __name__ == "__main__":

@@ -92,6 +92,15 @@ def main(fast: bool = False):
                       f"workers={rec['workers']:.0f} "
                       f"wall={rec['wall_s']:.2f}s  return={ret_mb:.2f} MB "
                       f"(controller-top would return {ctrl_mb:.2f} MB)")
+                # the TTA breakdown (§4.3): driver spans + each daemon's
+                # telemetry, drained over the wire, one line per tier
+                trace = s.trace()
+                print(f"  {trace.summary()}")
+                ship_s, ships = trace.telemetry_series("netd/ship_s")
+                if ships:
+                    print(f"  telemetry: {ships} partial ship(s) "
+                          f"{ship_s * 1e3:.1f}ms on the shipping daemon, "
+                          f"nodes drained: {sorted(trace.telemetry)}")
 
             # --- serve mode: external client process pushes an update --
             addr = s.serve("127.0.0.1:0")

@@ -71,6 +71,7 @@ class Session:
         checkpoint_every: int = 5,
         seed: int = 0,
         wire_compress: Any = 0,
+        trace_path: Optional[str] = None,
     ) -> "Session":
         """Open a session: ``model.loss(params, batch)`` plus a client
         fleet, on the chosen aggregation runtime.
@@ -89,7 +90,12 @@ class Session:
         supplying its own ``RoundConfig`` picks both explicitly
         (``topology`` defaults to ``"controller"``).
         ``wire_compress`` (zlib level, or True for 6) compresses
-        update/partial blobs on the frame transport."""
+        update/partial blobs on the frame transport.
+
+        ``trace_path`` appends every round's :class:`RoundTrace` as one
+        JSONL record (flushed per line) — read back with
+        :func:`repro.obs.read_traces`, which tolerates the truncated
+        tail a mid-round kill leaves behind."""
         remote = None
         if wire_compress and not isinstance(nodes, (list, tuple)):
             # single-node runtimes never touch the frame transport, so
@@ -130,6 +136,7 @@ class Session:
                 checkpoint_dir=checkpoint_dir,
                 checkpoint_every=checkpoint_every,
                 seed=seed,
+                trace_path=trace_path,
             ))
         except BaseException:
             if remote is not None:
@@ -172,21 +179,40 @@ class Session:
 
     def metrics(self) -> Dict[str, Any]:
         """Snapshot of the job: per-round records, model version, the
-        event sidecar series, and driver/event-loop counters."""
+        event sidecar series, and driver/event-loop counters.
+
+        ``sidecar`` keeps the legacy flat-sum shape
+        (``"owner/metric": total``); ``sidecar_series`` carries the full
+        per-series statistics — ``{"sum", "count", "mean"}`` — that the
+        sums alone were hiding (a big ``agg_exec_s`` total can mean one
+        slow fold or a thousand fast ones)."""
         tr = self._trainer
+        snap = tr.metrics.snapshot()
         out: Dict[str, Any] = {
             "rounds": list(tr.log),
             "model_version": tr.coordinator.model_version,
             "runtime": tr.runtime if isinstance(tr.runtime, str)
             else getattr(tr.runtime, "name", "custom"),
             "sidecar": {f"{owner}/{metric}": total for
-                        (owner, metric), (total, _n)
-                        in tr.metrics.snapshot().items()},
+                        (owner, metric), (total, _n) in snap.items()},
+            "sidecar_series": {
+                f"{owner}/{metric}": {
+                    "sum": total, "count": n,
+                    "mean": (total / n) if n else 0.0}
+                for (owner, metric), (total, n) in snap.items()},
         }
         out["ingress"] = dict(tr.ingress)
         if tr._driver is not None:
             out["driver"] = dict(tr._driver.stats)
         return out
+
+    def trace(self, round_id: Optional[int] = None):
+        """The :class:`~repro.obs.RoundTrace` for ``round_id`` (latest
+        round when omitted): driver/worker spans plus any per-daemon
+        telemetry drained over the wire.  ``trace.breakdown()``
+        attributes the round's wall time to tiers (client train, wire,
+        mid folds, top fold, control + unaccounted residual)."""
+        return self._trainer.trace(round_id)
 
     def evaluate(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
         return self._trainer.evaluate(batch)

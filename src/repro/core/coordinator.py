@@ -211,7 +211,8 @@ class Coordinator:
         count — so multi-node placement learns per-node speed from the
         same events that ride the wire."""
         from repro.runtime.events import (NodeJoined, NodeLost,
-                                          NodeRejoined, PartialReady)
+                                          NodeRejoined, PartialReady,
+                                          PartialShipped, TopFolded)
 
         if isinstance(event, NodeJoined):
             self.nodes[event.node] = NodeState(
@@ -242,3 +243,25 @@ class Coordinator:
                 # update count (Little's law), in `updates` units.
                 ns.arrival_rate = 0.5 * ns.arrival_rate + 0.5 * (
                     float(event.count) / ns.exec_time_s)
+        elif isinstance(event, TopFolded):
+            # the root fold's measured cost was dropped on the floor
+            # until the obs layer stamped it (exec_s) — price it into
+            # the root node's EWMA exactly like a mid's PartialReady,
+            # but only when the fold actually ran ON that node (worker/
+            # node tiers); a controller-tier fold burns controller CPU
+            # and says nothing about the node it is nominally named for
+            if event.tier in ("worker", "node") and event.exec_s > 0.0:
+                ns = self.nodes.get(event.node)
+                if ns is not None:
+                    exec_s = max(event.exec_s, 1e-6)
+                    ns.exec_time_s = 0.5 * ns.exec_time_s + 0.5 * exec_s
+                    ns.arrival_rate = 0.5 * ns.arrival_rate + 0.5 * (
+                        float(event.count) / ns.exec_time_s)
+        elif isinstance(event, PartialShipped):
+            # daemon-measured serialize+send wall for one sealed partial
+            # (src side): the uplink occupancy NodeState prices into RC
+            if event.wire_s > 0.0:
+                ns = self.nodes.get(event.src)
+                if ns is not None:
+                    ns.wire_time_s = (0.5 * ns.wire_time_s
+                                      + 0.5 * event.wire_s)

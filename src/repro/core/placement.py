@@ -37,6 +37,10 @@ class NodeState:
     arrival_rate: float = 0.0    # k_{i,t}
     exec_time_s: float = 1.0     # E_{i,t}
     assigned: float = 0.0        # updates placed this round
+    # EWMA of the node's measured daemon→daemon ship cost per sealed
+    # partial (PartialShipped.wire_s, src side) — 0 until telemetry
+    # feeds it, so single-node behavior is untouched
+    wire_time_s: float = 0.0
 
     @property
     def queue_estimate(self) -> float:
@@ -45,8 +49,17 @@ class NodeState:
 
     @property
     def residual_capacity(self) -> float:
-        """RC_{i,t} = MC_i − k·E − already-assigned."""
-        return self.max_capacity - self.queue_estimate - self.assigned
+        """RC_{i,t} = MC_i − k·E − already-assigned − ship load.
+
+        Shipping a sealed partial occupies the node for ``wire_time_s``;
+        priced in exec-time units (wire/E ≈ how many updates the node
+        could have folded in that window) so a node with an expensive
+        uplink looks correspondingly less spare to the packer and the
+        root choice."""
+        ship_load = (self.wire_time_s / self.exec_time_s
+                     if self.exec_time_s > 0 else 0.0)
+        return (self.max_capacity - self.queue_estimate - self.assigned
+                - ship_load)
 
 
 def measure_max_capacity(exec_times: Sequence[Tuple[float, float]],

@@ -51,6 +51,37 @@ class MetricsMap:
         with self._lock:
             return {k: (self._m[k], self._count[k]) for k in self._m}
 
+    def absorb(self, owner: str, metric: str, total: float,
+               count: int) -> None:
+        """Merge an already-aggregated series (a drained remote map)
+        without inflating the sample count the way per-call ``update``
+        would."""
+        with self._lock:
+            self._m[(owner, metric)] += total
+            self._count[(owner, metric)] += count
+
+    def absorb_series(self, series: Dict[str, list],
+                      prefix: str = "") -> None:
+        """Merge a wire-flattened map (``{"owner/metric": [sum, count]}``,
+        see :func:`series_flatten`), optionally namespacing every owner
+        with ``prefix`` — how the controller files each daemon's drain."""
+        for key, sc in series.items():
+            owner, _, metric = key.partition("/")
+            self.absorb(prefix + owner, metric, float(sc[0]), int(sc[1]))
+
+    def drain_series(self) -> Dict[str, list]:
+        """:meth:`drain` (destructive — the agent's retrieval) in the
+        JSON-safe wire shape the ``telemetry`` frame carries."""
+        return series_flatten(self.drain())
+
+
+def series_flatten(
+    m: Dict[Tuple[str, str], Tuple[float, int]],
+) -> Dict[str, list]:
+    """``{(owner, metric): (sum, count)}`` → JSON-safe
+    ``{"owner/metric": [sum, count]}`` (owners never contain '/')."""
+    return {f"{o}/{met}": [float(v), int(c)] for (o, met), (v, c) in m.items()}
+
 
 @dataclass
 class EventSidecar:

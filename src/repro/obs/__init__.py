@@ -1,0 +1,32 @@
+"""repro.obs — event-driven tracing + telemetry (paper §4.3).
+
+See README.md in this package for the paper mapping; trace.py for the
+span/trace machinery.  The instrumentation hook points live in the
+components themselves (runtime/driver.py, runtime/shmrt, runtime/netrt)
+— this package only defines the sample types and the merge/accounting
+layer, keeping the "zero cost when idle" contract auditable in one
+place.
+"""
+from repro.obs.trace import (
+    NULL_TRACER,
+    RoundTrace,
+    SPAN_KINDS,
+    Span,
+    Tracer,
+    read_traces,
+    span_from_wire,
+    span_to_wire,
+    write_trace,
+)
+
+__all__ = [
+    "NULL_TRACER",
+    "RoundTrace",
+    "SPAN_KINDS",
+    "Span",
+    "Tracer",
+    "read_traces",
+    "span_from_wire",
+    "span_to_wire",
+    "write_trace",
+]

@@ -61,6 +61,7 @@ from repro.core.gateway import UpdateEnvelope
 from repro.core.objectstore import InProcObjectStore
 from repro.core.placement import FoldPlan, FoldSite, build_fold_plan
 from repro.core.sidecar import EventSidecar, MetricsMap
+from repro.obs.trace import RoundTrace, Tracer
 from repro.runtime.events import (
     GoalReached,
     PartialReady,
@@ -332,6 +333,25 @@ class ShmProcRuntime(_WarmEngineMixin):
     def quiesce(self, timeout: float = 5.0) -> None:
         self._rt.quiesce(timeout=timeout)
 
+    def take_spans(self) -> List["Span"]:
+        """Worker-side spans (task pickup→publish, ring-wait) derived
+        from records already on the result rings — no extra IPC."""
+        from repro.obs.trace import Span
+
+        out: List[Span] = []
+        for d in self._rt.take_spans():
+            try:
+                out.append(Span(
+                    kind=d["kind"], owner=d.get("owner", ""),
+                    node=self.name, round_id=int(d.get("round_id", 0)),
+                    t0=float(d.get("t0", 0.0)),
+                    dur_s=float(d.get("dur_s", 0.0)),
+                    worker=int(d.get("worker", -1)),
+                    n=float(d.get("n", 0.0))))
+            except (KeyError, TypeError, ValueError):
+                continue
+        return out
+
     # -- payload plumbing ----------------------------------------------
     def put_update(self, flat: np.ndarray) -> str:
         return self._rt.store.put(flat)
@@ -431,6 +451,8 @@ class _RoundState:
     top_id: Optional[str] = None
     top_partial: Optional[PartialReady] = None
     top_crashed: bool = False
+    # first-dispatch stamp per subtree (dispatch → PartialReady spans)
+    first_dispatch: Dict[str, float] = field(default_factory=dict)
 
 
 class RoundDriver:
@@ -445,10 +467,18 @@ class RoundDriver:
 
     def __init__(self, runtime: Optional[Any] = None, *,
                  metrics: Optional[MetricsMap] = None,
-                 redispatch_limit: int = 3):
+                 redispatch_limit: int = 3,
+                 tracer: Optional[Tracer] = None,
+                 trace_sink: Optional[Callable[[RoundTrace], None]] = None):
         self.runtime = runtime
         self.metrics = metrics if metrics is not None else (
             runtime.metrics if runtime is not None else MetricsMap())
+        # event-edge tracing (obs/): on by default — the enabled path is
+        # FATAL-gated < 2% overhead (bench_obs); pass a disabled Tracer
+        # to opt out entirely
+        self.tracer = tracer if tracer is not None else Tracer(enabled=True)
+        self.trace_sink = trace_sink
+        self.last_trace: Optional[RoundTrace] = None
         # crash recovery gives up on a subtree after this many respawns
         # (a deterministic crasher must not hang the round)
         self.redispatch_limit = int(redispatch_limit)
@@ -557,6 +587,8 @@ class RoundDriver:
         sent: Dict[str, List[Tuple[str, float]]] = {}
         partials: Dict[str, PartialReady] = {}
         completed = False
+        tr = self.tracer
+        tok_round = tr.begin("round", owner="driver", round_id=round_id)
         try:
             self._drive(out, rt, round_id=round_id, assignment=assignment,
                         updates=updates, goal=goal, n_elems=n_elems,
@@ -589,10 +621,59 @@ class RoundDriver:
                 self.end_round(round_id)
             else:
                 self.abort_round(round_id)  # retriable: same rid stays live
+            self._finish_trace(tok_round, round_id, out, rt, completed)
         out.cold_starts = rt.stats.get("cold_starts", 0) - stats0["cold_starts"]
         out.warm_starts = rt.stats.get("warm_starts", 0) - stats0["warm_starts"]
         out.workers = rt.worker_count()
         return out
+
+    def _finish_trace(self, tok_round: int, round_id: int,
+                      out: RoundOutcome, rt, completed: bool) -> None:
+        """Close the round span and merge this round's samples — driver
+        spans, runtime-derived worker spans, and whatever per-daemon
+        telemetry the quiesce edge drained — into one RoundTrace."""
+        tr = self.tracer
+        round_span = tr.end(tok_round, n=float(out.accepted))
+        if not tr.enabled:
+            return
+        spans = tr.drain()
+        tr.reset()                      # exception paths leave begins open
+        take_spans = getattr(rt, "take_spans", None)
+        if take_spans is not None:
+            try:
+                spans.extend(take_spans())
+            except Exception:
+                pass
+        telemetry: Dict[str, Dict[str, list]] = {}
+        take_telem = getattr(rt, "take_telemetry", None)
+        if take_telem is not None:
+            # fold-phase samples (partial ship, node-side top fold,
+            # fetch) land AFTER the quiesce drain: one on-demand pull
+            # per round scoops them so each trace is self-contained
+            pull = getattr(rt, "pull_telemetry", None)
+            if pull is not None:
+                try:
+                    pull()
+                except Exception:
+                    pass
+            try:
+                telemetry = take_telem()
+            except Exception:
+                telemetry = {}
+        trace = RoundTrace(
+            round_id=round_id,
+            wall_s=round_span.dur_s if round_span is not None else 0.0,
+            spans=spans, telemetry=telemetry,
+            meta={"completed": completed, "accepted": out.accepted,
+                  "count": out.count, "crashes": out.crashes,
+                  "fold_tier": out.fold_tier, "root_node": out.root_node,
+                  "runtime": getattr(rt, "name", "?")})
+        self.last_trace = trace
+        if self.trace_sink is not None:
+            try:
+                self.trace_sink(trace)
+            except Exception:
+                pass
 
     def _drive(self, out: RoundOutcome, rt, *, round_id, assignment,
                updates, goal, n_elems, top_node, deadline_s,
@@ -605,7 +686,10 @@ class RoundDriver:
                                         topology="controller")
         st = _RoundState(round_id=round_id, n_elems=n_elems, out=out,
                          sent=sent, partials=partials, plan=fold_plan)
+        tr = self.tracer
+        traced = tr.enabled
         # --- SPAWN: one mid per planned fold site ----------------------
+        tok = tr.begin("spawn", owner="driver", round_id=round_id)
         planned = {s.node: s.goal for s in fold_plan.mids}
         mid_ids = {s.node: s.agg_id for s in fold_plan.mids}
         for node, k in planned.items():
@@ -613,6 +697,7 @@ class RoundDriver:
                                 round_id=round_id)
             st.spawn_goals[mid_ids[node]] = k
             sent[mid_ids[node]] = []
+        tr.end(tok, n=float(len(planned)))
 
         dispatched = {node: 0 for node in planned}
         accepted = 0
@@ -629,7 +714,22 @@ class RoundDriver:
                 out.deadline_hit = True
 
         # --- DISPATCH: pump updates until the aggregation goal ---------
-        for node, client_id, flat, weight in updates:
+        # the pump is manually iterated so the two sub-costs the TTA
+        # breakdown needs stay separable: pulling the generator IS the
+        # client's local training; put+deliver is the wire/store edge
+        tok = tr.begin("dispatch", owner="driver", round_id=round_id)
+        train_s = deliver_s = 0.0
+        pulls = delivers = 0
+        it = iter(updates)
+        while True:
+            _t = time.perf_counter() if traced else 0.0
+            try:
+                node, client_id, flat, weight = next(it)
+            except StopIteration:
+                break
+            if traced:
+                train_s += time.perf_counter() - _t
+                pulls += 1
             if deadline is not None and time.perf_counter() > deadline:
                 # budget expired mid-cohort: stop pumping — but the
                 # update already pulled from the generator is real
@@ -643,8 +743,14 @@ class RoundDriver:
                 # nothing planned / subtree given up / node full
                 out.skipped.append((node, client_id, flat, weight))
                 continue
+            _t = time.perf_counter() if traced else 0.0
             key = rt.put_update(flat)
             rt.deliver(agg_id, key, weight, round_id=round_id)
+            if traced:
+                now = time.perf_counter()
+                deliver_s += now - _t
+                delivers += 1
+                st.first_dispatch.setdefault(agg_id, now)
             sent[agg_id].append((key, weight))
             dispatched[node] += 1
             accepted += 1
@@ -655,13 +761,20 @@ class RoundDriver:
             self._absorb(rt.poll_events(0.0), st, draining=False)
             if accepted >= goal:
                 break
+        if traced:
+            tr.point("client_train", train_s, owner="driver",
+                     round_id=round_id, parent=tok, n=float(pulls))
+            tr.point("deliver", deliver_s, owner="driver",
+                     round_id=round_id, parent=tok, n=float(delivers))
         if accepted >= goal:
             self.dispatch(GoalReached(round_id=round_id, goal=goal,
                                       accepted=accepted))
         out.accepted = accepted
         out.dispatched = dict(dispatched)
+        tr.end(tok, n=float(accepted))
 
         # --- COLLECT: close out stragglers, wait for counted subtrees --
+        tok = tr.begin("collect", owner="driver", round_id=round_id)
         counted = {mid_ids[node] for node in planned if dispatched[node]}
         for agg_id in mid_ids.values():
             rt.drain(agg_id)  # no-op if the task already published
@@ -675,9 +788,13 @@ class RoundDriver:
                 fire_deadline()
                 counted = set(partials)  # close with what we have
                 break
-        rt.quiesce()
+        with tr.span("quiesce", owner="driver", round_id=round_id,
+                     parent=tok):
+            rt.quiesce()
+        tr.end(tok, n=float(len(partials)))
 
         # --- FOLD: execute the plan's root site ------------------------
+        tok = tr.begin("fold", owner="driver", round_id=round_id)
         order = sorted(set(partials) & counted)
         if order:
             root = fold_plan.site(fold_plan.root) if fold_plan.root \
@@ -692,6 +809,7 @@ class RoundDriver:
                 self._fold_in_controller(
                     st, rt, sorted(set(partials) & counted),
                     root.node if root is not None else top_node)
+        tr.end(tok, n=float(len(order)))
 
     # ------------------------------------------------------------------
     # root-fold execution (plan interpretation)
@@ -722,14 +840,23 @@ class RoundDriver:
             rt.release_partial(p.key)
             out.exec_s[agg_id] = p.exec_s
         engine.sync(state.acc)
-        sidecar.on_aggregate(len(order), time.perf_counter() - t0)
+        fold_dt = time.perf_counter() - t0
+        sidecar.on_aggregate(len(order), fold_dt)
         out.delta, out.weight = state.result()
         out.count = state.count
         sidecar.on_send(out.delta.nbytes)
         out.fold_tier, out.root_node = "controller", top
+        if self.tracer.enabled:
+            self.tracer.point(
+                "fold.mid", sum(st.partials[a].exec_s for a in order),
+                owner="driver", round_id=st.round_id, n=float(len(order)))
+            self.tracer.point("fold.top", fold_dt, owner=f"top@{top}",
+                              node=top, round_id=st.round_id, t0=t0,
+                              n=float(len(order)))
         self.dispatch(TopFolded(
             round_id=st.round_id, agg_id=f"top@{top}", node=top,
-            tier="controller", count=out.count, weight=out.weight))
+            tier="controller", count=out.count, weight=out.weight,
+            exec_s=fold_dt))
 
     def _fold_on_runtime(self, st: "_RoundState", rt, order: List[str],
                          root: FoldSite) -> bool:
@@ -828,9 +955,19 @@ class RoundDriver:
                 out.fold_tier, out.root_node = root.tier, root_node
                 # the end-of-round sweep reclaims the top's object too
                 st.partials[top_id] = p
+                if self.tracer.enabled:
+                    self.tracer.point(
+                        "fold.mid",
+                        sum(st.partials[a].exec_s for a in live),
+                        owner="driver", round_id=st.round_id,
+                        n=float(len(live)))
+                    self.tracer.point(
+                        "fold.top", p.exec_s, owner=top_id,
+                        node=root_node, round_id=st.round_id,
+                        worker=p.worker, n=float(len(live)))
                 self.dispatch(TopFolded(
                     round_id=st.round_id, agg_id=top_id, node=root_node,
-                    tier=root.tier, count=c, weight=w))
+                    tier=root.tier, count=c, weight=w, exec_s=p.exec_s))
                 return True
             if st.deadline is not None \
                     and time.perf_counter() > st.deadline:
@@ -865,6 +1002,14 @@ class RoundDriver:
                     rt.discard_partial(ev.key)
                     continue
                 st.partials[ev.agg_id] = ev
+                if self.tracer.enabled:
+                    t0d = st.first_dispatch.get(ev.agg_id)
+                    if t0d is not None:
+                        # dispatch → publish latency for this subtree
+                        self.tracer.point(
+                            "subtree", time.perf_counter() - t0d,
+                            owner=ev.agg_id, round_id=st.round_id,
+                            t0=t0d, worker=ev.worker, n=float(ev.count))
                 self.dispatch(ev)
             elif isinstance(ev, WorkerCrashed):
                 if not self.dispatch(ev):

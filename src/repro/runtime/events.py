@@ -86,6 +86,7 @@ class PartialShipped(RoundEvent):
     src: str = ""          # shipping node
     dst: str = ""          # root node
     nbytes: int = 0
+    wire_s: float = 0.0    # measured serialize+send wall on the src daemon
 
 
 @dataclass(frozen=True)
@@ -97,6 +98,7 @@ class TopFolded(RoundEvent):
     tier: str = ""         # 'controller' | 'worker' | 'node'
     count: int = 0         # updates folded end-to-end
     weight: float = 0.0    # Σ c over the round
+    exec_s: float = 0.0    # measured root fold exec — feeds the RC model
 
 
 @dataclass(frozen=True)

@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Set
 
 import numpy as np
 
+from repro.core.sidecar import MetricsMap
 from repro.runtime.driver import make_runtime
 from repro.runtime.events import (
     PartialReady,
@@ -103,8 +104,16 @@ class NodeDaemon:
         # transient disconnect" from "fresh process, empty store".
         self.epoch = time.time_ns()
         self.faults = fault_plan
-        self.rt = make_runtime(runtime, agg_engine=agg_engine)
-        self.server = FrameServer(listen, faults=fault_plan)
+        # the per-daemon MetricsMap — the paper's in-kernel metric map,
+        # now actually living in the remote process: the local runtime's
+        # sidecars, every outbound frame's per-kind timing (FrameConn),
+        # and the ship/fetch/land samples below all land here, and the
+        # controller drains it over the wire (quiesce / telemetry frame)
+        self.metrics = MetricsMap()
+        self.rt = make_runtime(runtime, agg_engine=agg_engine,
+                               metrics=self.metrics)
+        self.server = FrameServer(listen, faults=fault_plan,
+                                  metrics=self.metrics)
         self.addr = self.server.addr
         self._controllers: List[FrameConn] = []
         # node-top state: open root folds buffering their inputs until
@@ -227,7 +236,8 @@ class NodeDaemon:
         if conn is not None and conn.alive:
             return conn
         conn = connect(addr, timeout=timeout, peer=addr,
-                       compress=self.compress, faults=self.faults)
+                       compress=self.compress, faults=self.faults,
+                       metrics=self.metrics)
         self._peers[addr] = conn
         return conn
 
@@ -237,6 +247,7 @@ class NodeDaemon:
         reaches the *controller*, never misread as a controller
         death)."""
         key = m["key"]
+        t_ship = time.perf_counter()
         view = self.rt.get_partial(key)
         arr = np.ascontiguousarray(view)
         meta = {"agg_id": m["agg_id"], "key": key,
@@ -264,11 +275,18 @@ class NodeDaemon:
                             f"peer {addr} unreachable: {e}") from e
         finally:
             self.rt.release_partial(key)
+        # wire_s is the whole daemon-side ship wall (serialize + redial
+        # backoff + send): what the src node's uplink was busy for —
+        # the sample the controller's RC model prices as ship load
+        wire_s = time.perf_counter() - t_ship
+        self.metrics.update("netd", "ship_s", wire_s)
+        self.metrics.update("netd", "ship_bytes", float(arr.nbytes))
         self.stats["partials_shipped"] += 1
         self.stats["ship_tx_bytes"] += arr.nbytes
         self._push_event_obj(PartialShipped(
             round_id=int(m["round_id"]), agg_id=m["agg_id"], key=key,
-            src=self.node, dst=m.get("dst", ""), nbytes=arr.nbytes))
+            src=self.node, dst=m.get("dst", ""), nbytes=arr.nbytes,
+            wire_s=wire_s))
 
     def _top_in(self, agg_id: str, key: str, weight: float, count: int,
                 seq: int, round_id: int) -> None:
@@ -406,6 +424,7 @@ class NodeDaemon:
         elif kind == "fetch":
             # the one model-size payload that crosses the wire per node
             # per round: the sealed raw partial Σ c·u
+            t_fetch = time.perf_counter()
             view = self.rt.get_partial(m["key"])
             arr = np.ascontiguousarray(view)
             conn.send("object", {
@@ -415,6 +434,8 @@ class NodeDaemon:
             self.rt.release_partial(m["key"])
             self._published.discard(m["key"])
             self.stats["partials_served"] += 1
+            self.metrics.update("netd", "fetch_serve_s",
+                                time.perf_counter() - t_fetch)
         elif kind == "discard_partial":
             self._published.discard(m["key"])
             try:
@@ -436,6 +457,18 @@ class NodeDaemon:
                           if isinstance(v, (int, float))},
                 "workers": self.rt.worker_count(),
                 "daemon": dict(self.stats),
+                # the LIFL-agent drain: the whole per-daemon MetricsMap
+                # rides the reply the controller already waits for — no
+                # extra round trip, and the map resets for next round
+                "telemetry": self.metrics.drain_series(),
+            })
+        elif kind == "telemetry":
+            # on-demand drain (the agent's pull outside quiesce):
+            # destructive like the quiesce drain, so samples are never
+            # double-counted across pulls
+            conn.send("telemetry_map", {
+                "node": self.node,
+                "telemetry": self.metrics.drain_series(),
             })
         elif kind == "recycle":
             self.rt.recycle_engines()

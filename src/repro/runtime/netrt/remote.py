@@ -67,7 +67,7 @@ class _Node:
     """Controller-side state for one netd peer."""
 
     __slots__ = ("name", "addr", "conn", "capacity", "workers", "alive",
-                 "delivered", "stats", "runtime_name", "epoch")
+                 "delivered", "stats", "runtime_name", "epoch", "telemetry")
 
     def __init__(self, name: str, addr: str, conn: FrameConn,
                  capacity: float, runtime_name: str, epoch: int = 0):
@@ -81,6 +81,9 @@ class _Node:
         self.alive = True
         self.delivered: Set[str] = set()   # keys resident in its store
         self.stats: Dict[str, float] = {}  # last quiesced totals
+        # accumulated drained telemetry ("owner/metric" → [sum, count]);
+        # emptied by RemoteRuntime.take_telemetry (the trace grab)
+        self.telemetry: Dict[str, List[float]] = {}
 
 
 class RemoteRuntime(_WarmEngineMixin):
@@ -505,12 +508,77 @@ class RemoteRuntime(_WarmEngineMixin):
                 # so bench_net can bound inter-node partial shipping
                 node.stats.update(reply.meta.get("daemon", {}))
                 node.workers = int(reply.meta.get("workers", 0))
+                # the LIFL-agent drain: the daemon's MetricsMap rides
+                # the quiesced reply (no extra round trip) — merge it
+                self._absorb_telemetry(node,
+                                       reply.meta.get("telemetry") or {})
             except PeerDead:
                 self._pending.extend(self._lose_node(node))
         self._open.clear()
         # a peer death during the barrier queued fresh events: apply
         # the same round-scoped filtering to those too
         self._flush_round_scoped_pending()
+
+    # ------------------------------------------------------------------
+    # telemetry (the controller side of the LIFL agent)
+    # ------------------------------------------------------------------
+    def _absorb_telemetry(self, node: _Node,
+                          series: Dict[str, List[float]]) -> None:
+        """One daemon drain landed: accumulate it on the node record
+        (for the round trace) and merge it into the controller's
+        MetricsMap under node-prefixed owners, counts intact."""
+        if not series:
+            return
+        acc = node.telemetry
+        for k, sc in series.items():
+            try:
+                s, c = float(sc[0]), int(sc[1])
+            except (TypeError, ValueError, IndexError):
+                continue
+            cur = acc.setdefault(k, [0.0, 0])
+            cur[0] += s
+            cur[1] += c
+        self.metrics.absorb_series(series, prefix=f"{node.name}.")
+
+    def take_telemetry(self) -> Dict[str, Dict[str, List[float]]]:
+        """Return-and-clear the accumulated per-node telemetry — the
+        driver grabs this when it seals a :class:`RoundTrace`, so each
+        round's trace carries exactly the samples drained since the
+        previous grab."""
+        out = {n.name: dict(n.telemetry)
+               for n in self._nodes.values() if n.telemetry}
+        for n in self._nodes.values():
+            n.telemetry = {}
+        return out
+
+    def pull_telemetry(self, node: Optional[str] = None,
+                       timeout: float = 5.0
+                       ) -> Dict[str, Dict[str, List[float]]]:
+        """On-demand drain (outside the quiesce barrier): ask each live
+        daemon — or just ``node`` — for its MetricsMap via the
+        ``telemetry`` frame.  The drained series are merged exactly
+        like a quiesce drain and also returned per node."""
+        peers = [self._nodes[node]] if node else self._alive()
+        pulled: Dict[str, Dict[str, List[float]]] = {}
+        for n in peers:
+            if not n.alive or not self._send(n, "telemetry", {}):
+                continue
+            stash: List[Frame] = []
+            try:
+                reply = n.conn.recv_expect(("telemetry_map",), timeout,
+                                           stash=stash)
+            except PeerDead:
+                self._pending.extend(self._lose_node(n))
+                continue
+            finally:
+                for f in stash:
+                    ev = self._absorb_frame(n, f)
+                    if ev is not None:
+                        self._pending.append(ev)
+            series = reply.meta.get("telemetry") or {}
+            self._absorb_telemetry(n, series)
+            pulled[n.name] = series
+        return pulled
 
     def _flush_round_scoped_pending(self) -> None:
         """Drop queued round-scoped leftovers at the inter-round

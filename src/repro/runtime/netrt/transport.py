@@ -191,7 +191,7 @@ class FrameConn:
 
     def __init__(self, sock: socket.socket, peer: str = "?",
                  send_timeout: float = 30.0, compress: Any = 0,
-                 faults: Any = None):
+                 faults: Any = None, metrics: Any = None):
         sock.setblocking(True)
         try:  # latency matters more than throughput for 64-byte frames
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -208,6 +208,11 @@ class FrameConn:
         # deterministic fault injection (faults.FaultPlan): consulted on
         # every outbound frame; None (production) costs one attr check
         self.faults = faults
+        # optional core.sidecar.MetricsMap: when set, every outbound
+        # frame lands a per-kind serialize+compress+write timing sample
+        # (owner "wire") — the SKMSG-hook analogue of the obs layer,
+        # fired only on the send edge; None costs one attr check
+        self.metrics = metrics
         self._rbuf = bytearray()
         self.tx_bytes = 0
         self.rx_bytes = 0
@@ -256,6 +261,7 @@ class FrameConn:
                 raise self._dead("fault-injected reset")
             if action == "delay":
                 time.sleep(delay)
+        t_send = time.perf_counter() if self.metrics is not None else 0.0
         body = dict(meta or {})
         body["kind"] = kind
         mv = memoryview(blob).cast("B") if not isinstance(blob, bytes) \
@@ -295,6 +301,10 @@ class FrameConn:
         self.tx_by_kind[kind] = self.tx_by_kind.get(kind, 0) + n
         raw_n = len(head) + len(js) + raw_blob
         self.tx_raw_by_kind[kind] = self.tx_raw_by_kind.get(kind, 0) + raw_n
+        if self.metrics is not None:
+            self.metrics.update("wire", f"tx_{kind}_s",
+                                time.perf_counter() - t_send)
+            self.metrics.update("wire", f"tx_{kind}_bytes", float(n))
 
     # ------------------------------------------------------------------
     def _parse_one(self) -> Optional[Frame]:
@@ -389,10 +399,12 @@ class FrameServer:
     ``poll`` returns ``(conn, frame)`` pairs; a dying connection yields
     one final ``(conn, None)`` so the owner can unregister it."""
 
-    def __init__(self, addr: str, backlog: int = 16, faults: Any = None):
+    def __init__(self, addr: str, backlog: int = 16, faults: Any = None,
+                 metrics: Any = None):
         family, sockaddr = parse_addr(addr)
         self._family = family
         self.faults = faults   # inherited by every accepted FrameConn
+        self.metrics = metrics  # likewise (per-kind tx timings)
         sock = socket.socket(family, socket.SOCK_STREAM)
         if family == socket.AF_INET:
             sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -428,7 +440,8 @@ class FrameServer:
                 peer = format_addr(self._family, peer_addr) \
                     if self._family == socket.AF_INET else "unix-peer"
                 self.conns.append(FrameConn(raw, peer=peer,
-                                            faults=self.faults))
+                                            faults=self.faults,
+                                            metrics=self.metrics))
             else:
                 self._pump(sock, out, readable=True)
         return out
@@ -465,7 +478,8 @@ class FrameServer:
 def connect(addr: str, *, timeout: float = 10.0,
             retry_interval: float = 0.05, peer: Optional[str] = None,
             compress: Any = 0, faults: Any = None,
-            backoff: Optional[Backoff] = None) -> FrameConn:
+            backoff: Optional[Backoff] = None,
+            metrics: Any = None) -> FrameConn:
     """Connect to a frame server, retrying until ``timeout`` — a
     controller may race its daemons' bind.  Retries follow the shared
     jittered-exponential :class:`Backoff` schedule (``retry_interval``
@@ -482,7 +496,7 @@ def connect(addr: str, *, timeout: float = 10.0,
             sock.settimeout(max(0.1, deadline - time.perf_counter()))
             sock.connect(sockaddr)
             return FrameConn(sock, peer=peer or addr, compress=compress,
-                             faults=faults)
+                             faults=faults, metrics=metrics)
         except (ConnectionError, FileNotFoundError, socket.timeout,
                 OSError) as e:
             sock.close()

@@ -84,6 +84,8 @@ class _Worker:
     ready_ts: float = 0.0
     submit_ts: float = 0.0
     ack_latency_s: Optional[float] = None
+    ack_ts: float = 0.0          # pickup ts of the open task (worker clock)
+    wait_s: float = 0.0          # TELEM ring-wait for the open task
     cold_started: bool = False   # this task paid a fork
     tasks_done: int = 0
 
@@ -133,6 +135,12 @@ class ShmRuntime:
         # same-scan crashes are raised one per call, not collapsed
         self._results: List[PartialResult] = []
         self._crashes: List[WorkerCrash] = []
+        # worker-side span dicts (worker.task = ACK→PARTIAL on the
+        # worker's own clock, worker.wait = TELEM's ring-wait), drained
+        # by take_spans() into the round trace; bounded so an untraced
+        # caller never accumulates them without limit
+        self._spans: List[Dict] = []
+        self._spans_cap = 4096
         self._closed = False
         atexit.register(self._atexit)
 
@@ -278,11 +286,18 @@ class ShmRuntime:
                     if rec.flags != w.seq:
                         continue  # stale ack from a force-released task
                     w.ack_latency_s = rec.ts - w.submit_ts
+                    w.ack_ts = rec.ts
                     kind = "cold" if w.cold_started else "warm"
                     self.stats[f"{kind}_latency_s"] = w.ack_latency_s
                     self.metrics.update(
                         w.agg_id or f"worker{w.idx}",
                         f"dispatch_{kind}_s", w.ack_latency_s)
+                elif rec.kind == RecordKind.TELEM:
+                    if rec.flags != w.seq:
+                        continue  # stale telemetry, like a stale ack
+                    w.wait_s = rec.num_samples
+                    self.metrics.update(w.agg_id or f"worker{w.idx}",
+                                        "ring_wait_s", rec.num_samples)
                 elif rec.kind == RecordKind.PARTIAL:
                     if rec.flags != w.seq:
                         # a force-released task's late partial: reclaim
@@ -398,11 +413,38 @@ class ShmRuntime:
             count=int(rec.a), exec_s=exec_s, round_id=rec.round_id,
             worker=w.idx,
         )
+        # worker spans, derived entirely from records already in
+        # flight: task = pickup→publish on the worker's own clock,
+        # wait = the TELEM ring-starvation total inside that window
+        if w.ack_ts > 0.0 and rec.ts > w.ack_ts:
+            self._add_span({
+                "kind": "worker.task", "owner": agg_id,
+                "round_id": rec.round_id, "t0": w.ack_ts,
+                "dur_s": rec.ts - w.ack_ts, "worker": w.idx,
+                "n": float(rec.a)})
+        if w.wait_s > 0.0:
+            self._add_span({
+                "kind": "worker.wait", "owner": agg_id,
+                "round_id": rec.round_id, "t0": w.ack_ts,
+                "dur_s": w.wait_s, "worker": w.idx, "n": float(rec.a)})
+        w.ack_ts = 0.0
+        w.wait_s = 0.0
         # task complete: route entry dies, worker awaits release/re-task
         self._route.pop(agg_id, None)
         w.agg_id = None
         w.state = "idle"
         return result
+
+    def _add_span(self, d: Dict) -> None:
+        if len(self._spans) >= self._spans_cap:
+            del self._spans[: self._spans_cap // 2]
+        self._spans.append(d)
+
+    def take_spans(self) -> List[Dict]:
+        """Return-and-clear the worker span dicts gathered since the
+        last take (the runtime wrapper turns them into Span objects)."""
+        out, self._spans = self._spans, []
+        return out
 
     def release(self, agg_id: str) -> None:
         """Explicitly park a worker warm (no-op if its task finished —

@@ -38,6 +38,11 @@ class RecordKind(IntEnum):
     PARTIAL_IN = 10  # dispatcher → worker: fold a published raw partial
                   #   Σ c·u (root fold): key=partial object,
                   #   num_samples=Σ weight, a=subtree update count
+    TELEM = 11    # worker → dispatcher: task telemetry at publish time
+                  #   (flags=seq, num_samples=ring-wait seconds while
+                  #   the task was open, ts=publish ts, a=count folded)
+                  #   — rides the same result ring, fired only on the
+                  #   publish edge: no polling, no extra syscalls
 
 
 @dataclass

@@ -47,6 +47,7 @@ class _OpenTask:
     state: FedAvgState
     folded: int = 0
     exec_ns: int = 0
+    wait_ns: int = 0  # blocked-on-ring time while this task was open
 
 
 def worker_main(widx: int, task_ring: SpscRing, result_ring: SpscRing,
@@ -61,6 +62,14 @@ def worker_main(widx: int, task_ring: SpscRing, result_ring: SpscRing,
 
     def publish(t: _OpenTask) -> str:
         key = engine.publish()
+        # telemetry rides the publish edge (event-driven: zero cost
+        # while parked) and goes up FIRST — the PARTIAL closes the task
+        # dispatcher-side, so anything after it loses its agg_id
+        result_ring.push(Record(
+            kind=RecordKind.TELEM, key=key, round_id=t.round_id,
+            flags=t.seq, num_samples=t.wait_ns / 1e9,
+            ts=time.perf_counter(), a=t.state.count,
+        ).pack(), timeout=5.0)
         # a = updates folded end-to-end: equals t.folded for a mid,
         # and the subtree total for a root task absorbing partials
         result_ring.push(Record(
@@ -94,7 +103,12 @@ def worker_main(widx: int, task_ring: SpscRing, result_ring: SpscRing,
         if pending:
             rec = pending.popleft()
         else:
+            # with a task open, blocked-on-ring is starvation the
+            # dispatcher should see (worker.wait); parked-idle is not
+            t_wait = time.perf_counter_ns() if task is not None else 0
             raw = task_ring.pop(timeout=IDLE_TIMEOUT_S)
+            if task is not None:
+                task.wait_ns += time.perf_counter_ns() - t_wait
             if raw is None:
                 if os.getppid() != parent:
                     # orphaned: the dispatcher died without sending

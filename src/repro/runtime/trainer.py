@@ -43,12 +43,15 @@ from repro.core.reuse import ExecutableCache
 from repro.fl.round import AggregationConfig, build_train_step
 from repro.fl.server import apply_server_opt, init_server_state
 from repro.optim import sgd_apply
+from repro.obs.trace import RoundTrace, write_trace
 from repro.runtime.driver import RoundDriver, make_runtime
 from repro.runtime.events import (
     NodeJoined,
     NodeLost,
     NodeRejoined,
     PartialReady,
+    PartialShipped,
+    TopFolded,
 )
 
 
@@ -122,6 +125,7 @@ class FederatedTrainer:
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 5,
         seed: int = 0,
+        trace_path: Optional[str] = None,
     ):
         self.model = model
         self.params = params
@@ -162,6 +166,13 @@ class FederatedTrainer:
         # externals popped by the current round's cohort generator —
         # the requeue pass matches them against RoundOutcome.skipped
         self._popped_external: List[Tuple[str, np.ndarray, float]] = []
+        # per-round traces (obs/): the driver's trace sink lands here;
+        # bounded so a long job can't grow without limit.  trace_path
+        # additionally appends each round as a JSONL record (flushed
+        # per line — post-mortems survive a mid-round kill).
+        self.trace_path = trace_path
+        self.traces: "OrderedDict[int, RoundTrace]" = OrderedDict()
+        self._traces_cap = 64
         self._runtime = None          # lazy: persists across rounds (warm)
         self._driver: Optional[RoundDriver] = None
         self._closed = False
@@ -177,15 +188,38 @@ class FederatedTrainer:
         if self._driver is None:
             if self._closed:
                 raise RuntimeError("trainer is closed")
-            self._driver = RoundDriver(metrics=self.metrics)
+            self._driver = RoundDriver(metrics=self.metrics,
+                                       trace_sink=self._sink_trace)
             # node churn reshapes the next plan, and every subtree's
             # PartialReady feeds its node's RC capacity model: the
-            # coordinator is an ordinary event handler on the driver
+            # coordinator is an ordinary event handler on the driver.
+            # TopFolded prices the root fold and PartialShipped the
+            # uplink — the obs-stamped costs close the feedback loop.
             self._driver.on(NodeJoined, self.coordinator.handle_event)
             self._driver.on(NodeLost, self.coordinator.handle_event)
             self._driver.on(NodeRejoined, self.coordinator.handle_event)
             self._driver.on(PartialReady, self.coordinator.handle_event)
+            self._driver.on(TopFolded, self.coordinator.handle_event)
+            self._driver.on(PartialShipped, self.coordinator.handle_event)
         return self._driver
+
+    def _sink_trace(self, trace: RoundTrace) -> None:
+        self.traces[trace.round_id] = trace
+        while len(self.traces) > self._traces_cap:
+            self.traces.popitem(last=False)
+        if self.trace_path:
+            try:
+                write_trace(self.trace_path, trace)
+            except OSError:
+                pass  # a full/vanished disk must not fail the round
+
+    def trace(self, round_id: Optional[int] = None) -> Optional[RoundTrace]:
+        """The per-round trace (latest round when ``round_id`` is None)."""
+        if round_id is None:
+            if not self.traces:
+                return None
+            round_id = next(reversed(self.traces))
+        return self.traces.get(round_id)
 
     def _ensure_runtime(self):
         if self._runtime is None:

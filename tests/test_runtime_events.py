@@ -49,9 +49,9 @@ _SAMPLES = [
     PartialReady(round_id=4, agg_id="mid@n0", key="ab" * 8, weight=7.0,
                  count=3, exec_s=0.125, worker=2),
     PartialShipped(round_id=4, agg_id="top@n1", key="cd" * 8, src="n0",
-                   dst="n1", nbytes=4096),
+                   dst="n1", nbytes=4096, wire_s=0.004),
     TopFolded(round_id=4, agg_id="top@n1", node="n1", tier="node",
-              count=8, weight=21.0),
+              count=8, weight=21.0, exec_s=0.0625),
     GoalReached(round_id=5, goal=8, accepted=8),
     WorkerCrashed(round_id=6, agg_id="mid@n2", worker=1, exitcode=-9),
     NodeJoined(round_id=None, node="n9", capacity=25.0),
