@@ -94,12 +94,23 @@ def _net_round(drv, rt, nodes: List[str], ups, ws, N: int, round_id: int,
     return out.delta, wall, disp[0] / max(disp[1], 1)
 
 
+def _shm_lifl_count() -> int:
+    """Live ``lifl*`` segments in /dev/shm — the leak-check probe."""
+    try:
+        return sum(1 for n in os.listdir("/dev/shm")
+                   if n.startswith("lifl"))
+    except OSError:
+        return 0
+
+
 def run(fast: bool = True) -> List[Dict]:
     from repro.core.placement import partial_traffic_bound
     from repro.runtime.driver import InProcRuntime, RoundDriver
-    from repro.runtime.netrt import RemoteRuntime, spawn_local_daemon
+    from repro.runtime.netrt import (RemoteRuntime, reap_local_daemon,
+                                     spawn_local_daemon)
 
     node_runtime = "shmproc" if os.path.isdir("/dev/shm") else "inproc"
+    shm0 = _shm_lifl_count()               # pre-existing segments
     N = (1 << 19) if fast else (11 << 20)   # 2 MB / 44 MB fp32 updates
     W = 4                                   # update groups (2 per node)
     model_mb = 4 * N / 1e6
@@ -173,7 +184,15 @@ def run(fast: bool = True) -> List[Dict]:
         # the restarted daemon is re-adopted — epoch bump — in time to
         # serve the following round.  bitexact gated FATAL by run.py. ---
         def _restart_bn1():
-            procs[1].kill()
+            # SIGKILL the whole group (daemon + its forked shm
+            # workers), but do NOT sweep its segments here — that is
+            # the re-adoption sweep's job (epoch bump in _adopt), which
+            # this round exercises
+            import signal as _signal
+            try:
+                os.killpg(procs[1].pid, _signal.SIGKILL)
+            except (ProcessLookupError, PermissionError):
+                procs[1].kill()
             procs[1].wait(timeout=10)
             p2, _ = spawn_local_daemon(nodes[1], runtime=node_runtime,
                                        listen=addrs[1],
@@ -200,6 +219,7 @@ def run(fast: bool = True) -> List[Dict]:
             drv, rt, nodes, ups, ws, N, round_id=3 + 2 * n_warm)
         bit_rec = int(np.array_equal(d_post, ref)) & rec_close
         readopted = sum(1 for n in rt._nodes.values() if n.alive)
+        swept_readopt = rt._local.get("swept_segments", 0)
     finally:
         if rt is not None:
             try:
@@ -207,14 +227,11 @@ def run(fast: bool = True) -> List[Dict]:
             except Exception:
                 pass
             rt.close()
+        # killpg + /dev/shm sweep per daemon: a SIGKILLed netd's
+        # segments must not outlive the bench (the leak this row gates)
         for p in procs:
-            if p.poll() is None:
-                p.terminate()
-        for p in procs:
-            try:
-                p.wait(timeout=10)
-            except subprocess.TimeoutExpired:
-                p.kill()
+            reap_local_daemon(p)
+    leaked_segs = max(0, _shm_lifl_count() - shm0)
 
     def _tot(mark, field):
         return sum(v[field] for v in mark.values())
@@ -290,6 +307,8 @@ def run(fast: bool = True) -> List[Dict]:
                     f"rec_close={rec_close};"
                     f"alive_after={readopted};"
                     f"readopt_s={readopt_s:.2f};"
+                    f"leaked_segs={leaked_segs};"
+                    f"swept_readopt={swept_readopt};"
                     f"post_restart_round_us={wall_post * 1e6:.0f};"
                     f"recovery_over_warm="
                     f"{wall_rec / np.mean(walls):.2f}x"),

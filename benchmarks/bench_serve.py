@@ -1,0 +1,163 @@
+"""Continuous-aggregation serving: ingest latency, admission shed,
+rolling-round overlap, and the bit-exactness seam.
+
+Two rows:
+
+* ``serve/ingest`` — sustained ``submit`` pressure from pusher threads
+  against a live 2-job rolling service: p50/p99 per-call gateway
+  latency, sustained admitted updates/s, shed fraction (admission
+  pushing back is *by design* — the row records how often).
+* ``serve/rolling`` — the determinism contract under load: every round
+  the service closed is replayed through the sequential library
+  ``run_round`` path on a fresh runtime, and the deltas must be
+  bit-identical (``bitexact=1`` — FATAL gate in run.py); the rolling
+  seam must actually overlap round windows (``pipeline_overlap > 0``,
+  the second FATAL gate).  Rolling reorders time, never the fold.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ClientInfo, NodeState, RoundConfig
+from repro.runtime.driver import InProcRuntime, RoundDriver
+from repro.serve import (
+    AdmissionPolicy, AggregationService, DeadlinePolicy, MinCohortIdleGap,
+)
+
+N_ELEMS = 4096
+
+
+class _Model:
+    def loss(self, params, batch):  # external-update-only jobs
+        raise NotImplementedError("serve bench never trains locally")
+
+
+def _flat_for(cid: str) -> np.ndarray:
+    rng = np.random.default_rng(zlib.crc32(cid.encode()))
+    return rng.standard_normal(N_ELEMS).astype(np.float32)
+
+
+class _CloseAny:
+    def __init__(self, *pols):
+        self.pols = pols
+
+    def should_close(self, **kw):
+        return any(p.should_close(**kw) for p in self.pols)
+
+
+def _mk_service(goal: int) -> AggregationService:
+    import jax.numpy as jnp
+
+    nodes = {f"node{i}": NodeState(node=f"node{i}", max_capacity=20.0)
+             for i in range(2)}
+    svc = AggregationService(
+        nodes, runtime="inproc",
+        admission=AdmissionPolicy(max_queue=64, job_quota=32,
+                                  retry_base_s=0.005, retry_cap_s=0.05))
+    params = {"w": jnp.zeros((N_ELEMS,), jnp.float32)}
+    for job, weight in (("alpha", 2.0), ("beta", 1.0)):
+        svc.add_job(job, _Model(), params,
+                    [ClientInfo(client_id=f"{job}-r{i}", num_samples=10)
+                     for i in range(2 * goal)],
+                    weight=weight,
+                    round_cfg=RoundConfig(aggregation_goal=goal))
+    return svc
+
+
+def run(fast: bool = True) -> List[Dict]:
+    goal = 4 if fast else 8
+    per_job = 6 if fast else 12
+    svc = _mk_service(goal)
+
+    lat_lock = threading.Lock()
+    lats: List[float] = []
+    counts = {"admitted": 0, "tries": 0}
+    stop = threading.Event()
+
+    def pusher(job: str) -> None:
+        k = 0
+        while not stop.is_set():
+            cid = f"{job}-u{k}"
+            t0 = time.perf_counter()
+            v = svc.submit(job, cid, _flat_for(cid),
+                           1.0 + k % 3, submission_id=cid)
+            dt = time.perf_counter() - t0
+            with lat_lock:
+                lats.append(dt)
+                counts["tries"] += 1
+                counts["admitted"] += int(v["admitted"])
+            if v["admitted"]:
+                k += 1
+            else:
+                time.sleep(v["retry_after_s"])
+
+    threads = [threading.Thread(target=pusher, args=(j,), daemon=True)
+               for j in ("alpha", "beta")]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    try:
+        recs = svc.run_rounds(
+            {"alpha": per_job, "beta": per_job},
+            policy=_CloseAny(
+                MinCohortIdleGap(min_cohort=max(1, goal // 2),
+                                 idle_gap_s=0.02),
+                DeadlinePolicy(deadline_s=30.0)))
+    finally:
+        stop.set()
+        for th in threads:
+            th.join(timeout=10)
+    wall = time.perf_counter() - t0
+    overlap = svc.pipeline_overlap()
+    svc.close()
+
+    # --- the determinism seam: replay each closed cohort sequentially
+    bitexact = 1
+    for rec in recs:
+        if not rec["cohort"]:
+            if rec["outcome"].delta is not None:
+                bitexact = 0
+            continue
+        rt = InProcRuntime()
+        out = RoundDriver(rt).run_round(
+            round_id=rec["ticket"], assignment=rec["assignment"],
+            updates=[(node, cid, _flat_for(cid), w)
+                     for node, cid, w in rec["cohort"]],
+            goal=len(rec["cohort"]), n_elems=N_ELEMS,
+            top_node=rec["top_node"])
+        rt.close()
+        if not np.array_equal(np.asarray(out.delta),
+                              np.asarray(rec["outcome"].delta)):
+            bitexact = 0
+
+    ls = np.sort(np.asarray(lats)) * 1e6
+    p50 = float(np.percentile(ls, 50)) if len(ls) else 0.0
+    p99 = float(np.percentile(ls, 99)) if len(ls) else 0.0
+    shed_frac = 1.0 - counts["admitted"] / max(1, counts["tries"])
+    folded = sum(len(r["cohort"]) for r in recs)
+
+    return [
+        {
+            "bench": "serve",
+            "case": "ingest",
+            "us_per_call": p50,
+            "derived": (f"p50_us={p50:.1f};p99_us={p99:.1f};"
+                        f"admitted_per_s={counts['admitted'] / wall:.0f};"
+                        f"shed_frac={shed_frac:.3f};"
+                        f"submits={counts['tries']}"),
+        },
+        {
+            "bench": "serve",
+            "case": "rolling",
+            "us_per_call": wall / max(1, len(recs)) * 1e6,
+            "derived": (f"bitexact={bitexact};"
+                        f"pipeline_overlap={overlap:.3f};"
+                        f"rounds={len(recs)};folded={folded};"
+                        f"jobs=2;goal={goal}"),
+        },
+    ]

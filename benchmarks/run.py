@@ -19,7 +19,7 @@ import time
 
 # suites whose rows land in the --json perf-trajectory file
 JSON_SUITES = ("agg_kernel", "dataplane_fig7", "shmrt", "control_overhead",
-               "net", "obs")
+               "net", "obs", "serve")
 
 # PR-1 acceptance floor: blocked fold ≥ 2× naive.  A regression here
 # silently rots every throughput claim downstream, so the harness fails
@@ -134,6 +134,50 @@ def _check_obs_overhead_gate(rows) -> list:
     return fails
 
 
+def _check_serve_gate(rows) -> list:
+    """PR-8 acceptance gates: the continuous service must stay on the
+    library's arithmetic — every rolling round bit-identical to its
+    cohort replayed sequentially (``bitexact=1``) — and the rolling
+    seam must actually overlap round windows (``pipeline_overlap > 0``;
+    0 means rounds ran strictly sequentially and the second in-flight
+    round never opened)."""
+    import re
+
+    fails = []
+    for r in rows:
+        if r["bench"] != "serve" or r["case"] != "rolling":
+            continue
+        b = re.search(r"bitexact=(\d)", r["derived"])
+        if b and not _stamp(r, "serve_bitexact", b.group(1) == "1"):
+            fails.append(
+                "FATAL: rolling rounds drifted from the sequential "
+                f"run_round path (row {r['case']!r}; see ROADMAP.md)")
+        m = re.search(r"pipeline_overlap=([\d.]+)", r["derived"])
+        if m and not _stamp(r, "serve_overlap", float(m.group(1)) > 0.0):
+            fails.append(
+                "FATAL: pipeline_overlap=0 — round N+1 never opened "
+                f"during round N's fold (row {r['case']!r})")
+    return fails
+
+
+def _check_net_leak_gate(rows) -> list:
+    """PR-8 hygiene gate: the recovery row's /dev/shm leak check —
+    after SIGKILL + re-adoption + reap, zero ``lifl*`` segments may
+    outlive the bench (``leaked_segs=0``)."""
+    import re
+
+    fails = []
+    for r in rows:
+        if r["bench"] != "net" or "leaked_segs" not in r["derived"]:
+            continue
+        m = re.search(r"leaked_segs=(\d+)", r["derived"])
+        if m and not _stamp(r, "net_shm_leak", m.group(1) == "0"):
+            fails.append(
+                f"FATAL: /dev/shm leak — {m.group(1)} lifl segment(s) "
+                f"survived daemon SIGKILL + reap (row {r['case']!r})")
+    return fails
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -158,6 +202,7 @@ def main() -> None:
         bench_obs,
         bench_orchestration,
         bench_queuing,
+        bench_serve,
         bench_shmrt,
         bench_tta,
     )
@@ -172,6 +217,7 @@ def main() -> None:
         "shmrt": bench_shmrt.run,
         "net": bench_net.run,
         "obs": bench_obs.run,
+        "serve": bench_serve.run,
         "tta_fig9": bench_tta.run,
     }
     if args.only:
@@ -180,8 +226,10 @@ def main() -> None:
     gate_checks = {
         "agg_kernel": _check_engine_fold_floor,
         "control_overhead": _check_driver_dispatch_gate,
-        "net": _check_net_traffic_gate,
+        "net": lambda rows: (_check_net_traffic_gate(rows)
+                             + _check_net_leak_gate(rows)),
         "obs": _check_obs_overhead_gate,
+        "serve": _check_serve_gate,
     }
     json_rows = []
     fatal: list = []

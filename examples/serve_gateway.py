@@ -1,0 +1,151 @@
+"""Continuous aggregation: two jobs sharing one 2-node fleet.
+
+LIFL's serving story, end to end.  An :class:`AggregationService` owns
+a single fleet (two netd daemons over loopback TCP), a single rolling
+:class:`RoundDriver` (two rounds in flight), and a shared coordinator
+whose weighted fair-share splits node capacity 2:1 between the jobs.
+Clients push updates whenever they finish — a thread per job here,
+plus one real separate OS process over the wire — and the ingress
+gateway decides, per submission, admit / busy-with-retry-hint /
+duplicate.  The service opens, fills, and closes rounds continuously;
+round N+1 spawns while round N's top fold is still in flight.
+
+  PYTHONPATH=src python examples/serve_gateway.py [--fast]
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ClientInfo, NodeState, RoundConfig
+from repro.runtime.netrt import RemoteRuntime, spawn_local_daemon
+from repro.serve import (
+    AdmissionPolicy, AggregationService, DeadlinePolicy, MinCohortIdleGap,
+)
+
+SRC = str(Path(__file__).parent.parent / "src")
+N = 1024
+
+
+class Model:
+    """Jobs here are pure aggregation consumers — updates arrive from
+    the outside, the service never runs local training."""
+
+    def loss(self, params, batch):
+        return jnp.sum(params["w"] ** 2), {}
+
+
+class _CloseAny:
+    def __init__(self, *pols):
+        self.pols = pols
+
+    def should_close(self, **kw):
+        return any(p.should_close(**kw) for p in self.pols)
+
+
+def main(fast: bool = False):
+    rounds = 3 if fast else 6
+    print("=== Continuous aggregation: 2 jobs, 2 netd nodes, rolling ===")
+    daemons = [spawn_local_daemon(f"node{i}", runtime="inproc",
+                                  stdout=subprocess.DEVNULL)
+               for i in range(2)]
+    rt = RemoteRuntime([a for _, a in daemons])
+    nodes = {n: NodeState(node=n, max_capacity=cap)
+             for n, cap in rt.node_info().items()}
+    svc = AggregationService(
+        nodes, runtime=rt,
+        admission=AdmissionPolicy(max_queue=64, job_quota=32,
+                                  retry_base_s=0.01))
+    try:
+        params = {"w": jnp.zeros((N,), jnp.float32)}
+        for job, weight in (("mnist", 2.0), ("speech", 1.0)):
+            svc.add_job(
+                job, Model(), params,
+                [ClientInfo(client_id=f"{job}-c{i}", num_samples=10)
+                 for i in range(8)],
+                weight=weight,
+                round_cfg=RoundConfig(aggregation_goal=4))
+        for job in svc.jobs:
+            print(f"job {job!r}: "
+                  f"fair-share={svc.coordinator.job_share(job):.2f}")
+
+        addr = svc.serve("127.0.0.1:0")
+        print(f"serving on {addr} (jobs route by frame meta)")
+
+        # one pusher thread per job: push until told to stop, honour
+        # busy verdicts by sleeping the server's retry hint
+        stop = threading.Event()
+        rng = np.random.default_rng(0)
+        flats = {}
+
+        def pusher(job):
+            k = 0
+            while not stop.is_set():
+                cid = f"{job}-u{k}"
+                flat = flats.setdefault(
+                    cid, rng.standard_normal(N).astype(np.float32))
+                v = svc.submit(job, cid, flat, 1.0 + k % 3,
+                               submission_id=cid)
+                if v["admitted"]:
+                    k += 1
+                    time.sleep(0.002)
+                else:
+                    time.sleep(v["retry_after_s"])
+
+        threads = [threading.Thread(target=pusher, args=(j,), daemon=True)
+                   for j in ("mnist", "speech")]
+        for t in threads:
+            t.start()
+
+        # ... and one genuinely external pusher process over the wire
+        code = (
+            "import numpy as np\n"
+            "from repro.runtime.netrt import push_update\n"
+            "for k in range(8):\n"
+            f"    push_update({addr!r}, f'edge-{{k}}', "
+            "np.ones(%d, np.float32), job='mnist', "
+            "submission_id=f'edge-{k}')\n"
+            "print('edge client: 8 updates pushed')\n" % N)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        edge = subprocess.Popen([sys.executable, "-c", code], env=env)
+
+        t0 = time.perf_counter()
+        recs = svc.run_rounds(
+            {"mnist": rounds, "speech": rounds},
+            policy=_CloseAny(MinCohortIdleGap(min_cohort=2,
+                                              idle_gap_s=0.05),
+                             DeadlinePolicy(deadline_s=20.0)))
+        wall = time.perf_counter() - t0
+        stop.set()
+        for t in threads:
+            t.join(timeout=5)
+        edge.wait(timeout=30)
+
+        for rec in recs:
+            print(f"  ticket {rec['ticket']}: job={rec['job']} "
+                  f"round={rec['round']} cohort={len(rec['cohort'])} "
+                  f"wall={rec['t_close'] - rec['t_open']:.2f}s")
+        m = svc.ingress_metrics()
+        print(f"{2 * rounds} rounds in {wall:.2f}s  "
+              f"pipeline_overlap={svc.pipeline_overlap():.2f}")
+        print(f"ingress: admitted={m['admitted']} shed={m['shed']} "
+              f"duplicates={m['duplicates']} queued_now={m['queued_now']}")
+        assert svc.pipeline_overlap() > 0, "rounds never overlapped"
+    finally:
+        svc.close()
+        from repro.runtime.netrt import reap_local_daemon
+        for proc, _ in daemons:
+            reap_local_daemon(proc)
+    print("done: two jobs, one fleet, rounds rolling — no silent drops.")
+
+
+if __name__ == "__main__":
+    main(fast="--fast" in sys.argv)

@@ -47,11 +47,25 @@ class Session:
     idempotent — double-close and close-after-crash neither raise nor
     leak shared-memory segments."""
 
-    def __init__(self, trainer: FederatedTrainer):
+    def __init__(self, trainer: FederatedTrainer,
+                 admission: Optional[Any] = None):
         self._trainer = trainer
         self._server = None           # Session.serve ingest endpoint
         self._serve_thread: Optional[threading.Thread] = None
         self._serve_stop: Optional[threading.Event] = None
+        # admission control (serve/gateway.py): a bounded ingress valve
+        # in front of submit_update — over-budget submissions get a
+        # busy verdict + retry_after_s instead of unbounded queueing
+        self._gateway = None
+        if admission is not None and admission is not False:
+            from repro.serve.gateway import AdmissionPolicy, IngressGateway
+
+            policy = (AdmissionPolicy() if admission is True
+                      else admission)
+            self._gateway = IngressGateway(
+                policy, emit=trainer.driver.dispatch)
+            self._gateway.register("", trainer.submit_update,
+                                   lambda: len(trainer._external))
 
     # ------------------------------------------------------------------
     @classmethod
@@ -72,6 +86,7 @@ class Session:
         seed: int = 0,
         wire_compress: Any = 0,
         trace_path: Optional[str] = None,
+        admission: Optional[Any] = None,
     ) -> "Session":
         """Open a session: ``model.loss(params, batch)`` plus a client
         fleet, on the chosen aggregation runtime.
@@ -95,7 +110,13 @@ class Session:
         ``trace_path`` appends every round's :class:`RoundTrace` as one
         JSONL record (flushed per line) — read back with
         :func:`repro.obs.read_traces`, which tolerates the truncated
-        tail a mid-round kill leaves behind."""
+        tail a mid-round kill leaves behind.
+
+        ``admission`` (an :class:`~repro.serve.AdmissionPolicy`, or
+        ``True`` for the defaults) puts the serve-plane ingress valve
+        in front of ``submit_update``: over-budget submissions get a
+        busy verdict carrying ``retry_after_s`` (a ``busy`` frame on
+        the serve endpoint) instead of queueing without bound."""
         remote = None
         if wire_compress and not isinstance(nodes, (list, tuple)):
             # single-node runtimes never touch the frame transport, so
@@ -137,7 +158,7 @@ class Session:
                 checkpoint_every=checkpoint_every,
                 seed=seed,
                 trace_path=trace_path,
-            ))
+            ), admission=admission)
         except BaseException:
             if remote is not None:
                 remote.close()   # the fleet connections must not leak
@@ -168,11 +189,21 @@ class Session:
         in the next round.  Pass a ``submission_id`` to make retries
         idempotent (duplicates return ``False`` without queueing) and a
         ``round_id`` to refuse submissions aimed at an already-finished
-        round.  Returns ``True`` when the update was queued."""
+        round.  Returns ``True`` when the update was queued.
+
+        With ``admission`` configured (:meth:`open`) the submission
+        runs through the ingress gateway and the full verdict dict
+        comes back instead: ``{"admitted", "busy", "duplicate",
+        "queued", "retry_after_s"}`` — ``busy`` means over budget,
+        retry after the hint (nothing was queued or dropped)."""
         if isinstance(update, np.ndarray) and update.ndim == 1:
             flat = update
         else:
             flat, _, _ = _flatten_tree(update)
+        if self._gateway is not None:
+            return self._gateway.admit(
+                "", client_id, flat, weight,
+                submission_id=submission_id, round_id=round_id)
         return self._trainer.submit_update(
             client_id, flat, weight,
             submission_id=submission_id, round_id=round_id)
@@ -202,6 +233,11 @@ class Session:
                 for (owner, metric), (total, n) in snap.items()},
         }
         out["ingress"] = dict(tr.ingress)
+        if self._gateway is not None:
+            gw = self._gateway.counters
+            out["ingress"]["admitted"] = gw["admitted"]
+            out["ingress"]["shed"] += gw["shed"]
+            out["ingress"]["queued_now"] = self._gateway.depth()
         if tr._driver is not None:
             out["driver"] = dict(tr._driver.stats)
         return out
@@ -274,14 +310,25 @@ class Session:
             flat = np.frombuffer(
                 frame.blob, dtype=resolve_dtype(frame.meta["dtype"]),
             ).reshape(frame.meta["shape"])
-            accepted = self.submit_update(
+            verdict = self.submit_update(
                 frame.meta["client_id"], flat,
                 weight=frame.meta.get("weight", 1.0),
                 submission_id=frame.meta.get("submission_id"),
                 round_id=frame.meta.get("round_id"))
+            if isinstance(verdict, dict):       # admission configured
+                if verdict["busy"]:
+                    conn.send("busy", {
+                        "client_id": frame.meta["client_id"],
+                        "retry_after_s": verdict["retry_after_s"],
+                        "queued": verdict["queued"]})
+                    return
+                conn.send("ack", {"client_id": frame.meta["client_id"],
+                                  "queued": verdict["queued"],
+                                  "duplicate": verdict["duplicate"]})
+                return
             conn.send("ack", {"client_id": frame.meta["client_id"],
                               "queued": len(self._trainer._external),
-                              "duplicate": not accepted})
+                              "duplicate": not verdict})
         else:
             conn.send("error", {"msg": f"unknown frame {frame.kind!r}"})
 

@@ -45,6 +45,7 @@ from repro.core.objectstore import (
     InProcObjectStore,
     SharedMemoryObjectStore,
     new_object_key,
+    sweep_dead_segments,
 )
 from repro.core.placement import (
     FoldPlan,

@@ -105,8 +105,27 @@ class RoundPlan:
         return inter_node_transfers(self.placement.assignment, self.top_node or "")
 
 
+@dataclass
+class _JobState:
+    """One registered job's slot on a shared coordinator: its own
+    selector/cohort, fair-share weight, and round/version counters."""
+
+    name: str
+    selector: Selector
+    weight: float = 1.0
+    round_id: int = 0
+    model_version: int = 0
+
+
 class Coordinator:
-    """Cluster-wide control-plane component (one per FL job)."""
+    """Cluster-wide control-plane component.
+
+    Historically one per FL job; under the serve layer ONE coordinator
+    is shared by several jobs (:meth:`register_job`) whose placements
+    draw on the same RC capacity model — each job packs against
+    ``share × MC`` per node (weighted fair-share, §5.1 extended), so
+    the fleet splits in proportion to job weights instead of the first
+    planner draining it."""
 
     def __init__(
         self,
@@ -122,29 +141,94 @@ class Coordinator:
         self.model_version = 0
         self.round_id = 0
         self.history: List[RoundPlan] = []
+        # multi-job serve mode: job name → its slot.  Empty for the
+        # single-job library path, which keeps the legacy fields above.
+        self._jobs: Dict[str, _JobState] = {}
+        # outstanding placement charges: (job, rid) → node → updates
+        # placed.  While ANY round is in flight its charges stay on
+        # NodeState.assigned so a concurrent job's packer sees real
+        # occupancy; finish_round lifts exactly its own round's charge.
+        self._charges: Dict[Tuple[str, int], Dict[str, float]] = {}
+
+    # ------------------------------------------------------------------
+    # multi-job registry (serve mode)
+    # ------------------------------------------------------------------
+    def register_job(self, job: str, clients, weight: float = 1.0,
+                     seed: int = 0) -> None:
+        """Register a named job: its client pool (a ``Selector`` or a
+        sequence of :class:`ClientInfo`) and fair-share weight."""
+        if not job:
+            raise ValueError("job name must be non-empty")
+        sel = clients if isinstance(clients, Selector) \
+            else Selector(clients, seed=seed)
+        self._jobs[job] = _JobState(name=job, selector=sel,
+                                    weight=float(weight))
+
+    def job_share(self, job: str) -> float:
+        """``weight_j / Σ weights`` over registered jobs (1.0 when the
+        job is unregistered — the single-job path)."""
+        js = self._jobs.get(job)
+        if js is None:
+            return 1.0
+        total = sum(j.weight for j in self._jobs.values())
+        return js.weight / total if total > 0 else 1.0
+
+    def job_round(self, job: str = "") -> int:
+        """The job's next round number."""
+        js = self._jobs.get(job)
+        return js.round_id if js is not None else self.round_id
+
+    def job_version(self, job: str = "") -> int:
+        js = self._jobs.get(job)
+        return js.model_version if js is not None else self.model_version
 
     # ------------------------------------------------------------------
     def plan_round(self, cfg: RoundConfig,
-                   sampler: Optional[Callable] = None) -> RoundPlan:
-        rid = self.round_id
+                   sampler: Optional[Callable] = None,
+                   job: str = "",
+                   tag_rounds: bool = False) -> RoundPlan:
+        js = self._jobs.get(job)
+        if job and js is None:
+            raise KeyError(f"job {job!r} not registered")
+        selector = js.selector if js is not None else self.selector
+        rid = js.round_id if js is not None else self.round_id
+        share = self.job_share(job)
         n_select = int(np.ceil(cfg.aggregation_goal * cfg.over_provision))
         if sampler is not None:
             # pluggable per-round client sampling: the sampler sees the
             # available pool and owns the choice (seed its own RNG for
             # reproducible cohorts); selection bookkeeping still applies
-            pool = [c for c in self.selector.clients.values() if c.available]
+            pool = [c for c in selector.clients.values() if c.available]
             selected = list(sampler(rid, pool))
             for c in selected:
                 c.last_selected_round = rid
         else:
-            selected = self.selector.select(n_select, rid)
+            selected = selector.select(n_select, rid)
 
-        # reset per-round assignment, keep k/E from metrics
-        for ns in self.nodes.values():
-            ns.assigned = 0.0
+        # re-planning the same round replaces its charge, not stacks it
+        stale = self._charges.pop((job, rid), None)
+        if stale:
+            for node, c in stale.items():
+                ns = self.nodes.get(node)
+                if ns is not None:
+                    ns.assigned = max(0.0, ns.assigned - c)
+        # reset per-round assignment, keep k/E from metrics — but only
+        # while no other round holds a charge: with rounds in flight
+        # (rolling rounds, a concurrent job) their placements are real
+        # occupancy the packer must see
+        if not self._charges:
+            for ns in self.nodes.values():
+                ns.assigned = 0.0
+        assigned0 = {n: ns.assigned for n, ns in self.nodes.items()}
         placement = place_updates(
-            len(selected), self.nodes, policy=cfg.placement_policy
+            len(selected), self.nodes, policy=cfg.placement_policy,
+            share=share,
         )
+        self._charges[(job, rid)] = {
+            n: ns.assigned - assigned0.get(n, 0.0)
+            for n, ns in self.nodes.items()
+            if ns.assigned > assigned0.get(n, 0.0)
+        }
         top = choose_top_node(self.nodes, placement.assignment)
 
         queue_by_node = {
@@ -172,10 +256,13 @@ class Coordinator:
         )
         # the explicit fold topology the driver executes: mids from the
         # placement, root tier from the config, root node = the RC-aware
-        # busiest node (already chosen above)
+        # busiest node (already chosen above).  Serve mode tags every
+        # site id with (job, round) so two in-flight rounds never
+        # collide on a runtime task id; untagged plans stay bit-exact.
         fold_plan = build_fold_plan(
             placement.assignment, top_node=top, topology=cfg.topology,
-            nodes=self.nodes)
+            nodes=self.nodes, job=job,
+            round_tag=rid if (job or tag_rounds) else None)
         plan = RoundPlan(
             round_id=rid, selected=selected, placement=placement,
             hierarchy=hierarchy, tag=tag, top_node=top,
@@ -185,16 +272,39 @@ class Coordinator:
         return plan
 
     # ------------------------------------------------------------------
-    def finish_round(self, checkpoint_fn: Optional[Callable] = None) -> int:
+    def finish_round(self, checkpoint_fn: Optional[Callable] = None,
+                     job: str = "",
+                     round_id: Optional[int] = None) -> int:
         """Aggregation goal reached: release instances back to the warm
-        pool, bump model version, kick the async checkpoint (App-B)."""
+        pool, lift the round's placement charge off the capacity model,
+        bump the job's model version, kick the async checkpoint (App-B).
+
+        ``round_id`` names which of the job's rounds closed (rolling
+        rounds may close out of order); default = the job's oldest
+        outstanding round."""
         for agg_id in list(self.pool.instances):
             self.pool.release(agg_id)
-        self.model_version += 1
-        self.round_id += 1
+        if round_id is None:
+            mine = sorted(r for (j, r) in self._charges if j == job)
+            round_id = mine[0] if mine else self.job_round(job)
+        charge = self._charges.pop((job, round_id), None)
+        if charge:
+            for node, c in charge.items():
+                ns = self.nodes.get(node)
+                if ns is not None:
+                    ns.assigned = max(0.0, ns.assigned - c)
+        js = self._jobs.get(job)
+        if js is not None:
+            js.model_version += 1
+            js.round_id = max(js.round_id, round_id) + 1
+            version = js.model_version
+        else:
+            self.model_version += 1
+            self.round_id = max(self.round_id, round_id) + 1
+            version = self.model_version
         if checkpoint_fn is not None:
-            checkpoint_fn(self.model_version)
-        return self.model_version
+            checkpoint_fn(version)
+        return version
 
     def scale_down(self) -> int:
         """Terminate idle aggregators after load drops (load-proportional

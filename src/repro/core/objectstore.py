@@ -185,6 +185,32 @@ def unlink_segment(name: str) -> bool:
     return True
 
 
+def sweep_dead_segments(prefix: str) -> int:
+    """Unlink every /dev/shm segment under a dead owner's ``prefix``
+    (objects ``prefix-<key>``, rings ``prefix-tq<i>``/``-rq<i>``).
+
+    The reclaim path for SIGKILLed runtimes: atexit never ran, so the
+    segments outlive the process until someone sweeps the name space —
+    the controller on re-adoption (the welcome's epoch bump proves the
+    old process, hence every one of its segments, is dead) and
+    ``reap_local_daemon`` after a kill.  Prefixes embed a per-instance
+    nonce, so a sweep can never hit a live runtime's segments.
+    Returns the number of segments reclaimed."""
+    if not prefix:
+        return 0
+    try:
+        names = os.listdir("/dev/shm")
+    except OSError:
+        return 0
+    swept = 0
+    for name in names:
+        if name == prefix or name.startswith(prefix + "-"):
+            if unlink_segment(name):
+                _registry_discard(name)
+                swept += 1
+    return swept
+
+
 def _pack_header(shape, dtype) -> bytes:
     shape = tuple(int(s) for s in shape)
     if len(shape) > _MAX_NDIM:

@@ -56,10 +56,21 @@ class NodeState:
         could have folded in that window) so a node with an expensive
         uplink looks correspondingly less spare to the packer and the
         root choice."""
+        return self.residual_for(1.0)
+
+    def residual_for(self, share: float = 1.0) -> float:
+        """Residual capacity as seen by a job holding ``share`` of this
+        node under weighted fair-share: the MC term scales with the
+        job's share while the load terms (queue, assigned, ship —
+        whoever caused them) charge in full.  Under contention every
+        job therefore sees the node fill at the same absolute rate but
+        against its own scaled ceiling, which converges to a
+        weight-proportional split of MC (serve/README.md has the
+        math).  ``share=1.0`` is the single-job model, unchanged."""
         ship_load = (self.wire_time_s / self.exec_time_s
                      if self.exec_time_s > 0 else 0.0)
-        return (self.max_capacity - self.queue_estimate - self.assigned
-                - ship_load)
+        return (share * self.max_capacity - self.queue_estimate
+                - self.assigned - ship_load)
 
 
 def measure_max_capacity(exec_times: Sequence[Tuple[float, float]],
@@ -89,13 +100,14 @@ class Placement:
 
 
 def _fit_nodes(nodes: List[NodeState], policy: str,
-               used: Optional[set] = None) -> List[NodeState]:
+               used: Optional[set] = None,
+               share: float = 1.0) -> List[NodeState]:
     if policy == "bestfit":
         # tightest feasible bin first -> fewest nodes, max shared memory
-        return sorted(nodes, key=lambda n: n.residual_capacity)
+        return sorted(nodes, key=lambda n: n.residual_for(share))
     if policy == "worstfit":
         # most headroom first -> spreads load (Knative Least Connection)
-        return sorted(nodes, key=lambda n: -n.residual_capacity)
+        return sorted(nodes, key=lambda n: -n.residual_for(share))
     if policy == "firstfit":
         return nodes
     if policy == "locality":
@@ -108,7 +120,8 @@ def _fit_nodes(nodes: List[NodeState], policy: str,
         used = used or set()
         return sorted(nodes, key=lambda n: (
             n.node not in used,
-            n.residual_capacity if n.node in used else -n.residual_capacity,
+            n.residual_for(share) if n.node in used
+            else -n.residual_for(share),
         ))
     raise ValueError(f"unknown placement policy {policy!r}")
 
@@ -118,6 +131,8 @@ def place_updates(
     nodes: Dict[str, NodeState],
     policy: str = "bestfit",
     weights: Optional[Sequence[float]] = None,
+    *,
+    share: float = 1.0,
 ) -> Placement:
     """Bin-pack ``num_updates`` model updates onto worker nodes.
 
@@ -125,6 +140,12 @@ def place_updates(
     capacity.  Returns node -> update-index lists; inter-node traffic is
     minimized because any (src,dst) node pair exchanges at most one
     intermediate update per round (§5.1).
+
+    ``share`` caps the placement at a weighted fair-share fraction of
+    every node (multi-job serve mode): each update must fit within
+    ``share × MC`` minus the node's current load, so concurrent jobs
+    split the fleet in proportion to their weights instead of the
+    first planner draining it.
     """
     weights = list(weights) if weights is not None else [1.0] * num_updates
     assignment: Dict[str, List[int]] = {}
@@ -134,8 +155,9 @@ def place_updates(
     for idx in range(num_updates):
         w = weights[idx]
         placed = False
-        for cand in _fit_nodes(live, policy, used=set(assignment)):
-            if cand.residual_capacity >= w:
+        for cand in _fit_nodes(live, policy, used=set(assignment),
+                               share=share):
+            if cand.residual_for(share) >= w:
                 assignment.setdefault(cand.node, []).append(idx)
                 cand.assigned += w
                 placed = True
@@ -171,6 +193,56 @@ def choose_top_node(nodes: Dict[str, NodeState],
 
 #: root tiers a plan may ask for (where the final fold executes)
 FOLD_TIERS = ("controller", "worker", "node")
+
+
+# Aggregator-id grammar: ``kind[:job][#round]@node``.  The bare form
+# (``mid@node0``, ``top@node1``) is the single-job library path and
+# stays byte-identical; the serve layer tags ids with the owning job
+# and the driver round so (a) two in-flight rolling rounds never
+# collide on a runtime task id and (b) warm-engine pools key by
+# (job, tree-position) — the round tag is *stripped* for engine
+# lookup so warmth carries across rounds but never across jobs.
+# Everything downstream that wants the node keeps using
+# ``agg_id.split("@", 1)[-1]``, which the grammar preserves.
+
+def split_agg_id(agg_id: str) -> Tuple[str, str, Optional[int], str]:
+    """``kind[:job][#round]@node`` → ``(kind, job, round, node)``
+    (``job=''``/``round=None`` when untagged)."""
+    pos, _, node = agg_id.partition("@")
+    rid: Optional[int] = None
+    if "#" in pos:
+        pos, _, r = pos.partition("#")
+        try:
+            rid = int(r)
+        except ValueError:
+            rid = None
+    kind, _, job = pos.partition(":")
+    return kind, job, rid, node
+
+
+def join_agg_id(kind: str, job: str = "", round_id: Optional[int] = None,
+                node: str = "") -> str:
+    """Inverse of :func:`split_agg_id`."""
+    pos = kind
+    if job:
+        pos += f":{job}"
+    if round_id is not None:
+        pos += f"#{round_id}"
+    return f"{pos}@{node}"
+
+
+def agg_job(agg_id: str) -> str:
+    """The job an aggregator id is tagged with ('' = single-job)."""
+    return split_agg_id(agg_id)[1]
+
+
+def engine_key(agg_id: str) -> str:
+    """Warm-engine pool key: the (job, tree-position) identity — the
+    per-round tag is dropped so ``mid:a#4@n0`` and ``mid:a#5@n0``
+    share a resident accumulator, while job ``b`` at the same
+    position never does."""
+    kind, job, _rid, node = split_agg_id(agg_id)
+    return join_agg_id(kind, job, None, node)
 
 
 @dataclass(frozen=True)
@@ -249,6 +321,8 @@ def build_fold_plan(
     top_node: Optional[str] = None,
     topology: str = "controller",
     nodes: Optional[Dict[str, NodeState]] = None,
+    job: str = "",
+    round_tag: Optional[int] = None,
 ) -> FoldPlan:
     """Reify a placement into the fold tree the driver executes.
 
@@ -256,21 +330,26 @@ def build_fold_plan(
     plus a root folding the mids' partials.  ``topology`` picks the
     root tier; the root node defaults to :func:`choose_top_node` (the
     busiest node, RC tie-break) so under ``node`` topology the largest
-    share of partials is already local to the root."""
+    share of partials is already local to the root.
+
+    ``job``/``round_tag`` stamp every site's agg_id with the serve
+    layer's tags (see the agg-id grammar above); untagged plans keep
+    the legacy ``mid@node`` / ``top@node`` ids bit for bit."""
     if topology not in FOLD_TIERS:
         raise ValueError(f"unknown fold topology {topology!r} "
                          f"(expected one of {FOLD_TIERS})")
     planned = {node: len(idxs) for node, idxs in assignment.items() if idxs}
     if not planned:
         return FoldPlan()
-    mids = tuple(FoldSite(agg_id=f"mid@{node}", node=node, tier="worker",
-                          goal=planned[node])
+    mids = tuple(FoldSite(agg_id=join_agg_id("mid", job, round_tag, node),
+                          node=node, tier="worker", goal=planned[node])
                  for node in sorted(planned))
     root_node = top_node or choose_top_node(nodes or {}, assignment)
     if root_node not in planned:
         root_node = max(planned, key=lambda n: (planned[n], n))
     root = FoldSite(
-        agg_id=f"top@{root_node}", node=root_node, tier=topology,
+        agg_id=join_agg_id("top", job, round_tag, root_node),
+        node=root_node, tier=topology,
         goal=len(mids), children=tuple(s.agg_id for s in mids),
     )
     return FoldPlan(root=root.agg_id, sites=mids + (root,))

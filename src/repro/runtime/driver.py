@@ -59,7 +59,10 @@ from repro.core.aggregation import Aggregator, FedAvgState
 from repro.core.engine import make_engine
 from repro.core.gateway import UpdateEnvelope
 from repro.core.objectstore import InProcObjectStore
-from repro.core.placement import FoldPlan, FoldSite, build_fold_plan
+from repro.core.placement import (
+    FoldPlan, FoldSite, build_fold_plan, engine_key, join_agg_id,
+    split_agg_id,
+)
 from repro.core.sidecar import EventSidecar, MetricsMap
 from repro.obs.trace import RoundTrace, Tracer
 from repro.runtime.events import (
@@ -68,6 +71,7 @@ from repro.runtime.events import (
     PartialShipped,
     RoundDeadline,
     RoundEvent,
+    RoundOpened,
     TopFolded,
     UpdateArrived,
     WorkerCrashed,
@@ -113,6 +117,28 @@ def _partial_alive(rt, key: str) -> bool:
     return True if fn is None else bool(fn(key))
 
 
+#: feed-protocol sentinel: a cohort feed returns this to declare the
+#: round's cohort closed (no more updates will ever arrive for it).
+#: Distinct from ``None``, which means "nothing pending *yet*" and
+#: keeps a serve-mode round open.
+COHORT_CLOSED = object()
+
+
+def _iter_feed(updates: Iterable) -> Callable[[], Any]:
+    """Adapt a plain iterable of ``(node, client_id, flat, weight)``
+    tuples to the pull-feed protocol: one item per call, then
+    :data:`COHORT_CLOSED` forever."""
+    it = iter(updates)
+
+    def feed():
+        try:
+            return next(it)
+        except StopIteration:
+            return COHORT_CLOSED
+
+    return feed
+
+
 def _partial_node(rt, key: str) -> Optional[str]:
     """Which node a published partial physically lives on (None for
     single-node runtimes, where agg ids name logical nodes only)."""
@@ -121,16 +147,20 @@ def _partial_node(rt, key: str) -> Optional[str]:
 
 
 class _WarmEngineMixin:
-    """Warm aggregation engines keyed by tree position (``agg_id``):
+    """Warm aggregation engines keyed by ``(job, tree-position)``:
     a re-spawned aggregator at the same position re-enters the next
     round with its accumulator/scratch resident (§5.3 at the fold
-    level).  Requires ``self.agg_engine`` and ``self._engines``."""
+    level).  The agg-id's per-round tag is stripped for the pool
+    lookup (``placement.engine_key``) so warmth carries across rolling
+    rounds, while two jobs sharing a node fleet never share an
+    accumulator.  Requires ``self.agg_engine`` and ``self._engines``."""
 
     def engine_for(self, agg_id: str):
-        eng = self._engines.get(agg_id)
+        key = engine_key(agg_id)
+        eng = self._engines.get(key)
         if eng is None:
             eng = make_engine(self.agg_engine)
-            self._engines[agg_id] = eng
+            self._engines[key] = eng
         return eng
 
     def recycle_engines(self) -> None:
@@ -162,8 +192,9 @@ class InProcRuntime(_WarmEngineMixin):
                          round_id: int = 0, kind: str = "mid") -> None:
         if agg_id in self._open:
             raise ValueError(f"{agg_id!r} already has an open task")
-        # warm = an engine is already resident at this tree position
-        key = "warm_starts" if agg_id in self._engines else "cold_starts"
+        # warm = an engine is already resident at this (job, position)
+        key = "warm_starts" if engine_key(agg_id) in self._engines \
+            else "cold_starts"
         self.stats[key] += 1
         agg = Aggregator(
             agg_id, self.store, goal, eager=self.eager,
@@ -219,14 +250,27 @@ class InProcRuntime(_WarmEngineMixin):
             time.sleep(min(timeout, 0.05))  # nothing pending: don't spin
         return evs
 
-    def quiesce(self, timeout: float = 5.0) -> None:
+    def quiesce(self, timeout: float = 5.0,
+                round_id: Optional[int] = None) -> None:
         # a published-but-unabsorbed partial would strand its store
-        # object (the exception path can abandon queued events)
+        # object (the exception path can abandon queued events).
+        # ``round_id`` scopes the barrier to one in-flight round
+        # (rolling rounds): the other round's open tasks and queued
+        # events survive it.
+        keep: Deque[RoundEvent] = deque()
         for ev in self._events:
+            if round_id is not None \
+                    and getattr(ev, "round_id", None) != round_id:
+                keep.append(ev)
+                continue
             if isinstance(ev, PartialReady):
                 self.store.delete(ev.key)
-        self._open.clear()
-        self._events.clear()
+        self._events = keep
+        if round_id is None:
+            self._open.clear()
+        else:
+            self._open = {a: (agg, rid) for a, (agg, rid)
+                          in self._open.items() if rid != round_id}
 
     # -- payload plumbing ----------------------------------------------
     def put_update(self, flat: np.ndarray) -> str:
@@ -276,12 +320,20 @@ class ShmProcRuntime(_WarmEngineMixin):
         self._crash_cls = WorkerCrash
         self.agg_engine = agg_engine
         self._engines: Dict[str, Any] = {}   # driver-side (top) engines
+        self._task_rounds: Dict[str, int] = {}  # open task → its round
         self._round_id = 0
         self._closed = False
 
     @property
     def store(self):
         return self._rt.store
+
+    @property
+    def store_prefix(self) -> str:
+        """The /dev/shm name prefix every segment of this runtime lives
+        under — the welcome handshake advertises it so a controller can
+        sweep a SIGKILLed daemon's leftovers on re-adoption."""
+        return self._rt.prefix
 
     @property
     def stats(self):
@@ -291,6 +343,7 @@ class ShmProcRuntime(_WarmEngineMixin):
     def spawn_aggregator(self, agg_id: str, *, goal: int, n_elems: int,
                          round_id: int = 0, kind: str = "mid") -> None:
         self._round_id = round_id
+        self._task_rounds[agg_id] = round_id
         self._rt.submit_task(agg_id, goal=goal, n_elems=n_elems,
                              round_id=round_id)
 
@@ -330,8 +383,18 @@ class ShmProcRuntime(_WarmEngineMixin):
                 for p in parts)
             return evs
 
-    def quiesce(self, timeout: float = 5.0) -> None:
-        self._rt.quiesce(timeout=timeout)
+    def quiesce(self, timeout: float = 5.0,
+                round_id: Optional[int] = None) -> None:
+        if round_id is None:
+            self._task_rounds.clear()
+            self._rt.quiesce(timeout=timeout)
+            return
+        # rolling rounds: close out only this round's tasks — the
+        # other in-flight round keeps its workers busy
+        mine = {a for a, r in self._task_rounds.items() if r == round_id}
+        for a in mine:
+            self._task_rounds.pop(a, None)
+        self._rt.quiesce(timeout=timeout, agg_ids=mine)
 
     def take_spans(self) -> List["Span"]:
         """Worker-side spans (task pickup→publish, ring-wait) derived
@@ -453,6 +516,16 @@ class _RoundState:
     top_crashed: bool = False
     # first-dispatch stamp per subtree (dispatch → PartialReady spans)
     first_dispatch: Dict[str, float] = field(default_factory=dict)
+    # rolling-round bookkeeping: the owning job, the plan's agg-id tags
+    # (mirrored onto re-rooted top ids), which phase the round is in,
+    # and whether its event absorption is in draining mode — the event
+    # router needs the latter when it absorbs a cross-round event on
+    # behalf of the OTHER in-flight round
+    job: str = ""
+    tag_job: str = ""
+    tag_rid: Optional[int] = None
+    phase: str = "open"
+    draining: bool = False
 
 
 class RoundDriver:
@@ -469,7 +542,8 @@ class RoundDriver:
                  metrics: Optional[MetricsMap] = None,
                  redispatch_limit: int = 3,
                  tracer: Optional[Tracer] = None,
-                 trace_sink: Optional[Callable[[RoundTrace], None]] = None):
+                 trace_sink: Optional[Callable[[RoundTrace], None]] = None,
+                 max_open_rounds: int = 1):
         self.runtime = runtime
         self.metrics = metrics if metrics is not None else (
             runtime.metrics if runtime is not None else MetricsMap())
@@ -482,10 +556,18 @@ class RoundDriver:
         # crash recovery gives up on a subtree after this many respawns
         # (a deterministic crasher must not hang the round)
         self.redispatch_limit = int(redispatch_limit)
+        # rolling rounds: how many rounds may be open at once.  1 is
+        # the library default (begin_round refuses nesting, as ever);
+        # the serve scheduler runs with 2 so round N+1's dispatch can
+        # overlap round N's fold.
+        self.max_open_rounds = int(max_open_rounds)
         self._handlers: Dict[Type[RoundEvent],
                              List[Callable[[RoundEvent], None]]] = {}
-        self._open_round: Optional[int] = None
-        self._goal_reached = False
+        # per-round lifecycle state (was a single _open_round/_goal
+        # global): rid → goal-reached flag, plus the in-flight round
+        # states the event router targets
+        self._open_rounds: Dict[int, bool] = {}
+        self._inflight: Dict[int, _RoundState] = {}
         self._next_round = 0
         self.stats = {
             "events_dispatched": 0, "stale_dropped": 0,
@@ -506,21 +588,25 @@ class RoundDriver:
         Returns ``False`` when a guard dropped it."""
         rid = event.round_id
         if rid is not None and rid < self._next_round \
+                and rid not in self._open_rounds \
                 and not isinstance(event, PartialShipped):
             # leftovers from a finished round: drop, whoever sent them.
-            # PartialShipped is exempt: it is pure telemetry (mutates
-            # no round state) pushed async by a *remote* daemon, so it
-            # routinely loses the race with its own round's close-out —
-            # dropping it would make observed ship counts flap
+            # With rolling rounds the horizon alone isn't enough — a
+            # round can close out of order while an earlier-numbered
+            # one is still in flight, so membership in the open set
+            # keeps a live round's events deliverable.  PartialShipped
+            # is exempt: it is pure telemetry (mutates no round state)
+            # pushed async by a *remote* daemon, so it routinely loses
+            # the race with its own round's close-out — dropping it
+            # would make observed ship counts flap
             self.stats["stale_dropped"] += 1
             return False
-        if isinstance(event, RoundDeadline) and self._goal_reached \
-                and rid == self._open_round:
-            # goal already reached: the deadline is moot
+        if isinstance(event, RoundDeadline) and self._open_rounds.get(rid):
+            # goal already reached for that round: the deadline is moot
             self.stats["deadline_ignored"] += 1
             return False
-        if isinstance(event, GoalReached) and rid == self._open_round:
-            self._goal_reached = True
+        if isinstance(event, GoalReached) and rid in self._open_rounds:
+            self._open_rounds[rid] = True
         self.stats["events_dispatched"] += 1
         for etype in (type(event), RoundEvent):
             for fn in self._handlers.get(etype, ()):
@@ -534,22 +620,23 @@ class RoundDriver:
     # round lifecycle bookkeeping (public so tests can drive the guards)
     # ------------------------------------------------------------------
     def begin_round(self, round_id: int) -> None:
-        if self._open_round is not None:
+        if round_id in self._open_rounds:
+            raise RuntimeError(f"round {round_id} already open")
+        if len(self._open_rounds) >= self.max_open_rounds:
             raise RuntimeError(
-                f"round {self._open_round} still open")
-        self._open_round = round_id
-        self._goal_reached = False
+                f"round {min(self._open_rounds)} still open")
+        self._open_rounds[round_id] = False
 
     def end_round(self, round_id: int) -> None:
+        self._open_rounds.pop(round_id, None)
         self._next_round = max(self._next_round, round_id + 1)
-        self._open_round = None
 
     def abort_round(self, round_id: int) -> None:
         """The round failed before completing: close it WITHOUT
         advancing the stale-round horizon, so a retry under the same
         ``round_id`` isn't guard-dropped (runtime-level seq guards
         already fence the aborted round's late records)."""
-        self._open_round = None
+        self._open_rounds.pop(round_id, None)
 
     # ------------------------------------------------------------------
     # the round loop
@@ -565,6 +652,7 @@ class RoundDriver:
         top_node: Optional[str] = None,
         deadline_s: Optional[float] = None,
         fold_plan: Optional[FoldPlan] = None,
+        job: str = "",
     ) -> RoundOutcome:
         """Drive one round: spawn the planned mids, pump ``updates``
         (``(node, client_id, flat, weight)`` tuples — typically a lazy
@@ -576,59 +664,81 @@ class RoundDriver:
         ``fold_plan`` makes the aggregation topology explicit (see
         :class:`~repro.core.placement.FoldPlan`); without one, a
         controller-top plan is derived from ``assignment`` +
-        ``top_node`` — the legacy behavior, bit for bit."""
+        ``top_node`` — the legacy behavior, bit for bit.
+
+        This is the synchronous wrapper over :meth:`open_round`: the
+        handle is stepped to completion in place, which reproduces the
+        historical single-round loop exactly."""
+        return self.open_round(
+            round_id=round_id, assignment=assignment, updates=updates,
+            goal=goal, n_elems=n_elems, top_node=top_node,
+            deadline_s=deadline_s, fold_plan=fold_plan, job=job).run()
+
+    def open_round(
+        self,
+        *,
+        round_id: int,
+        assignment: Dict[str, List[int]],
+        updates: Any,
+        goal: int,
+        n_elems: int,
+        top_node: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+        fold_plan: Optional[FoldPlan] = None,
+        job: str = "",
+    ) -> "RoundHandle":
+        """Open a round and return its resumable :class:`RoundHandle`
+        — the rolling-round seam.  ``updates`` is either the usual
+        iterable of ``(node, client_id, flat, weight)`` tuples, or a
+        zero-arg *feed* callable returning one such tuple per call,
+        ``None`` when nothing is pending yet (serve mode keeps the
+        round open and hands control back), or :data:`COHORT_CLOSED`
+        to close the cohort (a pluggable close-out policy lives inside
+        the feed)."""
         rt = self.runtime
         if rt is None:
             raise RuntimeError("RoundDriver has no runtime attached")
         self.begin_round(round_id)
+        if fold_plan is None:
+            fold_plan = build_fold_plan(assignment, top_node=top_node,
+                                        topology="controller")
+        out = RoundOutcome(round_id=round_id)
+        st = _RoundState(round_id=round_id, n_elems=n_elems, out=out,
+                         sent={}, partials={}, plan=fold_plan, job=job)
+        if fold_plan.root:
+            _kind, st.tag_job, st.tag_rid, _node = split_agg_id(
+                fold_plan.root)
+            st.job = st.job or st.tag_job
         stats0 = {k: rt.stats.get(k, 0)
                   for k in ("cold_starts", "warm_starts")}
-        out = RoundOutcome(round_id=round_id)
-        sent: Dict[str, List[Tuple[str, float]]] = {}
-        partials: Dict[str, PartialReady] = {}
-        completed = False
-        tr = self.tracer
-        tok_round = tr.begin("round", owner="driver", round_id=round_id)
+        self._inflight[round_id] = st
+        tok_round = self.tracer.begin("round", owner="driver",
+                                      round_id=round_id)
+        self.dispatch(RoundOpened(round_id=round_id, job=st.job, goal=goal))
+        gen = self._round_gen(st, rt, updates=updates, goal=goal,
+                              top_node=top_node, deadline_s=deadline_s)
+        return RoundHandle(self, st, gen, tok_round, stats0)
+
+    def _quiesce_runtime(self, round_id: Optional[int] = None) -> None:
+        """Park the runtime after a round.  With no other round in
+        flight this is the legacy full barrier; while another round is
+        open the barrier is scoped to ``round_id`` so the other
+        round's open aggregators and queued events survive it."""
+        rt = self.runtime
+        if rt is None:
+            return
+        others = [r for r in self._inflight if r != round_id]
+        if round_id is None or not others:
+            rt.quiesce()
+            return
         try:
-            self._drive(out, rt, round_id=round_id, assignment=assignment,
-                        updates=updates, goal=goal, n_elems=n_elems,
-                        top_node=top_node, deadline_s=deadline_s,
-                        sent=sent, partials=partials, fold_plan=fold_plan)
-            completed = True
-        except BaseException:
-            # a failing client/handler must not brick the driver: park
-            # the runtime so the next round starts clean, then re-raise
-            try:
-                rt.quiesce()
-            except Exception:
-                pass
-            raise
-        finally:
-            # always release the round's store objects and close the
-            # round, success or not
-            for p in partials.values():
-                try:
-                    rt.discard_partial(p.key)
-                except Exception:
-                    pass
-            for keys in sent.values():
-                for key, _ in keys:
-                    try:
-                        rt.discard_update(key)
-                    except Exception:
-                        pass
-            if completed:
-                self.end_round(round_id)
-            else:
-                self.abort_round(round_id)  # retriable: same rid stays live
-            self._finish_trace(tok_round, round_id, out, rt, completed)
-        out.cold_starts = rt.stats.get("cold_starts", 0) - stats0["cold_starts"]
-        out.warm_starts = rt.stats.get("warm_starts", 0) - stats0["warm_starts"]
-        out.workers = rt.worker_count()
-        return out
+            rt.quiesce(round_id=round_id)
+        except TypeError:  # a runtime without the scoped barrier
+            rt.quiesce()
 
     def _finish_trace(self, tok_round: int, round_id: int,
-                      out: RoundOutcome, rt, completed: bool) -> None:
+                      out: RoundOutcome, rt, completed: bool,
+                      job: str = "") -> None:
         """Close the round span and merge this round's samples — driver
         spans, runtime-derived worker spans, and whatever per-daemon
         telemetry the quiesce edge drained — into one RoundTrace."""
@@ -637,13 +747,25 @@ class RoundDriver:
         if not tr.enabled:
             return
         spans = tr.drain()
-        tr.reset()                      # exception paths leave begins open
         take_spans = getattr(rt, "take_spans", None)
         if take_spans is not None:
             try:
                 spans.extend(take_spans())
             except Exception:
                 pass
+        if self._inflight:
+            # rolling rounds share one tracer: the other in-flight
+            # round's finished spans go back on the buffer (its own
+            # close-out will claim them) and its open begins survive —
+            # no reset while anything is still measuring
+            other = [s for s in spans
+                     if s.round_id is not None and s.round_id != round_id]
+            spans = [s for s in spans
+                     if s.round_id is None or s.round_id == round_id]
+            for s in other:
+                tr.add(s)
+        else:
+            tr.reset()                  # exception paths leave begins open
         telemetry: Dict[str, Dict[str, list]] = {}
         take_telem = getattr(rt, "take_telemetry", None)
         if take_telem is not None:
@@ -667,7 +789,7 @@ class RoundDriver:
             meta={"completed": completed, "accepted": out.accepted,
                   "count": out.count, "crashes": out.crashes,
                   "fold_tier": out.fold_tier, "root_node": out.root_node,
-                  "runtime": getattr(rt, "name", "?")})
+                  "job": job, "runtime": getattr(rt, "name", "?")})
         self.last_trace = trace
         if self.trace_sink is not None:
             try:
@@ -675,29 +797,31 @@ class RoundDriver:
             except Exception:
                 pass
 
-    def _drive(self, out: RoundOutcome, rt, *, round_id, assignment,
-               updates, goal, n_elems, top_node, deadline_s,
-               sent: Dict[str, List[Tuple[str, float]]],
-               partials: Dict[str, PartialReady],
-               fold_plan: Optional[FoldPlan] = None) -> None:
-        # --- PLAN: the fold topology the rest of the loop interprets ---
-        if fold_plan is None:
-            fold_plan = build_fold_plan(assignment, top_node=top_node,
-                                        topology="controller")
-        st = _RoundState(round_id=round_id, n_elems=n_elems, out=out,
-                         sent=sent, partials=partials, plan=fold_plan)
+    def _round_gen(self, st: "_RoundState", rt, *, updates, goal,
+                   top_node, deadline_s):
+        """The round body as a generator: each ``yield`` is a point the
+        round can pause at (and names the phase it paused in).  Driven
+        straight through by :meth:`RoundHandle.run` this is the legacy
+        loop, operation for operation; interleaved by the rolling
+        scheduler it pauses after every dispatch/collect increment so
+        another round can make progress on the same driver."""
+        out = st.out
+        round_id = st.round_id
+        fold_plan = st.plan
         tr = self.tracer
         traced = tr.enabled
         # --- SPAWN: one mid per planned fold site ----------------------
+        st.phase = "spawn"
         tok = tr.begin("spawn", owner="driver", round_id=round_id)
         planned = {s.node: s.goal for s in fold_plan.mids}
         mid_ids = {s.node: s.agg_id for s in fold_plan.mids}
         for node, k in planned.items():
-            rt.spawn_aggregator(mid_ids[node], goal=k, n_elems=n_elems,
+            rt.spawn_aggregator(mid_ids[node], goal=k, n_elems=st.n_elems,
                                 round_id=round_id)
             st.spawn_goals[mid_ids[node]] = k
-            sent[mid_ids[node]] = []
+            st.sent[mid_ids[node]] = []
         tr.end(tok, n=float(len(planned)))
+        yield "spawn"
 
         dispatched = {node: 0 for node in planned}
         accepted = 0
@@ -715,25 +839,32 @@ class RoundDriver:
 
         # --- DISPATCH: pump updates until the aggregation goal ---------
         # the pump is manually iterated so the two sub-costs the TTA
-        # breakdown needs stay separable: pulling the generator IS the
+        # breakdown needs stay separable: pulling the feed IS the
         # client's local training; put+deliver is the wire/store edge
+        st.phase = "dispatch"
         tok = tr.begin("dispatch", owner="driver", round_id=round_id)
         train_s = deliver_s = 0.0
         pulls = delivers = 0
-        it = iter(updates)
+        feed = updates if callable(updates) else _iter_feed(updates)
         while True:
             _t = time.perf_counter() if traced else 0.0
-            try:
-                node, client_id, flat, weight = next(it)
-            except StopIteration:
+            item = feed()
+            if item is COHORT_CLOSED:
                 break
+            if item is None:
+                # nothing pending yet (serve mode): surface runtime
+                # events, hand control back, come around
+                self._route(rt.poll_events(0.0), st, draining=False)
+                yield "dispatch"
+                continue
+            node, client_id, flat, weight = item
             if traced:
                 train_s += time.perf_counter() - _t
                 pulls += 1
             if deadline is not None and time.perf_counter() > deadline:
                 # budget expired mid-cohort: stop pumping — but the
-                # update already pulled from the generator is real
-                # work; record it so the owner can requeue it
+                # update already pulled from the feed is real work;
+                # record it so the owner can requeue it
                 out.skipped.append((node, client_id, flat, weight))
                 fire_deadline()
                 break
@@ -751,16 +882,17 @@ class RoundDriver:
                 deliver_s += now - _t
                 delivers += 1
                 st.first_dispatch.setdefault(agg_id, now)
-            sent[agg_id].append((key, weight))
+            st.sent[agg_id].append((key, weight))
             dispatched[node] += 1
             accepted += 1
             self.dispatch(UpdateArrived(
                 round_id=round_id, client_id=client_id, node=node,
                 agg_id=agg_id, key=key, weight=weight))
             # opportunistic: surface partials/crashes while clients train
-            self._absorb(rt.poll_events(0.0), st, draining=False)
+            self._route(rt.poll_events(0.0), st, draining=False)
             if accepted >= goal:
                 break
+            yield "dispatch"
         if traced:
             tr.point("client_train", train_s, owner="driver",
                      round_id=round_id, parent=tok, n=float(pulls))
@@ -774,40 +906,49 @@ class RoundDriver:
         tr.end(tok, n=float(accepted))
 
         # --- COLLECT: close out stragglers, wait for counted subtrees --
+        st.phase = "collect"
+        st.draining = True
         tok = tr.begin("collect", owner="driver", round_id=round_id)
         counted = {mid_ids[node] for node in planned if dispatched[node]}
         for agg_id in mid_ids.values():
             rt.drain(agg_id)  # no-op if the task already published
-        while (counted - st.lost) - set(partials):
+        while (counted - st.lost) - set(st.partials):
             expired = deadline is not None and time.perf_counter() > deadline
             # on expiry, one last non-blocking sweep picks up partials
             # that already published before the budget ran out
-            self._absorb(rt.poll_events(timeout=0.0 if expired else 0.05),
-                         st, draining=True)
+            self._route(rt.poll_events(timeout=0.0 if expired else 0.05),
+                        st, draining=True)
             if expired:
                 fire_deadline()
-                counted = set(partials)  # close with what we have
+                counted = set(st.partials)  # close with what we have
                 break
+            yield "collect"
         with tr.span("quiesce", owner="driver", round_id=round_id,
                      parent=tok):
-            rt.quiesce()
-        tr.end(tok, n=float(len(partials)))
+            self._quiesce_runtime(round_id)
+        tr.end(tok, n=float(len(st.partials)))
 
         # --- FOLD: execute the plan's root site ------------------------
+        st.phase = "fold"
+        # the rolling seam: the scheduler opens round N+1 the first
+        # time round N pauses here — its SPAWN/DISPATCH overlap this
+        # round's root fold
+        yield "fold"
         tok = tr.begin("fold", owner="driver", round_id=round_id)
-        order = sorted(set(partials) & counted)
+        order = sorted(set(st.partials) & counted)
         if order:
             root = fold_plan.site(fold_plan.root) if fold_plan.root \
                 else None
             tier = root.tier if root is not None else "controller"
             folded = False
             if tier != "controller" and hasattr(rt, "deliver_partial"):
-                folded = self._fold_on_runtime(st, rt, order, root)
+                folded = yield from self._fold_on_runtime(
+                    st, rt, order, root)
             if not folded:
                 # re-collected subtrees keep their agg_ids, so the
                 # counted set still names every foldable partial
                 self._fold_in_controller(
-                    st, rt, sorted(set(partials) & counted),
+                    st, rt, sorted(set(st.partials) & counted),
                     root.node if root is not None else top_node)
         tr.end(tok, n=float(len(order)))
 
@@ -826,7 +967,12 @@ class RoundDriver:
         if not order:
             return
         top = top_node or order[0].split("@", 1)[-1]
-        engine = rt.engine_for(f"top@{top}")
+        # the plan's job/round tags ride the top id too: warm-engine
+        # pools stay per-job (engine_for strips the round tag), and the
+        # TopFolded below is attributable to its job.  Untagged plans
+        # produce the historical "top@node" byte for byte.
+        top_id = join_agg_id("top", st.tag_job, st.tag_rid, top)
+        engine = rt.engine_for(top_id)
         state = FedAvgState(engine=engine)
         state._ensure_acc(st.n_elems)
         sidecar = EventSidecar("top", self.metrics)
@@ -850,11 +996,11 @@ class RoundDriver:
             self.tracer.point(
                 "fold.mid", sum(st.partials[a].exec_s for a in order),
                 owner="driver", round_id=st.round_id, n=float(len(order)))
-            self.tracer.point("fold.top", fold_dt, owner=f"top@{top}",
+            self.tracer.point("fold.top", fold_dt, owner=top_id,
                               node=top, round_id=st.round_id, t0=t0,
                               n=float(len(order)))
         self.dispatch(TopFolded(
-            round_id=st.round_id, agg_id=f"top@{top}", node=top,
+            round_id=st.round_id, agg_id=top_id, node=top,
             tier="controller", count=out.count, weight=out.weight,
             exec_s=fold_dt))
 
@@ -872,7 +1018,11 @@ class RoundDriver:
         loss, spawn/ship failure) re-roots the round on the busiest
         surviving node, re-collecting any partials that died with the
         root, up to ``redispatch_limit`` attempts; returns False to
-        fall back to a controller-side fold."""
+        fall back to a controller-side fold.
+
+        A generator (driven via ``yield from`` inside the round body):
+        both wait loops pause, so a rolling round N+1 keeps dispatching
+        while this round's shipped partials fold remotely."""
         out = st.out
         want = set(order)
         root_node = root.node
@@ -891,8 +1041,9 @@ class RoundDriver:
                            and time.perf_counter() > st.deadline)
                 if expired:
                     break
-                self._absorb(rt.poll_events(timeout=0.05), st,
-                             draining=True)
+                self._route(rt.poll_events(timeout=0.05), st,
+                            draining=True)
+                yield "fold"
             if st.deadline is not None \
                     and time.perf_counter() > st.deadline:
                 # budget already gone: don't spawn a root and ship
@@ -915,9 +1066,12 @@ class RoundDriver:
                     by_node[n] = by_node.get(n, 0) + st.partials[a].count
                 root_node = max(by_node, key=lambda n: (by_node[n], n))
             # a fresh agg_id per attempt: a failed attempt may have left
-            # a stale open task under the old id on a surviving daemon
-            top_id = f"top@{root_node}" if attempt == 0 \
-                else f"top.{attempt}@{root_node}"
+            # a stale open task under the old id on a surviving daemon.
+            # Plan tags (job, rolling round) are mirrored onto the top
+            # id; untagged plans keep the historical "top@node" form
+            top_id = join_agg_id(
+                "top" if attempt == 0 else f"top.{attempt}",
+                st.tag_job, st.tag_rid, root_node)
             st.top_id, st.top_partial, st.top_crashed = top_id, None, False
             try:
                 rt.spawn_aggregator(top_id, goal=len(live),
@@ -934,8 +1088,9 @@ class RoundDriver:
                 if (st.deadline is not None
                         and time.perf_counter() > st.deadline):
                     break
-                self._absorb(rt.poll_events(timeout=0.05), st,
-                             draining=True)
+                self._route(rt.poll_events(timeout=0.05), st,
+                            draining=True)
+                yield "fold"
             st.top_id = None
             if st.top_partial is not None:
                 p = st.top_partial
@@ -977,57 +1132,72 @@ class RoundDriver:
         return False
 
     # ------------------------------------------------------------------
-    def _absorb(self, events: List[RoundEvent], st: "_RoundState", *,
-                draining: bool) -> None:
-        """Fold a batch of runtime events into the round's state."""
-        rt = self.runtime
+    def _route(self, events: List[RoundEvent], st: "_RoundState", *,
+               draining: bool) -> None:
+        """Fold a batch of runtime events into per-round state.  With
+        rolling rounds the poll that surfaces an event may belong to
+        the OTHER in-flight round — each round-scoped event is absorbed
+        into the state of the round it names, under that round's own
+        draining mode; everything else lands on the polling round."""
         for ev in events:
-            if isinstance(ev, PartialReady):
-                if (st.top_id is not None and ev.agg_id == st.top_id
-                        and ev.round_id == st.round_id
-                        and st.top_partial is None):
-                    # the runtime-side root fold published its Σ c·u.
-                    # Absorbed silently — TopFolded is the public
-                    # signal: handlers (the coordinator's RC model
-                    # included) must see the same event stream whatever
-                    # tier the root ran on, or the next round's
-                    # placement would diverge between topologies.
-                    st.top_partial = ev
-                    continue
-                if (ev.round_id != st.round_id or ev.agg_id not in st.sent
-                        or ev.agg_id in st.partials):
-                    # stale leftover (aborted round / force-released
-                    # task): reclaim the orphan object, don't surface
-                    self.stats["stale_dropped"] += 1
-                    rt.discard_partial(ev.key)
-                    continue
-                st.partials[ev.agg_id] = ev
-                if self.tracer.enabled:
-                    t0d = st.first_dispatch.get(ev.agg_id)
-                    if t0d is not None:
-                        # dispatch → publish latency for this subtree
-                        self.tracer.point(
-                            "subtree", time.perf_counter() - t0d,
-                            owner=ev.agg_id, round_id=st.round_id,
-                            t0=t0d, worker=ev.worker, n=float(ev.count))
-                self.dispatch(ev)
-            elif isinstance(ev, WorkerCrashed):
-                if not self.dispatch(ev):
-                    # stale leftover from a finished round (the guard
-                    # counted it): the agg_id may name THIS round's
-                    # identically-named subtree — re-dispatching it
-                    # would respawn a healthy mid
-                    continue
-                st.out.crashes += 1
-                self.stats["crashes"] += 1
-                if st.top_id is not None and ev.agg_id == st.top_id:
-                    # the root fold died (node loss / ship failure):
-                    # _fold_on_runtime re-roots; nothing to re-dispatch
-                    st.top_crashed = True
-                    continue
-                self._redispatch(ev, st, draining=draining)
+            tgt = None
+            if ev.round_id is not None and ev.round_id != st.round_id:
+                tgt = self._inflight.get(ev.round_id)
+            if tgt is not None:
+                self._absorb_one(ev, tgt, draining=tgt.draining)
             else:
-                self.dispatch(ev)
+                self._absorb_one(ev, st, draining=draining)
+
+    def _absorb_one(self, ev: RoundEvent, st: "_RoundState", *,
+                    draining: bool) -> None:
+        """Fold one runtime event into the round's state."""
+        rt = self.runtime
+        if isinstance(ev, PartialReady):
+            if (st.top_id is not None and ev.agg_id == st.top_id
+                    and ev.round_id == st.round_id
+                    and st.top_partial is None):
+                # the runtime-side root fold published its Σ c·u.
+                # Absorbed silently — TopFolded is the public
+                # signal: handlers (the coordinator's RC model
+                # included) must see the same event stream whatever
+                # tier the root ran on, or the next round's
+                # placement would diverge between topologies.
+                st.top_partial = ev
+                return
+            if (ev.round_id != st.round_id or ev.agg_id not in st.sent
+                    or ev.agg_id in st.partials):
+                # stale leftover (aborted round / force-released
+                # task): reclaim the orphan object, don't surface
+                self.stats["stale_dropped"] += 1
+                rt.discard_partial(ev.key)
+                return
+            st.partials[ev.agg_id] = ev
+            if self.tracer.enabled:
+                t0d = st.first_dispatch.get(ev.agg_id)
+                if t0d is not None:
+                    # dispatch → publish latency for this subtree
+                    self.tracer.point(
+                        "subtree", time.perf_counter() - t0d,
+                        owner=ev.agg_id, round_id=st.round_id,
+                        t0=t0d, worker=ev.worker, n=float(ev.count))
+            self.dispatch(ev)
+        elif isinstance(ev, WorkerCrashed):
+            if not self.dispatch(ev):
+                # stale leftover from a finished round (the guard
+                # counted it): the agg_id may name THIS round's
+                # identically-named subtree — re-dispatching it
+                # would respawn a healthy mid
+                return
+            st.out.crashes += 1
+            self.stats["crashes"] += 1
+            if st.top_id is not None and ev.agg_id == st.top_id:
+                # the root fold died (node loss / ship failure):
+                # _fold_on_runtime re-roots; nothing to re-dispatch
+                st.top_crashed = True
+                return
+            self._redispatch(ev, st, draining=draining)
+        else:
+            self.dispatch(ev)
 
     def _redispatch(self, ev: WorkerCrashed, st: "_RoundState", *,
                     draining: bool) -> None:
@@ -1062,3 +1232,106 @@ class RoundDriver:
         if surviving:
             st.out.redispatched += 1
             self.stats["redispatched"] += 1
+
+
+class RoundHandle:
+    """A resumable in-flight round — what :meth:`RoundDriver.open_round`
+    returns.  :meth:`step` advances the round one increment and reports
+    the phase it paused in (``'spawn' | 'dispatch' | 'collect' |
+    'fold' | 'done'``); :meth:`run` steps to completion, which is the
+    legacy synchronous ``run_round`` behavior exactly.  The rolling
+    scheduler interleaves two handles, opening round N+1 once round N
+    first pauses in ``'fold'``."""
+
+    def __init__(self, driver: RoundDriver, st: _RoundState,
+                 gen, tok_round: int, stats0: Dict[str, int]):
+        self.driver = driver
+        self.st = st
+        self._gen = gen
+        self._tok_round = tok_round
+        self._stats0 = stats0
+        self.phase = "open"
+
+    @property
+    def round_id(self) -> int:
+        return self.st.round_id
+
+    @property
+    def outcome(self) -> RoundOutcome:
+        return self.st.out
+
+    @property
+    def done(self) -> bool:
+        return self.phase == "done"
+
+    def step(self) -> str:
+        """Advance the round to its next pause point; returns the phase
+        paused in, or ``'done'`` once the round closed (outcome final)."""
+        if self.phase == "done":
+            return "done"
+        try:
+            self.phase = next(self._gen)
+        except StopIteration:
+            self._finish(completed=True)
+        except BaseException:
+            # a failing client/handler must not brick the driver: park
+            # the runtime (scoped, so a co-open round survives) and
+            # close this round retriable, then re-raise
+            try:
+                self.driver._quiesce_runtime(self.st.round_id)
+            except Exception:
+                pass
+            self._finish(completed=False)
+            raise
+        return self.phase
+
+    def run(self) -> RoundOutcome:
+        """Drive the round to completion in place."""
+        while not self.done:
+            self.step()
+        return self.st.out
+
+    def abort(self) -> RoundOutcome:
+        """Close an unfinished round early: release its staged store
+        objects and free its driver slot WITHOUT advancing the
+        stale-round horizon (a retry may reuse the round id)."""
+        if self.done:
+            return self.st.out
+        self._gen.close()
+        try:
+            self.driver._quiesce_runtime(self.st.round_id)
+        except Exception:
+            pass
+        self._finish(completed=False)
+        return self.st.out
+
+    def _finish(self, completed: bool) -> None:
+        # always release the round's store objects and close the
+        # round, success or not — same sweep order as ever
+        drv, st = self.driver, self.st
+        rt = drv.runtime
+        for p in st.partials.values():
+            try:
+                rt.discard_partial(p.key)
+            except Exception:
+                pass
+        for keys in st.sent.values():
+            for key, _ in keys:
+                try:
+                    rt.discard_update(key)
+                except Exception:
+                    pass
+        if completed:
+            drv.end_round(st.round_id)
+        else:
+            drv.abort_round(st.round_id)  # retriable: same rid stays live
+        drv._inflight.pop(st.round_id, None)
+        drv._finish_trace(self._tok_round, st.round_id, st.out, rt,
+                          completed, job=st.job)
+        out = st.out
+        out.cold_starts = rt.stats.get("cold_starts", 0) \
+            - self._stats0["cold_starts"]
+        out.warm_starts = rt.stats.get("warm_starts", 0) \
+            - self._stats0["warm_starts"]
+        out.workers = rt.worker_count()
+        self.phase = st.phase = "done"

@@ -32,6 +32,8 @@ Catalog (see runtime/README.md for the full state machine):
   ``NodeRejoined``    a restarted daemon was re-adopted (epoch bump)
   ``RoundDeadline``   the round's wall-clock budget expired
   ``ScaleDecision``   the elastic controller re-sized the hierarchy
+  ``RoundOpened``     a (possibly rolling) round started accepting work
+  ``UpdateShed``      the ingress gateway refused an update (backpressure)
 """
 from __future__ import annotations
 
@@ -153,6 +155,30 @@ class RoundDeadline(RoundEvent):
 
 
 @dataclass(frozen=True)
+class RoundOpened(RoundEvent):
+    """A round began accepting dispatches.  Under the rolling-round
+    scheduler this fires while the previous round's fold is still in
+    flight — the overlap window between consecutive ``RoundOpened`` /
+    ``TopFolded`` pairs is the pipeline gain the serve layer measures."""
+
+    job: str = ""          # '' = the single-job (library) path
+    goal: int = 0
+
+
+@dataclass(frozen=True)
+class UpdateShed(RoundEvent):
+    """The ingress gateway refused a submission: the job's quota (or
+    the global ingress budget) was full.  Never a silent drop — the
+    pusher got a ``busy`` reply carrying ``retry_after_s`` and is
+    expected to come back."""
+
+    job: str = ""
+    client_id: str = ""
+    retry_after_s: float = 0.0
+    queued: int = 0        # queue depth at refusal (the pressure signal)
+
+
+@dataclass(frozen=True)
 class ScaleDecision(RoundEvent):
     """The elastic controller re-planned the hierarchy for the load."""
 
@@ -168,7 +194,7 @@ EVENT_TYPES: Dict[str, Type[RoundEvent]] = {
     for cls in (
         UpdateArrived, PartialReady, PartialShipped, TopFolded,
         GoalReached, WorkerCrashed, NodeJoined, NodeLost, NodeRejoined,
-        RoundDeadline, ScaleDecision,
+        RoundDeadline, RoundOpened, UpdateShed, ScaleDecision,
     )
 }
 

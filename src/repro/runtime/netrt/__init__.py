@@ -11,6 +11,7 @@ handshake, and the failure model.
 """
 from repro.runtime.netrt.faults import FaultPlan
 from repro.runtime.netrt.remote import (
+    BusyError,
     NoLiveNodeError,
     RemoteRuntime,
     push_update,
@@ -27,7 +28,7 @@ from repro.runtime.netrt.transport import (
 def __getattr__(name):
     # lazy: `python -m repro.runtime.netrt.netd` must not re-import the
     # daemon module through the package (runpy double-import warning)
-    if name in ("NodeDaemon", "spawn_local_daemon"):
+    if name in ("NodeDaemon", "spawn_local_daemon", "reap_local_daemon"):
         from repro.runtime.netrt import netd
         return getattr(netd, name)
     raise AttributeError(name)
@@ -35,6 +36,7 @@ def __getattr__(name):
 
 __all__ = [
     "Backoff",
+    "BusyError",
     "FaultPlan",
     "Frame",
     "FrameConn",
@@ -45,5 +47,6 @@ __all__ = [
     "RemoteRuntime",
     "connect",
     "push_update",
+    "reap_local_daemon",
     "spawn_local_daemon",
 ]

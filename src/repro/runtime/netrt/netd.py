@@ -351,6 +351,10 @@ class NodeDaemon:
                 "node": self.node, "proto": PROTO_VERSION,
                 "capacity": self.capacity, "runtime": self.rt.name,
                 "pid": os.getpid(), "epoch": self.epoch,
+                # the shm name space this process owns (shmproc only):
+                # whoever learns this daemon died can reclaim every
+                # segment under it — atexit never runs after SIGKILL
+                "store_prefix": getattr(self.rt, "store_prefix", ""),
             })
         elif kind == "spawn":
             agg_id = m["agg_id"]
@@ -450,8 +454,21 @@ class NodeDaemon:
                 pass
         elif kind == "quiesce":
             self._push_events()  # published partials reach the wire first
-            self.rt.quiesce()
-            self._round_cleanup()
+            rid = m.get("round_id")
+            if rid is None:
+                self.rt.quiesce()
+                self._round_cleanup()
+            else:
+                # rolling rounds: a round-scoped barrier must not tear
+                # down the OTHER in-flight round's open tasks or its
+                # root-fold buffers
+                try:
+                    self.rt.quiesce(round_id=int(rid))
+                except TypeError:
+                    self.rt.quiesce()
+                for tid in [t for t, st in self._tops.items()
+                            if st.get("round_id") == int(rid)]:
+                    self._tops.pop(tid, None)
             conn.send("quiesced", {
                 "stats": {k: v for k, v in self.rt.stats.items()
                           if isinstance(v, (int, float))},
@@ -530,7 +547,10 @@ def spawn_local_daemon(node: str, *, runtime: str = "inproc",
             "--compress", str(int(compress)), "--port-file", pf]
     if fault_spec is not None:
         argv += ["--fault-spec", fault_spec.to_json()]
-    proc = subprocess.Popen(argv, env=env, stdout=stdout)
+    # own session: reap_local_daemon can killpg the daemon AND its
+    # forked shm workers (SIGKILLing just the daemon orphans them)
+    proc = subprocess.Popen(argv, env=env, stdout=stdout,
+                            start_new_session=True)
     deadline = time.perf_counter() + timeout
     try:
         while not os.path.exists(pf):
@@ -539,10 +559,44 @@ def spawn_local_daemon(node: str, *, runtime: str = "inproc",
                 raise RuntimeError(f"netd {node} failed to start")
             time.sleep(0.02)
         with open(pf) as f:
-            addr = f.read().strip()
+            lines = f.read().splitlines()
+        addr = lines[0].strip()
+        # second port-file line: the daemon's shm prefix — kept on the
+        # Popen so reap_local_daemon can sweep after a SIGKILL
+        proc.lifl_store_prefix = (lines[1].strip()
+                                  if len(lines) > 1 else "")
     finally:
         shutil.rmtree(tmpd, ignore_errors=True)
     return proc, addr
+
+
+def reap_local_daemon(proc, *, timeout: float = 5.0) -> int:
+    """Tear down a ``spawn_local_daemon`` child for good: kill its
+    whole process group (the daemon plus any forked shm workers —
+    plain ``proc.kill()`` orphans them), wait, then sweep whatever its
+    shm prefix left in /dev/shm.  Safe after the process already died
+    (the FaultPlan kill path); returns the number of segments swept."""
+    import signal as _signal
+    import subprocess
+
+    from repro.core.objectstore import sweep_dead_segments
+
+    if proc.poll() is None:
+        try:
+            os.killpg(proc.pid, _signal.SIGKILL)
+        except (ProcessLookupError, PermissionError):
+            proc.kill()
+    try:
+        proc.wait(timeout=timeout)
+    except subprocess.TimeoutExpired:
+        pass
+    else:
+        # the group may still hold workers even after the leader died
+        try:
+            os.killpg(proc.pid, _signal.SIGKILL)
+        except (ProcessLookupError, PermissionError):
+            pass
+    return sweep_dead_segments(getattr(proc, "lifl_store_prefix", ""))
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -575,6 +629,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:
             f.write(daemon.addr + "\n")
+            f.write(getattr(daemon.rt, "store_prefix", "") + "\n")
         os.rename(tmp, args.port_file)
     print(f"netd {args.node} ({args.runtime}) listening on {daemon.addr}",
           flush=True)

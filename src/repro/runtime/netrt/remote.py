@@ -63,20 +63,33 @@ class NoLiveNodeError(ConnectionError):
     """Every node daemon of this runtime is unreachable."""
 
 
+class BusyError(RuntimeError):
+    """The serving side kept shedding this submission (admission
+    backpressure) past the client's patience — carries the server's
+    last ``retry_after_s`` hint for an outer scheduler to honor."""
+
+    def __init__(self, msg: str, *, retry_after_s: float = 0.0):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
+
+
 class _Node:
     """Controller-side state for one netd peer."""
 
     __slots__ = ("name", "addr", "conn", "capacity", "workers", "alive",
-                 "delivered", "stats", "runtime_name", "epoch", "telemetry")
+                 "delivered", "stats", "runtime_name", "epoch",
+                 "store_prefix", "telemetry")
 
     def __init__(self, name: str, addr: str, conn: FrameConn,
-                 capacity: float, runtime_name: str, epoch: int = 0):
+                 capacity: float, runtime_name: str, epoch: int = 0,
+                 store_prefix: str = ""):
         self.name = name
         self.addr = addr
         self.conn = conn
         self.capacity = capacity
         self.runtime_name = runtime_name
         self.epoch = epoch                 # welcome's restart counter
+        self.store_prefix = store_prefix   # its /dev/shm name space
         self.workers = 0
         self.alive = True
         self.delivered: Set[str] = set()   # keys resident in its store
@@ -139,7 +152,8 @@ class RemoteRuntime(_WarmEngineMixin):
         stash: List[Frame] = []
         w = conn.recv_expect(("welcome",), timeout, stash=stash).meta
         node = _Node(w["node"], addr, conn, float(w.get("capacity", 20.0)),
-                     w.get("runtime", "?"), epoch=int(w.get("epoch", 0)))
+                     w.get("runtime", "?"), epoch=int(w.get("epoch", 0)),
+                     store_prefix=w.get("store_prefix", "") or "")
         if node.name in self._nodes:
             conn.close()
             raise ValueError(f"duplicate node name {node.name!r} "
@@ -202,11 +216,13 @@ class RemoteRuntime(_WarmEngineMixin):
 
     def _adopt(self, node: _Node, conn: FrameConn, w: Dict) -> None:
         old_epoch = node.epoch
+        old_prefix = node.store_prefix
         node.conn = conn
         node.alive = True
         node.capacity = float(w.get("capacity", node.capacity))
         node.runtime_name = w.get("runtime", node.runtime_name)
         node.epoch = int(w.get("epoch", 0))
+        node.store_prefix = w.get("store_prefix", "") or ""
         # whatever epoch we got, the daemon-side store owes us nothing:
         # a restarted process is empty, a parked one swept on our
         # disconnect — every staged key re-ships its blob on demand
@@ -216,6 +232,18 @@ class RemoteRuntime(_WarmEngineMixin):
         self._local["readopted"] += 1
         if node.epoch != old_epoch:
             self._local["epoch_bumps"] += 1
+            if old_prefix and old_prefix != node.store_prefix:
+                # a fresh process under the old name: its predecessor
+                # died without atexit (SIGKILL), so the old epoch's shm
+                # segments are orphans — reclaim the whole name space.
+                # Best-effort: on a remote host the names simply don't
+                # exist in our /dev/shm and nothing happens.
+                from repro.core.objectstore import sweep_dead_segments
+
+                swept = sweep_dead_segments(old_prefix)
+                if swept:
+                    self._local["swept_segments"] = (
+                        self._local.get("swept_segments", 0) + swept)
         self._pending.append(NodeRejoined(
             node=node.name, epoch=node.epoch, old_epoch=old_epoch,
             capacity=node.capacity))
@@ -484,7 +512,13 @@ class RemoteRuntime(_WarmEngineMixin):
             self._partial_home[ev.key] = node.name
             self._open.pop(ev.agg_id, None)
 
-    def quiesce(self, timeout: float = 5.0) -> None:
+    def quiesce(self, timeout: float = 5.0,
+                round_id: Optional[int] = None) -> None:
+        """Fleet-wide settle barrier.  With ``round_id`` the barrier is
+        scoped: each daemon quiesces only that round's tasks and
+        root-fold buffers, so a rolling round can settle while the next
+        one keeps dispatching (the driver passes the scope whenever
+        another round is in flight)."""
         self._flush_round_scoped_pending()
         # a genuinely dead daemon surfaces as an immediate EOF/reset;
         # the timeout only fires for a connected-but-busy one (a shm
@@ -492,8 +526,9 @@ class RemoteRuntime(_WarmEngineMixin):
         # the reply budget is deliberately generous — declaring a slow
         # healthy node dead would remove it from the fleet for good
         reply_timeout = max(timeout, 60.0)
+        scope = {} if round_id is None else {"round_id": int(round_id)}
         for node in self._alive():
-            if not self._send(node, "quiesce", {}):
+            if not self._send(node, "quiesce", scope):
                 continue
             try:
                 stash: List[Frame] = []
@@ -741,11 +776,14 @@ def push_update(addr: str, client_id: str, update: np.ndarray,
                 weight: float = 1.0, *, timeout: float = 10.0,
                 submission_id: Optional[str] = None,
                 round_id: Optional[int] = None,
+                job: str = "",
                 retries: int = 2,
+                busy_retries: int = 64,
                 backoff: Optional[Backoff] = None) -> Dict:
     """Submit one externally-computed model update to a serving
-    :class:`~repro.api.Session` (``Session.serve(addr)``) from any
-    process.  Returns the server's ack meta; raises on rejection.
+    :class:`~repro.api.Session` (``Session.serve(addr)``) or
+    :class:`~repro.serve.AggregationService` from any process.
+    Returns the server's ack meta; raises on rejection.
 
     Transport failures (connect refused, the connection dying before
     the ack) are retried up to ``retries`` times on the shared
@@ -754,9 +792,17 @@ def push_update(addr: str, client_id: str, update: np.ndarray,
     once per call) — the serving session dedupes on
     ``(round_id, client_id, submission_id)``, so a retry racing an
     ack that was sent but never read can never double-fold (its ack
-    comes back ``duplicate=True`` instead).  An explicit *rejection*
-    (``error`` frame: wrong size, stale ``round_id``) raises
-    ``ValueError`` immediately — retrying a refusal cannot succeed."""
+    comes back ``duplicate=True`` instead).
+
+    Admission backpressure (a ``busy`` frame carrying
+    ``retry_after_s``) is not a failure: the client sleeps the
+    *server's* hint via :meth:`Backoff.sleep_hint` — the exponential
+    schedule doesn't advance — and resubmits, up to ``busy_retries``
+    times or the backoff's ``deadline_s``.  The final ack meta carries
+    ``shed``: how many times this submission was pushed back before it
+    landed.  An explicit *rejection* (``error`` frame: wrong size,
+    stale ``round_id``) raises ``ValueError`` immediately — retrying a
+    refusal cannot succeed."""
     flat = np.ascontiguousarray(update)
     if submission_id is None:
         submission_id = new_object_key()
@@ -765,8 +811,11 @@ def push_update(addr: str, client_id: str, update: np.ndarray,
             "dtype": str(flat.dtype), "shape": list(flat.shape)}
     if round_id is not None:
         meta["round_id"] = int(round_id)
+    if job:
+        meta["job"] = job     # multi-job service routing (repro.serve)
     bo = backoff if backoff is not None else Backoff(base=0.1, cap=1.0)
     attempt = 0
+    sheds = 0
     while True:
         try:
             conn = connect(addr, timeout=timeout)
@@ -774,13 +823,25 @@ def push_update(addr: str, client_id: str, update: np.ndarray,
                 conn.send("hello", {"role": "client"})
                 conn.recv_expect(("welcome",), timeout)
                 conn.send("submit_update", meta, blob=flat)
-                reply = conn.recv_expect(("ack", "error"), timeout)
+                reply = conn.recv_expect(("ack", "error", "busy"),
+                                         timeout)
             finally:
                 conn.close()
             if reply.kind == "error":
                 raise ValueError(
                     f"submit_update rejected: {reply.meta['msg']}")
-            return reply.meta
+            if reply.kind == "busy":
+                sheds += 1
+                hint = reply.meta.get("retry_after_s", 0.05)
+                if sheds > busy_retries or not bo.sleep_hint(hint):
+                    raise BusyError(
+                        f"submit_update shed {sheds} times by {addr} "
+                        f"(queued={reply.meta.get('queued')}); giving "
+                        f"up", retry_after_s=hint)
+                continue
+            out = dict(reply.meta)
+            out["shed"] = sheds
+            return out
         except PeerDead:
             attempt += 1
             if attempt > retries or not bo.sleep():

@@ -133,6 +133,32 @@ class Backoff:
         time.sleep(delay)
         return True
 
+    def hint_delay(self, hint_s: float) -> Optional[float]:
+        """A server-supplied pacing hint (a ``busy`` reply's
+        ``retry_after_s``): jittered and deadline-clipped like a
+        scheduled delay, counted as an attempt, but the exponential
+        schedule does NOT advance — backpressure is the server pacing
+        the client, not a failure to punish."""
+        self._arm()
+        delay = max(0.0, float(hint_s)) * (
+            1.0 + self.jitter * (2.0 * self._rng.random() - 1.0))
+        if self._deadline is not None:
+            left = self._deadline - time.perf_counter()
+            if left <= 0:
+                return None
+            delay = min(delay, left)
+        self._attempt += 1
+        return delay
+
+    def sleep_hint(self, hint_s: float) -> bool:
+        """Sleep a server-supplied ``retry_after_s`` hint; ``False``
+        once the deadline budget is gone."""
+        delay = self.hint_delay(hint_s)
+        if delay is None:
+            return False
+        time.sleep(delay)
+        return True
+
     def __iter__(self) -> Iterator[float]:
         """Yield the schedule (for tests / non-sleeping pacers); ends
         when the deadline budget does, never for an unbounded policy."""

@@ -378,23 +378,35 @@ class ShmRuntime:
             raise
         return got
 
-    def quiesce(self, timeout: float = 5.0) -> None:
+    def quiesce(self, timeout: float = 5.0,
+                agg_ids: Optional[set] = None) -> None:
         """Wait for every open task to close (PARTIAL or EMPTY), then
         force-release stragglers.  Call between rounds so a late EMPTY
         from a zero-update drain can't collide with the next round's
-        task under the same agg_id (stale records are seq-guarded)."""
+        task under the same agg_id (stale records are seq-guarded).
+        ``agg_ids`` scopes the barrier to those tasks only (a rolling
+        round closing out while the next one's tasks stay open)."""
+        def waiting():
+            if agg_ids is None:
+                return bool(self._route)
+            return any(a in agg_ids for a in self._route)
+
         deadline = time.perf_counter() + timeout
-        while self._route and time.perf_counter() < deadline:
+        while waiting() and time.perf_counter() < deadline:
             try:
                 self._scan()
             except Exception:
                 pass
-            if self._crashes:
-                self._crashes.clear()  # already reaped; round is over
-            if self._route:
+            if self._crashes and agg_ids is None:
+                # already reaped; round is over.  (Scoped barriers keep
+                # the buffer: a crash may belong to the OTHER in-flight
+                # round, which still needs to see it via poll().)
+                self._crashes.clear()
+            if waiting():
                 time.sleep(0.001)
         for agg_id in list(self._route):
-            self.release(agg_id)
+            if agg_ids is None or agg_id in agg_ids:
+                self.release(agg_id)
 
     def _on_partial(self, w: _Worker, rec: Record) -> PartialResult:
         agg_id = w.agg_id or f"worker{w.idx}"

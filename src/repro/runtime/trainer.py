@@ -126,6 +126,10 @@ class FederatedTrainer:
         checkpoint_every: int = 5,
         seed: int = 0,
         trace_path: Optional[str] = None,
+        job: str = "",
+        job_weight: float = 1.0,
+        coordinator: Optional[Coordinator] = None,
+        driver: Optional[RoundDriver] = None,
     ):
         self.model = model
         self.params = params
@@ -141,9 +145,22 @@ class FederatedTrainer:
         self.server_opt = server_opt
         self.server_lr = server_lr
         self.server_state = init_server_state(server_opt, params)
-        self.coordinator = Coordinator(
-            Selector([c.info for c in clients], seed=seed), self.nodes
-        )
+        # serve mode: several trainers (one per job) share ONE
+        # coordinator — each registers its cohort under its job name
+        # and plans against a weighted fair share of the fleet.  The
+        # default (no injection) is the historical one-trainer-one-
+        # coordinator library path, untouched.
+        self.job = job
+        if coordinator is not None:
+            self.coordinator = coordinator
+            if job:
+                coordinator.register_job(
+                    job, [c.info for c in clients], weight=job_weight,
+                    seed=seed)
+        else:
+            self.coordinator = Coordinator(
+                Selector([c.info for c in clients], seed=seed), self.nodes
+            )
         self.metrics = MetricsMap()
         self.rng = np.random.default_rng(seed)
         self.ckpt = AsyncCheckpointer(checkpoint_dir) if checkpoint_dir else None
@@ -162,7 +179,7 @@ class FederatedTrainer:
         self._seen_submissions_cap = 4096
         self.ingress: Dict[str, int] = {
             "queued": 0, "duplicates": 0, "refused": 0,
-            "stale_round": 0, "requeued": 0}
+            "stale_round": 0, "requeued": 0, "shed": 0}
         # externals popped by the current round's cohort generator —
         # the requeue pass matches them against RoundOutcome.skipped
         self._popped_external: List[Tuple[str, np.ndarray, float]] = []
@@ -174,7 +191,11 @@ class FederatedTrainer:
         self.traces: "OrderedDict[int, RoundTrace]" = OrderedDict()
         self._traces_cap = 64
         self._runtime = None          # lazy: persists across rounds (warm)
-        self._driver: Optional[RoundDriver] = None
+        # an injected driver is shared infrastructure (serve mode): the
+        # owner wires the coordinator's event handlers ONCE — wiring
+        # them here per-trainer would double-count every EWMA sample
+        self._driver: Optional[RoundDriver] = driver
+        self._owns_driver = driver is None
         self._closed = False
 
     # ------------------------------------------------------------------
@@ -245,11 +266,11 @@ class FederatedTrainer:
         submission to a round: one older than the next round to run is
         refused (``ValueError``) — it could only fold into a round its
         sender never meant.  Returns ``True`` when queued."""
-        if round_id is not None and round_id < self.coordinator.round_id:
+        next_round = self.coordinator.job_round(self.job)
+        if round_id is not None and round_id < next_round:
             self.ingress["stale_round"] += 1
             raise ValueError(
-                f"stale round_id {round_id}: next round is "
-                f"{self.coordinator.round_id}")
+                f"stale round_id {round_id}: next round is {next_round}")
         if submission_id is not None:
             seen_key = (client_id, submission_id)
             if seen_key in self._seen_submissions:
@@ -264,7 +285,7 @@ class FederatedTrainer:
                 f"update has {flat.size} elements, model has "
                 f"{self._flat_params_size()}")
         if submission_id is not None:
-            self._seen_submissions[seen_key] = self.coordinator.round_id
+            self._seen_submissions[seen_key] = next_round
             while len(self._seen_submissions) > self._seen_submissions_cap:
                 self._seen_submissions.popitem(last=False)
         self._external.append((client_id, flat, float(weight)))
@@ -304,74 +325,71 @@ class FederatedTrainer:
         if self._closed:
             raise RuntimeError("trainer is closed")
 
+        tround = self.open_round(
+            client_lr=client_lr, client_batch_size=client_batch_size,
+            client_epochs=client_epochs, deadline_s=deadline_s,
+            sampler=sampler)
+        tround.handle.run()
+        return tround.finalize()
+
+    # ------------------------------------------------------------------
+    def open_round(self, *, client_lr: float = 0.01,
+                   client_batch_size: int = 32, client_epochs: int = 1,
+                   deadline_s: Optional[float] = None,
+                   sampler: Optional[Any] = None,
+                   feed: Optional[Any] = None,
+                   feed_factory: Optional[Any] = None,
+                   goal: Optional[int] = None,
+                   driver_round_id: Optional[int] = None,
+                   tag_rounds: bool = False) -> "_TrainerRound":
+        """Plan one round and open it on the driver; returns a
+        :class:`_TrainerRound` whose ``handle`` is resumable (the serve
+        scheduler interleaves two) and whose :meth:`~_TrainerRound.
+        finalize` applies the server optimizer once the handle is done.
+
+        ``feed`` replaces the cohort generator (serve mode: the gateway
+        feeds admitted external updates under a close-out policy);
+        ``driver_round_id`` decouples the driver's globally-unique
+        round id from the job's own round number (the plan's)."""
+        if self._closed:
+            raise RuntimeError("trainer is closed")
         t0 = time.perf_counter()
         self._ensure_runtime()
-        self._popped_external = []
+        if not self.driver._inflight:
+            # rolling rounds share the popped-external log; reset it
+            # only when nothing is in flight or the requeue pass of a
+            # live round would lose its matches
+            self._popped_external = []
         # sampler: per-round client selection as a pluggable policy —
         # `sampler(round_id, pool) -> cohort` replaces the built-in
         # diversity selector for this round (seed it for reproducibility)
-        plan = self.coordinator.plan_round(self.round_cfg, sampler=sampler)
-        goal = self.round_cfg.aggregation_goal
-        outcome = self.driver.run_round(
-            round_id=plan.round_id,
-            assignment=plan.placement.assignment,
-            updates=self._cohort_updates(
+        plan = self.coordinator.plan_round(
+            self.round_cfg, sampler=sampler, job=self.job,
+            tag_rounds=tag_rounds)
+        goal = goal if goal is not None else self.round_cfg.aggregation_goal
+        if feed_factory is not None:
+            # serve mode: the feed needs the plan (node slots) before
+            # the driver sees it
+            updates = feed_factory(plan)
+        elif feed is not None:
+            updates = feed
+        else:
+            updates = self._cohort_updates(
                 plan, lr=client_lr, batch_size=client_batch_size,
-                epochs=client_epochs),
+                epochs=client_epochs)
+        handle = self.driver.open_round(
+            round_id=(driver_round_id if driver_round_id is not None
+                      else plan.round_id),
+            assignment=plan.placement.assignment,
+            updates=updates,
             goal=goal,
             n_elems=self._flat_params_size(),
             top_node=plan.top_node,
             deadline_s=deadline_s,
             fold_plan=plan.fold_plan,
+            job=self.job,
         )
-
-        # --- requeue skipped external submissions -----------------------
-        # An external update the driver pulled but never dispatched
-        # (deadline hit, lost subtree, full node) must not vanish: unlike
-        # a locally trained client it cannot be regenerated, so it rides
-        # the next cohort instead.  Match by array identity — the same
-        # object the generator yielded comes back in outcome.skipped.
-        if outcome.skipped and self._popped_external:
-            ext_ids = {id(flat): (cid, flat, w)
-                       for cid, flat, w in self._popped_external}
-            requeued = [ext_ids[id(flat)]
-                        for _node, _cid, flat, _w in outcome.skipped
-                        if id(flat) in ext_ids]
-            for item in reversed(requeued):
-                self._external.appendleft(item)
-            self.ingress["requeued"] += len(requeued)
-
-        # --- server applies the aggregated update -----------------------
-        if outcome.delta is not None:
-            delta_tree = _unflatten_like(outcome.delta, self.params)
-            self.params, self.server_state = apply_server_opt(
-                self.server_opt, self.params, self.server_state, delta_tree,
-                lr=-self.server_lr,  # delta = new - old, so apply +lr·delta
-            )
-        # (E_{i,t}/k_{i,t} now reach the capacity model through the
-        # PartialReady events the coordinator subscribes to — the same
-        # events that arrive over the wire in multi-node rounds)
-        version = self.coordinator.finish_round()
-        if self.ckpt and version % self.checkpoint_every == 0:
-            self.ckpt.submit(version, self.params)
-        # round over: hand accumulators back so next round's aggregators
-        # at the same positions start warm instead of reallocating
-        self._runtime.recycle_engines()
-
-        rec = {
-            "round": plan.round_id,
-            "updates": float(outcome.accepted),
-            "nodes_used": float(len(plan.placement.assignment)),
-            "inter_node": float(plan.inter_node_updates),
-            "cold_starts": float(outcome.cold_starts),
-            "reused": float(outcome.warm_starts),
-            "workers": float(outcome.workers),
-            "crashes": float(outcome.crashes),
-            "redispatched": float(outcome.redispatched),
-            "wall_s": time.perf_counter() - t0,
-        }
-        self.log.append(rec)
-        return rec
+        return _TrainerRound(self, plan, handle, t0)
 
     # ------------------------------------------------------------------
     def _cohort_updates(self, plan, *, lr, batch_size, epochs
@@ -441,6 +459,85 @@ class FederatedTrainer:
         out = {"loss": float(loss)}
         out.update({k: float(v) for k, v in aux.items()})
         return out
+
+
+class _TrainerRound:
+    """One opened round on a :class:`FederatedTrainer`: the driver's
+    resumable handle plus the trainer-side close-out (requeue skipped
+    externals, apply the server optimizer, finish the coordinator
+    round).  ``run_round`` drives it synchronously; the serve scheduler
+    steps ``handle`` itself and calls :meth:`finalize` when done."""
+
+    def __init__(self, trainer: FederatedTrainer, plan, handle, t0: float):
+        self.trainer = trainer
+        self.plan = plan
+        self.handle = handle
+        self.t0 = t0
+        self.record: Optional[Dict[str, float]] = None
+
+    def finalize(self) -> Dict[str, float]:
+        """Close the round out trainer-side (requires ``handle.done``).
+        Idempotent: the second call returns the first record."""
+        if self.record is not None:
+            return self.record
+        if not self.handle.done:
+            raise RuntimeError("round still in flight")
+        tr, plan, outcome = self.trainer, self.plan, self.handle.outcome
+
+        # --- requeue skipped external submissions -----------------------
+        # An external update the driver pulled but never dispatched
+        # (deadline hit, lost subtree, full node) must not vanish: unlike
+        # a locally trained client it cannot be regenerated, so it rides
+        # the next cohort instead.  Match by array identity — the same
+        # object the generator yielded comes back in outcome.skipped.
+        if outcome.skipped and tr._popped_external:
+            ext_ids = {id(flat): (cid, flat, w)
+                       for cid, flat, w in tr._popped_external}
+            requeued = [ext_ids[id(flat)]
+                        for _node, _cid, flat, _w in outcome.skipped
+                        if id(flat) in ext_ids]
+            for item in reversed(requeued):
+                tr._external.appendleft(item)
+            tr.ingress["requeued"] += len(requeued)
+
+        # --- server applies the aggregated update -----------------------
+        if outcome.delta is not None:
+            delta_tree = _unflatten_like(outcome.delta, tr.params)
+            tr.params, tr.server_state = apply_server_opt(
+                tr.server_opt, tr.params, tr.server_state, delta_tree,
+                lr=-tr.server_lr,  # delta = new - old, so apply +lr·delta
+            )
+        # (E_{i,t}/k_{i,t} now reach the capacity model through the
+        # PartialReady events the coordinator subscribes to — the same
+        # events that arrive over the wire in multi-node rounds)
+        version = tr.coordinator.finish_round(job=tr.job,
+                                              round_id=plan.round_id)
+        if tr.ckpt and version % tr.checkpoint_every == 0:
+            tr.ckpt.submit(version, tr.params)
+        # round over: hand accumulators back so next round's aggregators
+        # at the same positions start warm instead of reallocating —
+        # UNLESS another round is still in flight (rolling mode): its
+        # mids share engine keys with this round's (the round tag is
+        # stripped for pool lookup) and recycling a buffer someone is
+        # mid-fold into would hand it out twice
+        if not tr.driver._inflight:
+            tr._runtime.recycle_engines()
+
+        rec = {
+            "round": plan.round_id,
+            "updates": float(outcome.accepted),
+            "nodes_used": float(len(plan.placement.assignment)),
+            "inter_node": float(plan.inter_node_updates),
+            "cold_starts": float(outcome.cold_starts),
+            "reused": float(outcome.warm_starts),
+            "workers": float(outcome.workers),
+            "crashes": float(outcome.crashes),
+            "redispatched": float(outcome.redispatched),
+            "wall_s": time.perf_counter() - self.t0,
+        }
+        tr.log.append(rec)
+        self.record = rec
+        return rec
 
 
 def _flatten_tree(tree: Any) -> Tuple[np.ndarray, Any, list]:

@@ -1,0 +1,21 @@
+"""repro.serve — the continuous aggregation service (LIFL serving
+plane): ingress admission control, rolling rounds, multi-job
+fair-share over one fleet.  See serve/README.md."""
+from repro.serve.gateway import AdmissionPolicy, IngressGateway
+from repro.serve.scheduler import (
+    DeadlinePolicy,
+    GoalPolicy,
+    MinCohortIdleGap,
+    RoundScheduler,
+)
+from repro.serve.service import AggregationService
+
+__all__ = [
+    "AdmissionPolicy",
+    "AggregationService",
+    "DeadlinePolicy",
+    "GoalPolicy",
+    "IngressGateway",
+    "MinCohortIdleGap",
+    "RoundScheduler",
+]

@@ -29,7 +29,9 @@ from repro.runtime.events import (
     PartialShipped,
     RoundDeadline,
     RoundEvent,
+    RoundOpened,
     ScaleDecision,
+    UpdateShed,
     TopFolded,
     UpdateArrived,
     WorkerCrashed,
@@ -59,6 +61,9 @@ _SAMPLES = [
     NodeRejoined(round_id=None, node="n3", epoch=1723190400123456789,
                  old_epoch=1723190300987654321, capacity=16.0),
     RoundDeadline(round_id=8, deadline_s=30.0),
+    RoundOpened(round_id=10, job="mnist", goal=16),
+    UpdateShed(round_id=11, job="mnist", client_id="c3",
+               retry_after_s=0.25, queued=32),
     ScaleDecision(round_id=9, aggregators_planned=12, nodes=4, levels=2,
                   direction="up"),
 ]
