@@ -1,0 +1,196 @@
+"""Long-haul rolling soak: SLO rows from live mid-round scrapes.
+
+The serving claim the short benches can't test: an *always-on*
+2-job service over a real 2-daemon fleet, rounds rolling for minutes,
+with the FleetMonitor scraping every daemon's ``stats`` frame on a
+jittered period the whole time (the paper's agent → metrics-server
+loop, §4.3).  Rows:
+
+* ``soak/slo_<job>`` — per-job p50/p99 TTA (from the streaming
+  histograms the live scrapes read), shed fraction, rounds/min, and
+  SLO breach count.
+* ``soak/fleet`` — the two FATAL gates: ``soak_bitexact=1`` (every
+  round the soak closed replays bit-identically through the
+  sequential ``run_round`` path — minutes of rolling, zero drift) and
+  ``scrape_overhead_frac < 0.02`` (live observability must cost < 2%
+  of the soak's wall clock); plus scrape/stale/mid-round counts.
+
+Fast mode soaks ~20 s; ``--full`` ~120 s.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ClientInfo, NodeState, RoundConfig
+from repro.runtime.driver import InProcRuntime, RoundDriver
+from repro.runtime.events import SLOBreached
+from repro.runtime.netrt import (
+    RemoteRuntime, reap_local_daemon, spawn_local_daemon,
+)
+from repro.serve import (
+    AdmissionPolicy, AggregationService, DeadlinePolicy, MinCohortIdleGap,
+    SLOTarget,
+)
+
+N_ELEMS = 4096
+JOBS = ("alpha", "beta")
+
+
+class _Model:
+    def loss(self, params, batch):  # external-update-only jobs
+        raise NotImplementedError("soak bench never trains locally")
+
+
+def _flat_for(cid: str) -> np.ndarray:
+    rng = np.random.default_rng(zlib.crc32(cid.encode()))
+    return rng.standard_normal(N_ELEMS).astype(np.float32)
+
+
+class _CloseAny:
+    def __init__(self, *pols):
+        self.pols = pols
+
+    def should_close(self, **kw):
+        return any(p.should_close(**kw) for p in self.pols)
+
+
+def run(fast: bool = True) -> List[Dict]:
+    import jax.numpy as jnp
+
+    dur_s = 20.0 if fast else 120.0
+    goal = 4
+    batch = 4              # rounds per job per run_rounds() batch
+
+    daemons = [spawn_local_daemon(f"node{i}", runtime="inproc")
+               for i in range(2)]
+    rt = RemoteRuntime([a for _, a in daemons])
+    nodes = {n: NodeState(node=n, max_capacity=cap)
+             for n, cap in rt.node_info().items()}
+    svc = AggregationService(
+        nodes, runtime=rt,
+        admission=AdmissionPolicy(max_queue=64, job_quota=32,
+                                  retry_base_s=0.005, retry_cap_s=0.05))
+    params = {"w": jnp.zeros((N_ELEMS,), jnp.float32)}
+    for job, weight in zip(JOBS, (2.0, 1.0)):
+        svc.add_job(job, _Model(), params,
+                    [ClientInfo(client_id=f"{job}-r{i}", num_samples=10)
+                     for i in range(2 * goal)],
+                    weight=weight,
+                    round_cfg=RoundConfig(aggregation_goal=goal),
+                    # generous targets: a breach in a healthy soak is a
+                    # signal, not noise (the count lands in the row)
+                    slo=SLOTarget(p99_tta_s=30.0, max_shed_frac=0.95))
+    breaches: List[SLOBreached] = []
+    svc.driver.on(SLOBreached, breaches.append)
+    # period 0.25 s ≈ the paper agent's cadence; jittered by the
+    # monitor so two services never sync-scrape one daemon
+    mon = svc.start_monitor(period_s=0.25)
+
+    stop = threading.Event()
+
+    def pusher(job: str) -> None:
+        k = 0
+        while not stop.is_set():
+            cid = f"{job}-u{k}"
+            v = svc.submit(job, cid, _flat_for(cid),
+                           1.0 + k % 3, submission_id=cid)
+            if v["admitted"]:
+                k += 1
+                time.sleep(0.004)   # paced: rounds stay open long
+            else:                   # enough for scrapes to land inside
+                time.sleep(v["retry_after_s"])
+
+    threads = [threading.Thread(target=pusher, args=(j,), daemon=True)
+               for j in JOBS]
+    policy = _CloseAny(
+        MinCohortIdleGap(min_cohort=max(1, goal // 2), idle_gap_s=0.02),
+        DeadlinePolicy(deadline_s=30.0))
+
+    recs: List[Dict] = []
+    t0 = time.perf_counter()
+    try:
+        for th in threads:
+            th.start()
+        while time.perf_counter() - t0 < dur_s:
+            recs.extend(svc.run_rounds({j: batch for j in JOBS},
+                                       policy=policy))
+    finally:
+        stop.set()
+        for th in threads:
+            th.join(timeout=10)
+    wall = time.perf_counter() - t0
+
+    mc = mon.counters()
+    scrape_overhead_frac = mc["scrape_wall_s"] / max(wall, 1e-9)
+    per_job_tta = {j: svc.metrics.hist("tta", j) for j in JOBS}
+    shed = {j: svc.gateway.shed_frac(j) for j in JOBS}
+    health = svc.health()
+    stale_now = sum(1 for f in health["fleet"].values() if f.get("stale"))
+    svc.close()
+
+    # --- the determinism seam: a soak's worth of rolling rounds, each
+    # replayed sequentially — minutes of overlap, zero drift
+    bitexact = 1
+    for rec in recs:
+        if not rec["cohort"]:
+            if rec["outcome"].delta is not None:
+                bitexact = 0
+            continue
+        rt2 = InProcRuntime()
+        out = RoundDriver(rt2).run_round(
+            round_id=rec["ticket"], assignment=rec["assignment"],
+            updates=[(node, cid, _flat_for(cid), w)
+                     for node, cid, w in rec["cohort"]],
+            goal=len(rec["cohort"]), n_elems=N_ELEMS,
+            top_node=rec["top_node"])
+        rt2.close()
+        if not np.array_equal(np.asarray(out.delta),
+                              np.asarray(rec["outcome"].delta)):
+            bitexact = 0
+
+    for proc, _ in daemons:
+        reap_local_daemon(proc)
+
+    rows: List[Dict] = []
+    for job in JOBS:
+        h = per_job_tta[job]
+        q = h.quantiles() if h is not None else {
+            "p50": 0.0, "p90": 0.0, "p99": 0.0, "count": 0, "mean": 0.0}
+        n_rounds = sum(1 for r in recs if r["job"] == job)
+        n_breach = sum(1 for b in breaches if b.job == job)
+        rows.append({
+            "bench": "soak",
+            "case": f"slo_{job}",
+            "us_per_call": q["p99"] * 1e6,
+            "derived": (f"p50_tta_ms={q['p50'] * 1e3:.1f};"
+                        f"p99_tta_ms={q['p99'] * 1e3:.1f};"
+                        f"shed_frac={shed[job]:.3f};"
+                        f"rounds={n_rounds};"
+                        f"rounds_per_min={n_rounds / wall * 60.0:.1f};"
+                        f"slo_breaches={n_breach}"),
+        })
+    rows.append({
+        "bench": "soak",
+        "case": "fleet",
+        "us_per_call": mc["scrape_wall_s"] / max(1, mc["scrapes"]) * 1e6,
+        "derived": (f"soak_bitexact={bitexact};"
+                    f"scrape_overhead_frac={scrape_overhead_frac:.5f};"
+                    f"scrapes={mc['scrapes']};"
+                    f"mid_round_scrapes={mc['mid_round_scrapes']};"
+                    f"stale_events={mc['stale_events']};"
+                    f"stale_now={stale_now};"
+                    f"nodes=2;wall_s={wall:.1f};"
+                    f"rounds={len(recs)}"),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(fast=True):
+        print(f"{r['bench']}/{r['case']},{r['us_per_call']:.1f},"
+              f"{r['derived']}")

@@ -19,7 +19,7 @@ import time
 
 # suites whose rows land in the --json perf-trajectory file
 JSON_SUITES = ("agg_kernel", "dataplane_fig7", "shmrt", "control_overhead",
-               "net", "obs", "serve")
+               "net", "obs", "serve", "soak")
 
 # PR-1 acceptance floor: blocked fold ≥ 2× naive.  A regression here
 # silently rots every throughput claim downstream, so the harness fails
@@ -178,6 +178,46 @@ def _check_net_leak_gate(rows) -> list:
     return fails
 
 
+def _check_soak_gate(rows) -> list:
+    """PR-9 acceptance gates: the rolling soak must hold the library's
+    arithmetic over minutes of overlap (``soak_bitexact=1``) and the
+    live scrape loop must stay invisible — total scrape wall under 2%
+    of the soak's wall clock (``scrape_overhead_frac < 0.02``)."""
+    import re
+
+    fails = []
+    for r in rows:
+        if r["bench"] != "soak" or r["case"] != "fleet":
+            continue
+        b = re.search(r"soak_bitexact=(\d)", r["derived"])
+        if b and not _stamp(r, "soak_bitexact", b.group(1) == "1"):
+            fails.append(
+                "FATAL: soak rounds drifted from the sequential "
+                f"run_round path (row {r['case']!r}; see ROADMAP.md)")
+        m = re.search(r"scrape_overhead_frac=([\d.]+)", r["derived"])
+        if m and not _stamp(r, "soak_scrape_overhead",
+                            float(m.group(1)) < 0.02):
+            fails.append(
+                f"FATAL: live-scrape overhead regression — "
+                f"{m.group(1)} of soak wall ≥ 0.02 gate "
+                f"(row {r['case']!r}; see ROADMAP.md)")
+    return fails
+
+
+def _print_gate_table(rows) -> None:
+    """One verdict line per stamped gate, after all suites ran — the
+    at-a-glance answer to 'which acceptance bars did this run clear'."""
+    stamped = [(r["bench"], r["case"], g, v)
+               for r in rows for g, v in r.get("gates", {}).items()]
+    if not stamped:
+        return
+    print("# gate verdicts:", file=sys.stderr)
+    w = max(len(f"{b}/{c}") for b, c, _g, _v in stamped)
+    for b, c, g, v in stamped:
+        print(f"#   {f'{b}/{c}':<{w}}  {g:<22} {v.upper()}",
+              file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -204,6 +244,7 @@ def main() -> None:
         bench_queuing,
         bench_serve,
         bench_shmrt,
+        bench_soak,
         bench_tta,
     )
 
@@ -218,6 +259,7 @@ def main() -> None:
         "net": bench_net.run,
         "obs": bench_obs.run,
         "serve": bench_serve.run,
+        "soak": bench_soak.run,
         "tta_fig9": bench_tta.run,
     }
     if args.only:
@@ -230,7 +272,9 @@ def main() -> None:
                              + _check_net_leak_gate(rows)),
         "obs": _check_obs_overhead_gate,
         "serve": _check_serve_gate,
+        "soak": _check_soak_gate,
     }
+    all_rows: list = []
     json_rows = []
     fatal: list = []
     print("name,us_per_call,derived")
@@ -247,9 +291,12 @@ def main() -> None:
         for r in rows:
             print(f"{r['bench']}/{r['case']},{r['us_per_call']:.1f},"
                   f"{r['derived']}", flush=True)
+        all_rows.extend(rows)
         if name in JSON_SUITES:
             json_rows.extend(rows)
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+    _print_gate_table(all_rows)
 
     if args.json:
         if json_rows:

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ClientInfo, NodeState, RoundConfig
+from repro.obs import summary_line, to_prometheus
 from repro.runtime.netrt import RemoteRuntime, spawn_local_daemon
 from repro.serve import (
     AdmissionPolicy, AggregationService, DeadlinePolicy, MinCohortIdleGap,
+    SLOTarget,
 )
 
 SRC = str(Path(__file__).parent.parent / "src")
@@ -53,8 +55,9 @@ class _CloseAny:
 def main(fast: bool = False):
     rounds = 3 if fast else 6
     print("=== Continuous aggregation: 2 jobs, 2 netd nodes, rolling ===")
-    daemons = [spawn_local_daemon(f"node{i}", runtime="inproc",
-                                  stdout=subprocess.DEVNULL)
+    # default spawn = per-daemon log file (proc.lifl_log_path), so an
+    # orphaned daemon can never hang this process's pipes
+    daemons = [spawn_local_daemon(f"node{i}", runtime="inproc")
                for i in range(2)]
     rt = RemoteRuntime([a for _, a in daemons])
     nodes = {n: NodeState(node=n, max_capacity=cap)
@@ -71,10 +74,15 @@ def main(fast: bool = False):
                 [ClientInfo(client_id=f"{job}-c{i}", num_samples=10)
                  for i in range(8)],
                 weight=weight,
-                round_cfg=RoundConfig(aggregation_goal=4))
+                round_cfg=RoundConfig(aggregation_goal=4),
+                slo=SLOTarget(p99_tta_s=30.0, max_shed_frac=0.9))
         for job in svc.jobs:
             print(f"job {job!r}: "
                   f"fair-share={svc.coordinator.job_share(job):.2f}")
+
+        # the live-telemetry loop: scrape both daemons' stats frames on
+        # a jittered period, mid-round included, feeding the SLO tracker
+        svc.start_monitor(period_s=0.25)
 
         addr = svc.serve("127.0.0.1:0")
         print(f"serving on {addr} (jobs route by frame meta)")
@@ -138,7 +146,20 @@ def main(fast: bool = False):
               f"pipeline_overlap={svc.pipeline_overlap():.2f}")
         print(f"ingress: admitted={m['admitted']} shed={m['shed']} "
               f"duplicates={m['duplicates']} queued_now={m['queued_now']}")
+        # one fleet snapshot, rendered both ways
+        snap = svc.health()
+        print("health:", summary_line(snap))
+        prom = to_prometheus(snap)
+        print(f"prometheus export: {len(prom.splitlines())} samples, e.g.")
+        for line in prom.splitlines():
+            if "tta_seconds" in line or "_node_up" in line:
+                print("  " + line)
+        mon = snap["monitor"]
+        print(f"monitor: {mon['scrapes']} scrapes "
+              f"({mon['mid_round_scrapes']} mid-round), "
+              f"{mon['stale_events']} stale events")
         assert svc.pipeline_overlap() > 0, "rounds never overlapped"
+        assert mon["scrapes"] > 0, "monitor never scraped the fleet"
     finally:
         svc.close()
         from repro.runtime.netrt import reap_local_daemon

@@ -240,7 +240,78 @@ class Session:
             out["ingress"]["queued_now"] = self._gateway.depth()
         if tr._driver is not None:
             out["driver"] = dict(tr._driver.stats)
+        # serve/live gauges — same names as the service health surface
+        # (tests/test_live.py holds the key parity)
+        out["open_rounds"] = (len(tr._driver._open_rounds)
+                              if tr._driver is not None else 0)
+        out["gateway_queue_depth"] = (self._gateway.depth()
+                                      if self._gateway is not None
+                                      else len(tr._external))
+        out["fleet_nodes_alive"] = self._fleet_nodes_alive()
         return out
+
+    def _fleet_nodes_alive(self) -> int:
+        rt = self._trainer._runtime
+        nodes = getattr(rt, "_nodes", None)
+        if isinstance(nodes, dict):
+            return sum(1 for n in nodes.values()
+                       if getattr(n, "alive", False))
+        return 1   # a local runtime IS its one (alive) node
+
+    def status(self) -> Dict[str, Any]:
+        """One structured fleet snapshot — the single-job mirror of
+        :meth:`AggregationService.health` (identical top-level keys,
+        test-enforced), renderable with
+        :func:`repro.obs.to_prometheus` / :func:`repro.obs.summary_line`.
+        """
+        tr = self._trainer
+        job = tr.job or ""
+        h = tr.metrics.hist("tta", job)
+        jobs = {job: {
+            "queue_depth": len(tr._external),
+            "rounds": len(tr.log),
+            "tta": (h.quantiles() if h is not None else
+                    {"p50": 0.0, "p90": 0.0, "p99": 0.0,
+                     "count": 0, "mean": 0.0}),
+            "slo": None,    # per-job SLO targets live on the service
+        }}
+        if self._gateway is not None:
+            gw = self._gateway
+            gateway = {"counters": dict(gw.counters),
+                       "queue_depth": gw.depth(),
+                       "ingest": gw.ingest_quantiles(),
+                       "retry_after_s_now": gw.retry_after_now()}
+            gw_depth = gw.depth()
+        else:
+            gateway = {"counters": dict(tr.ingress),
+                       "queue_depth": len(tr._external),
+                       "ingest": {}, "retry_after_s_now": 0.0}
+            gw_depth = len(tr._external)
+        rt = tr._runtime
+        nodes = getattr(rt, "_nodes", None)
+        if isinstance(nodes, dict):
+            fleet = {name: {"stale": not getattr(n, "alive", False),
+                            "epoch": getattr(n, "epoch", 0)}
+                     for name, n in nodes.items()}
+        else:
+            rt_health = getattr(rt, "health", None)
+            fleet = {"local": {"stale": False,
+                               "health": (rt_health()
+                                          if callable(rt_health)
+                                          else {})}}
+        return {
+            "open_rounds": (len(tr._driver._open_rounds)
+                            if tr._driver is not None else 0),
+            "gateway_queue_depth": gw_depth,
+            "fleet_nodes_alive": self._fleet_nodes_alive(),
+            "jobs": jobs,
+            "gateway": gateway,
+            "fleet": fleet,
+            "driver": (dict(tr._driver.stats)
+                       if tr._driver is not None else {}),
+            "rounds_closed": len(tr.log),
+            "monitor": None,   # the FleetMonitor belongs to the service
+        }
 
     def trace(self, round_id: Optional[int] = None):
         """The :class:`~repro.obs.RoundTrace` for ``round_id`` (latest

@@ -20,17 +20,84 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 
 class MetricsMap:
-    """In-kernel key-value table analogue (BPF_MAP_TYPE_HASH)."""
+    """In-kernel key-value table analogue (BPF_MAP_TYPE_HASH).
+
+    Two value kinds live side by side under one lock: (sum, count)
+    series (``update``/``drain``) and log-bucketed distribution
+    histograms (``observe``/``drain_hists``) — the latter answer
+    p50/p90/p99 with bounded relative error at constant memory, which
+    a (sum, count) pair cannot (see :class:`repro.obs.live.Histogram`).
+    """
 
     def __init__(self):
         self._m: Dict[Tuple[str, str], float] = defaultdict(float)
         self._count: Dict[Tuple[str, str], int] = defaultdict(int)
+        self._hists: Dict[Tuple[str, str], "object"] = {}
         self._lock = threading.Lock()
 
     def update(self, owner: str, metric: str, value: float) -> None:
         with self._lock:
             self._m[(owner, metric)] += value
             self._count[(owner, metric)] += 1
+
+    # -- histograms ---------------------------------------------------
+    def observe(self, owner: str, metric: str, value: float) -> None:
+        """Record one sample into the (owner, metric) distribution
+        histogram, creating it on first observation."""
+        from repro.obs.live import Histogram
+
+        with self._lock:
+            h = self._hists.get((owner, metric))
+            if h is None:
+                h = self._hists[(owner, metric)] = Histogram()
+            h.observe(value)
+
+    def quantile(self, owner: str, metric: str, q: float,
+                 default: float = 0.0) -> float:
+        with self._lock:
+            h = self._hists.get((owner, metric))
+            return h.quantile(q, default) if h is not None else default
+
+    def hist(self, owner: str, metric: str):
+        """A copy of the (owner, metric) histogram, or None."""
+        with self._lock:
+            h = self._hists.get((owner, metric))
+            return h.copy() if h is not None else None
+
+    def hists_snapshot(self) -> Dict[str, dict]:
+        """Non-destructive wire view ``{"owner/metric": hist_wire}`` —
+        what the live ``stats`` frame carries (a scrape must not erase
+        what the round-edge drain will collect)."""
+        with self._lock:
+            return {f"{o}/{m}": h.to_wire()
+                    for (o, m), h in self._hists.items() if h.count}
+
+    def drain_hists(self) -> Dict[str, dict]:
+        """Destructive retrieval in the same wire shape — the histogram
+        analogue of :meth:`drain_series` (round-edge telemetry)."""
+        with self._lock:
+            out = {f"{o}/{m}": h.to_wire()
+                   for (o, m), h in self._hists.items() if h.count}
+            self._hists.clear()
+        return out
+
+    def absorb_hists(self, hists: Dict[str, dict],
+                     prefix: str = "") -> None:
+        """Merge a wire-shaped histogram map (a drained remote map),
+        optionally namespacing owners with ``prefix`` — mirror of
+        :meth:`absorb_series`."""
+        from repro.obs.live import Histogram
+
+        for key, wire in hists.items():
+            owner, _, metric = key.partition("/")
+            incoming = Histogram.from_wire(wire)
+            with self._lock:
+                k = (prefix + owner, metric)
+                h = self._hists.get(k)
+                if h is None:
+                    self._hists[k] = incoming
+                else:
+                    h.merge(incoming)
 
     def drain(self) -> Dict[Tuple[str, str], Tuple[float, int]]:
         """Agent-side periodic retrieval; resets the map."""
@@ -112,6 +179,9 @@ class EventSidecar:
         self.invocations += 1
         self.metrics.update(self.owner_id, "agg_updates", float(n_updates))
         self.metrics.update(self.owner_id, "agg_exec_s", exec_time_s)
+        # distribution under a fixed owner: per-aggregator owners would
+        # mint one histogram per ephemeral agg id
+        self.metrics.observe("fold", "exec_s", exec_time_s)
 
 
 class MetricsServer:

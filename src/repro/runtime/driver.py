@@ -294,6 +294,12 @@ class InProcRuntime(_WarmEngineMixin):
     def worker_count(self) -> int:
         return 0
 
+    def health(self) -> Dict[str, int]:
+        """Pool gauges for live scrapes: inproc has no worker pool, so
+        only the open-aggregator count is meaningful."""
+        return {"workers": 0, "workers_busy": 0, "workers_parked": 0,
+                "ring_depth": 0, "open_aggs": len(self._open)}
+
     def close(self) -> None:
         if self._closed:
             return
@@ -437,6 +443,9 @@ class ShmProcRuntime(_WarmEngineMixin):
 
     def worker_count(self) -> int:
         return len(self._rt.worker_pids())
+
+    def health(self) -> Dict[str, int]:
+        return self._rt.health()
 
     def close(self) -> None:
         if self._closed:
@@ -744,6 +753,9 @@ class RoundDriver:
         telemetry the quiesce edge drained — into one RoundTrace."""
         tr = self.tracer
         round_span = tr.end(tok_round, n=float(out.accepted))
+        if round_span is not None:
+            # per-job TTA distribution — what the SLO tracker reads
+            self.metrics.observe("tta", job or "_", round_span.dur_s)
         if not tr.enabled:
             return
         spans = tr.drain()

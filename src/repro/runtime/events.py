@@ -34,6 +34,7 @@ Catalog (see runtime/README.md for the full state machine):
   ``ScaleDecision``   the elastic controller re-sized the hierarchy
   ``RoundOpened``     a (possibly rolling) round started accepting work
   ``UpdateShed``      the ingress gateway refused an update (backpressure)
+  ``SLOBreached``     a job's SLO was violated on sustained live scrapes
 """
 from __future__ import annotations
 
@@ -188,6 +189,22 @@ class ScaleDecision(RoundEvent):
     direction: str = "hold"   # 'up' | 'down' | 'hold'
 
 
+@dataclass(frozen=True)
+class SLOBreached(RoundEvent):
+    """A job's service-level objective was violated on *sustained*
+    live scrapes (FleetMonitor → SLOTracker): the measured p99 TTA or
+    shed fraction exceeded its target for ``window`` consecutive
+    scrapes.  Not round-scoped (``round_id=None``): the breach is a
+    property of the service, and fires at most once per sustained
+    episode."""
+
+    job: str = ""
+    metric: str = ""       # 'p99_tta_s' | 'shed_frac'
+    measured: float = 0.0
+    target: float = 0.0
+    window: int = 0        # consecutive violating scrapes
+
+
 #: name → class registry; the wire codec and tests iterate this.
 EVENT_TYPES: Dict[str, Type[RoundEvent]] = {
     cls.__name__: cls
@@ -195,6 +212,7 @@ EVENT_TYPES: Dict[str, Type[RoundEvent]] = {
         UpdateArrived, PartialReady, PartialShipped, TopFolded,
         GoalReached, WorkerCrashed, NodeJoined, NodeLost, NodeRejoined,
         RoundDeadline, RoundOpened, UpdateShed, ScaleDecision,
+        SLOBreached,
     )
 }
 

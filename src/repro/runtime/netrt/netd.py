@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Set
 
 import numpy as np
 
-from repro.core.sidecar import MetricsMap
+from repro.core.sidecar import MetricsMap, series_flatten
 from repro.runtime.driver import make_runtime
 from repro.runtime.events import (
     PartialReady,
@@ -103,6 +103,7 @@ class NodeDaemon:
         # controller re-dialing a known name can tell "same daemon,
         # transient disconnect" from "fresh process, empty store".
         self.epoch = time.time_ns()
+        self.t0_mono = time.perf_counter()   # uptime for live scrapes
         self.faults = fault_plan
         # the per-daemon MetricsMap — the paper's in-kernel metric map,
         # now actually living in the remote process: the local runtime's
@@ -478,6 +479,7 @@ class NodeDaemon:
                 # rides the reply the controller already waits for — no
                 # extra round trip, and the map resets for next round
                 "telemetry": self.metrics.drain_series(),
+                "telemetry_hists": self.metrics.drain_hists(),
             })
         elif kind == "telemetry":
             # on-demand drain (the agent's pull outside quiesce):
@@ -486,6 +488,36 @@ class NodeDaemon:
             conn.send("telemetry_map", {
                 "node": self.node,
                 "telemetry": self.metrics.drain_series(),
+                "telemetry_hists": self.metrics.drain_hists(),
+            })
+        elif kind == "stats":
+            # the LIVE drain (paper agent, §4.3): answerable at ANY
+            # time — mid-round included — and non-destructive, so a
+            # scrape never erases what the round-edge drain will
+            # collect.  Series + histogram snapshot + health gauges.
+            rt_health = getattr(self.rt, "health", None)
+            health = {
+                "open_conns": len(self.server.conns),
+                "controllers": len(self._controllers),
+                "open_tops": len(self._tops),
+                "landed_keys": len(self._landed),
+                "published_keys": len(self._published),
+                "shm_bytes": _shm_bytes(
+                    getattr(self.rt, "store_prefix", "")),
+            }
+            if callable(rt_health):
+                health.update(rt_health())
+            else:
+                health["workers"] = self.rt.worker_count()
+            conn.send("stats_reply", {
+                "node": self.node,
+                "epoch": self.epoch,
+                "uptime_s": time.perf_counter() - self.t0_mono,
+                "series": series_flatten(self.metrics.snapshot()),
+                "hists": self.metrics.hists_snapshot(),
+                "health": health,
+                "daemon": dict(self.stats),
+                "workers": self.rt.worker_count(),
             })
         elif kind == "recycle":
             self.rt.recycle_engines()
@@ -519,6 +551,24 @@ class NodeDaemon:
         self.rt.close()
 
 
+def _shm_bytes(prefix: str) -> int:
+    """Bytes resident in /dev/shm under ``prefix`` — the live-scrape
+    gauge for 'how much store does this daemon hold right now'."""
+    if not prefix:
+        return 0
+    total = 0
+    try:
+        for fn in os.listdir("/dev/shm"):
+            if fn.startswith(prefix):
+                try:
+                    total += os.stat(os.path.join("/dev/shm", fn)).st_size
+                except OSError:
+                    pass
+    except OSError:
+        pass
+    return total
+
+
 def spawn_local_daemon(node: str, *, runtime: str = "inproc",
                        agg_engine: str = "auto", capacity: float = 20.0,
                        listen: str = "127.0.0.1:0", timeout: float = 30.0,
@@ -527,7 +577,14 @@ def spawn_local_daemon(node: str, *, runtime: str = "inproc",
     """Spawn a netd as a local child process and wait for its bound
     address (the port-file handshake).  Returns ``(Popen, addr)`` —
     the caller owns the process.  One helper so benches, tests, and
-    examples don't each reimplement the spawn."""
+    examples don't each reimplement the spawn.
+
+    The child's stdout/stderr go to a per-daemon log file by default
+    (``proc.lifl_log_path``; pass ``stdout=`` to override).  Never
+    inherit the caller's pipes: an orphaned/SIGKILLed daemon's forked
+    workers would keep them open and hang any harness draining them.
+    The log is removed on a clean :func:`reap_local_daemon`; on
+    failure the reaper reports its path instead."""
     import shutil
     import subprocess
     import tempfile
@@ -549,14 +606,34 @@ def spawn_local_daemon(node: str, *, runtime: str = "inproc",
         argv += ["--fault-spec", fault_spec.to_json()]
     # own session: reap_local_daemon can killpg the daemon AND its
     # forked shm workers (SIGKILLing just the daemon orphans them)
-    proc = subprocess.Popen(argv, env=env, stdout=stdout,
-                            start_new_session=True)
+    log_path = ""
+    log_f = None
+    if stdout is None:
+        log_path = os.path.join(
+            tempfile.gettempdir(),
+            f"netd-{node}-{os.getpid()}-{time.time_ns()}.log")
+        log_f = open(log_path, "ab")
+        stdout = log_f
+    try:
+        proc = subprocess.Popen(argv, env=env, stdout=stdout,
+                                stderr=subprocess.STDOUT,
+                                start_new_session=True)
+    finally:
+        if log_f is not None:
+            log_f.close()   # the child owns the fd now
+    proc.lifl_log_path = log_path
     deadline = time.perf_counter() + timeout
     try:
         while not os.path.exists(pf):
             if proc.poll() is not None or time.perf_counter() > deadline:
                 proc.kill()
-                raise RuntimeError(f"netd {node} failed to start")
+                tail = ""
+                if log_path and os.path.exists(log_path):
+                    with open(log_path, "rb") as lf:
+                        tail = lf.read()[-2048:].decode("utf-8", "replace")
+                raise RuntimeError(
+                    f"netd {node} failed to start"
+                    + (f" (log: {log_path}):\n{tail}" if log_path else ""))
             time.sleep(0.02)
         with open(pf) as f:
             lines = f.read().splitlines()
@@ -581,6 +658,8 @@ def reap_local_daemon(proc, *, timeout: float = 5.0) -> int:
 
     from repro.core.objectstore import sweep_dead_segments
 
+    log_path = getattr(proc, "lifl_log_path", "")
+    reaped = True
     if proc.poll() is None:
         try:
             os.killpg(proc.pid, _signal.SIGKILL)
@@ -589,12 +668,22 @@ def reap_local_daemon(proc, *, timeout: float = 5.0) -> int:
     try:
         proc.wait(timeout=timeout)
     except subprocess.TimeoutExpired:
-        pass
+        reaped = False
+        if log_path:
+            print(f"reap_local_daemon: pid {proc.pid} did not exit; "
+                  f"daemon log kept at {log_path}", file=sys.stderr)
     else:
         # the group may still hold workers even after the leader died
         try:
             os.killpg(proc.pid, _signal.SIGKILL)
         except (ProcessLookupError, PermissionError):
+            pass
+    if reaped and log_path:
+        # clean reap: the log served its purpose (kept on failure so
+        # the operator can read why the daemon wouldn't die)
+        try:
+            os.unlink(log_path)
+        except OSError:
             pass
     return sweep_dead_segments(getattr(proc, "lifl_store_prefix", ""))
 

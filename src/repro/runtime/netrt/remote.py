@@ -546,7 +546,8 @@ class RemoteRuntime(_WarmEngineMixin):
                 # the LIFL-agent drain: the daemon's MetricsMap rides
                 # the quiesced reply (no extra round trip) — merge it
                 self._absorb_telemetry(node,
-                                       reply.meta.get("telemetry") or {})
+                                       reply.meta.get("telemetry") or {},
+                                       reply.meta.get("telemetry_hists"))
             except PeerDead:
                 self._pending.extend(self._lose_node(node))
         self._open.clear()
@@ -558,10 +559,18 @@ class RemoteRuntime(_WarmEngineMixin):
     # telemetry (the controller side of the LIFL agent)
     # ------------------------------------------------------------------
     def _absorb_telemetry(self, node: _Node,
-                          series: Dict[str, List[float]]) -> None:
+                          series: Dict[str, List[float]],
+                          hists: Optional[Dict[str, dict]] = None) -> None:
         """One daemon drain landed: accumulate it on the node record
         (for the round trace) and merge it into the controller's
-        MetricsMap under node-prefixed owners, counts intact."""
+        MetricsMap under node-prefixed owners, counts intact.  Drained
+        distribution histograms (if the daemon sent any) merge the same
+        way — node-prefixed, bucket counts added."""
+        if hists:
+            try:
+                self.metrics.absorb_hists(hists, prefix=f"{node.name}.")
+            except (ValueError, KeyError, TypeError):
+                pass   # malformed/mismatched wire hist must not kill a drain
         if not series:
             return
         acc = node.telemetry
@@ -611,9 +620,42 @@ class RemoteRuntime(_WarmEngineMixin):
                     if ev is not None:
                         self._pending.append(ev)
             series = reply.meta.get("telemetry") or {}
-            self._absorb_telemetry(n, series)
+            self._absorb_telemetry(n, series,
+                                   reply.meta.get("telemetry_hists"))
             pulled[n.name] = series
         return pulled
+
+    def poll_stats(self, node: Optional[str] = None, timeout: float = 5.0
+                   ) -> Dict[str, Dict[str, Any]]:
+        """Live scrape (the agent's periodic pull, answerable
+        mid-round): ask each live daemon — or just ``node`` — for its
+        ``stats`` frame.  NON-destructive, unlike :meth:`pull_telemetry`:
+        the reply is a snapshot (series + hist wire dicts + health
+        gauges + uptime/epoch), so scraping never steals samples from
+        the round-edge drain.  Nothing is merged into the controller
+        map — a snapshot absorbed repeatedly would double-count."""
+        peers = [self._nodes[node]] if node else self._alive()
+        out: Dict[str, Dict[str, Any]] = {}
+        for n in peers:
+            if not n.alive or not self._send(n, "stats", {}):
+                continue
+            stash: List[Frame] = []
+            t0 = time.perf_counter()
+            try:
+                reply = n.conn.recv_expect(("stats_reply",), timeout,
+                                           stash=stash)
+            except PeerDead:
+                self._pending.extend(self._lose_node(n))
+                continue
+            finally:
+                for f in stash:
+                    ev = self._absorb_frame(n, f)
+                    if ev is not None:
+                        self._pending.append(ev)
+            self.metrics.observe("wire", "stats_rtt_s",
+                                 time.perf_counter() - t0)
+            out[n.name] = dict(reply.meta)
+        return out
 
     def _flush_round_scoped_pending(self) -> None:
         """Drop queued round-scoped leftovers at the inter-round

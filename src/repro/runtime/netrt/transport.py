@@ -416,7 +416,12 @@ class FrameConn:
         t0 = time.perf_counter()
         self.send("ping", {"t": t0})
         self.recv_expect(("pong",), timeout, stash=stash)
-        return time.perf_counter() - t0
+        rtt = time.perf_counter() - t0
+        if self.metrics is not None:
+            observe = getattr(self.metrics, "observe", None)
+            if observe is not None:
+                observe("wire", "rtt_s", rtt)
+        return rtt
 
 
 class FrameServer:

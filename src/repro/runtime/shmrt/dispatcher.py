@@ -298,6 +298,10 @@ class ShmRuntime:
                     w.wait_s = rec.num_samples
                     self.metrics.update(w.agg_id or f"worker{w.idx}",
                                         "ring_wait_s", rec.num_samples)
+                    # distribution under a fixed owner (per-agg owners
+                    # would mint unbounded histograms)
+                    self.metrics.observe("shm", "ring_dwell_s",
+                                         rec.num_samples)
                 elif rec.kind == RecordKind.PARTIAL:
                     if rec.flags != w.seq:
                         # a force-released task's late partial: reclaim
@@ -479,6 +483,23 @@ class ShmRuntime:
     def worker_pids(self) -> Dict[int, int]:
         return {w.idx: w.proc.pid for w in self._workers
                 if w.state != "dead"}
+
+    def health(self) -> Dict[str, int]:
+        """Live pool gauges for the ``stats`` scrape: worker states and
+        total ring occupancy (tasks pushed but not yet drained)."""
+        busy = parked = depth = 0
+        for w in self._workers:
+            if w.state in ("busy", "warming"):
+                busy += 1
+            elif w.state == "idle":
+                parked += 1
+            for ring in (w.task_ring, w.result_ring):
+                try:
+                    depth += len(ring)
+                except (TypeError, ValueError, OSError):
+                    pass
+        return {"workers": len(self._workers), "workers_busy": busy,
+                "workers_parked": parked, "ring_depth": depth}
 
     def _reap(self, w: _Worker) -> None:
         """A worker died mid-task: reclaim every segment it created

@@ -1,6 +1,7 @@
 """repro.serve — the continuous aggregation service (LIFL serving
 plane): ingress admission control, rolling rounds, multi-job
 fair-share over one fleet.  See serve/README.md."""
+from repro.obs.live import FleetMonitor, SLOTarget, SLOTracker
 from repro.serve.gateway import AdmissionPolicy, IngressGateway
 from repro.serve.scheduler import (
     DeadlinePolicy,
@@ -14,8 +15,11 @@ __all__ = [
     "AdmissionPolicy",
     "AggregationService",
     "DeadlinePolicy",
+    "FleetMonitor",
     "GoalPolicy",
     "IngressGateway",
     "MinCohortIdleGap",
     "RoundScheduler",
+    "SLOTarget",
+    "SLOTracker",
 ]

@@ -41,6 +41,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import Coordinator, MetricsMap, NodeState, Selector
+from repro.obs.live import FleetMonitor, SLOTracker
 from repro.runtime.driver import COHORT_CLOSED, RoundDriver, make_runtime
 from repro.runtime.events import (
     NodeJoined, NodeLost, NodeRejoined, PartialReady, PartialShipped,
@@ -75,7 +76,10 @@ class AggregationService:
         for et in (NodeJoined, NodeLost, NodeRejoined, PartialReady,
                    TopFolded, PartialShipped):
             self.driver.on(et, self.coordinator.handle_event)
-        self.gateway = IngressGateway(admission, emit=self.driver.dispatch)
+        self.gateway = IngressGateway(admission, emit=self.driver.dispatch,
+                                      metrics=self.metrics)
+        self.slo = SLOTracker(emit=self.driver.dispatch)
+        self.monitor: Optional[FleetMonitor] = None
         self._trainers: Dict[str, FederatedTrainer] = {}
         self._ticket = 0               # globally-unique driver round ids
         #: every closed round, in close order: job, job-local round,
@@ -93,11 +97,15 @@ class AggregationService:
     def add_job(self, job: str, model, params: Any,
                 clients: Sequence[Any] = (), *, weight: float = 1.0,
                 round_cfg: Optional[Any] = None, server_opt: str = "fedavg",
-                server_lr: float = 1.0, seed: int = 0) -> FederatedTrainer:
+                server_lr: float = 1.0, seed: int = 0,
+                slo: Optional[Any] = None) -> FederatedTrainer:
         """Register a job: its model/params, client roster (``
         ClientRuntime`` or bare ``ClientInfo`` — external pushers need
         only the latter), and fair-share weight.  Returns the job's
-        trainer (the service owns its lifecycle)."""
+        trainer (the service owns its lifecycle).  ``slo`` (an
+        :class:`~repro.obs.live.SLOTarget` or kwargs dict) arms the
+        SLO tracker for this job: sustained violation on live scrapes
+        emits :class:`~repro.runtime.events.SLOBreached`."""
         if job in self._trainers:
             raise ValueError(f"job {job!r} already registered")
         roster = [c if isinstance(c, ClientRuntime)
@@ -113,6 +121,8 @@ class AggregationService:
         self._trainers[job] = tr
         self.gateway.register(job, tr.submit_update,
                               lambda t=tr: len(t._external))
+        if slo is not None:
+            self.slo.set_target(job, slo)
         return tr
 
     def trainer(self, job: str) -> FederatedTrainer:
@@ -339,6 +349,78 @@ class AggregationService:
         return self._server.addr if self._server is not None else None
 
     # ------------------------------------------------------------------
+    # live telemetry (the agent → metrics-server loop, paper §4.3)
+    # ------------------------------------------------------------------
+    def start_monitor(self, *, period_s: float = 0.5,
+                      **kwargs: Any) -> FleetMonitor:
+        """Start (or return) the :class:`FleetMonitor` scraping every
+        daemon's ``stats`` frame on a jittered ``period_s`` — mid-round
+        included — and feeding the per-job SLO tracker."""
+        if self.monitor is None:
+            self.monitor = FleetMonitor(self, period_s=period_s, **kwargs)
+            self.monitor.start()
+        return self.monitor
+
+    def _fleet_nodes_alive(self) -> int:
+        nodes = getattr(self.runtime, "_nodes", None)
+        if isinstance(nodes, dict):
+            return sum(1 for n in nodes.values()
+                       if getattr(n, "alive", False))
+        return 1   # a local runtime IS its one (alive) node
+
+    def health(self) -> Dict[str, Any]:
+        """One structured fleet snapshot: service gauges, per-job SLO
+        state + TTA quantiles, gateway pressure, per-node health from
+        the last live scrape.  ``Session.status()`` mirrors these
+        top-level keys (key-parity is test-enforced) and
+        ``repro.obs.export`` renders them for Prometheus/humans."""
+        jobs: Dict[str, Any] = {}
+        for job, tr in self._trainers.items():
+            h = self.metrics.hist("tta", job)
+            jobs[job] = {
+                "queue_depth": len(tr._external),
+                "rounds": len(tr.log),
+                "tta": (h.quantiles() if h is not None else
+                        {"p50": 0.0, "p90": 0.0, "p99": 0.0,
+                         "count": 0, "mean": 0.0}),
+                "slo": self.slo.status(job),
+            }
+        gw = self.gateway
+        gateway = {
+            "counters": dict(gw.counters),
+            "queue_depth": gw.depth(),
+            "ingest": gw.ingest_quantiles(),
+            "retry_after_s_now": gw.retry_after_now(),
+        }
+        fleet: Dict[str, Any] = {}
+        if self.monitor is not None:
+            fleet = self.monitor.fleet_view()
+        else:
+            nodes = getattr(self.runtime, "_nodes", None)
+            if isinstance(nodes, dict):
+                fleet = {name: {"stale": not getattr(n, "alive", False),
+                                "epoch": getattr(n, "epoch", 0)}
+                         for name, n in nodes.items()}
+            else:
+                rt_health = getattr(self.runtime, "health", None)
+                fleet = {"local": {"stale": False,
+                                   "health": (rt_health()
+                                              if callable(rt_health)
+                                              else {})}}
+        return {
+            "open_rounds": len(self.driver._open_rounds),
+            "gateway_queue_depth": gw.depth(),
+            "fleet_nodes_alive": self._fleet_nodes_alive(),
+            "jobs": jobs,
+            "gateway": gateway,
+            "fleet": fleet,
+            "driver": dict(self.driver.stats),
+            "rounds_closed": len(self.round_log),
+            "monitor": (self.monitor.counters()
+                        if self.monitor is not None else None),
+        }
+
+    # ------------------------------------------------------------------
     def ingress_metrics(self) -> Dict[str, Any]:
         """Gateway counters plus every job's trainer-side ingress."""
         out: Dict[str, Any] = dict(self.gateway.counters)
@@ -351,6 +433,9 @@ class AggregationService:
         if self._closed:
             return
         self._closed = True
+        if self.monitor is not None:
+            self.monitor.stop()
+            self.monitor = None
         if self._serve_stop is not None:
             self._serve_stop.set()
             self._serve_thread.join(timeout=5.0)

@@ -31,6 +31,7 @@ from repro.runtime.events import (
     RoundEvent,
     RoundOpened,
     ScaleDecision,
+    SLOBreached,
     UpdateShed,
     TopFolded,
     UpdateArrived,
@@ -66,6 +67,8 @@ _SAMPLES = [
                retry_after_s=0.25, queued=32),
     ScaleDecision(round_id=9, aggregators_planned=12, nodes=4, levels=2,
                   direction="up"),
+    SLOBreached(round_id=None, job="mnist", metric="p99_tta_s",
+                measured=2.5, target=1.0, window=3),
 ]
 
 
