@@ -59,10 +59,13 @@ class _CloseAny:
         return any(p.should_close(**kw) for p in self.pols)
 
 
-def run(fast: bool = True) -> List[Dict]:
+def run(fast: bool = True, profile: str = "full") -> List[Dict]:
+    """``profile="ci"`` (run.py --fast) shortens the soak window so the
+    gate suite runs in CI-scale time; full counts stay the default for
+    BENCH_agg.json regeneration."""
     import jax.numpy as jnp
 
-    dur_s = 20.0 if fast else 120.0
+    dur_s = 6.0 if profile == "ci" else (20.0 if fast else 120.0)
     goal = 4
     batch = 4              # rounds per job per run_rounds() batch
 

@@ -77,6 +77,44 @@ def _check_driver_dispatch_gate(rows) -> list:
     return fails
 
 
+def _check_placement_gate(rows) -> list:
+    """PR-10 acceptance gates: a from-scratch 10k-client placement must
+    plan under its gate (trending toward the paper's 17 ms budget), a
+    steady-state delta replan (plan cache + incremental PlacementState)
+    under its own much tighter gate, and the deep fold tree must stay
+    bit-identical to the flat plan with partials-only traffic."""
+    import re
+
+    fails = []
+    for r in rows:
+        if r["bench"] != "control_overhead":
+            continue
+        if r["case"] in ("placement_10k_clients",
+                         "placement_10k_incremental"):
+            m = re.search(r"\bms=([\d.]+);gate_ms=([\d.]+)", r["derived"])
+            if m and not _stamp(r, "placement_budget",
+                                float(m.group(1)) <= float(m.group(2))):
+                fails.append(
+                    f"FATAL: control-plane planning regression — "
+                    f"{m.group(1)} ms > {m.group(2)} ms gate "
+                    f"(row {r['case']!r}; see ROADMAP.md)")
+        if r["case"] == "deep_fold_100node":
+            b = re.search(r"bitexact=(\d)", r["derived"])
+            if b and not _stamp(r, "deep_fold_bitexact", b.group(1) == "1"):
+                fails.append(
+                    "FATAL: deep fold tree is not bit-identical to the "
+                    f"two-level plan (row {r['case']!r})")
+            m = re.search(r"partial_mb=([\d.]+);bound_mb=([\d.]+)",
+                          r["derived"])
+            if m and not _stamp(r, "deep_fold_traffic",
+                                float(m.group(1)) <= float(m.group(2))):
+                fails.append(
+                    f"FATAL: deep fold cross-node traffic "
+                    f"{m.group(1)} MB/round > partials-only bound "
+                    f"{m.group(2)} MB (row {r['case']!r})")
+    return fails
+
+
 def _check_net_traffic_gate(rows) -> list:
     """PR-4/PR-5 acceptance gates: cross-node aggregation traffic per
     round must stay partials-only — ≤ nodes × model_size × 1.1 (this
@@ -221,10 +259,18 @@ def _print_gate_table(rows) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI profile: trims the long-soak/net iteration "
+                         "counts (suites taking minutes drop to seconds) "
+                         "while still stamping and printing every gate "
+                         "verdict; do NOT regenerate BENCH_agg.json in "
+                         "this mode")
     ap.add_argument("--only", default="")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write agg-kernel + dataplane rows to PATH as JSON")
     args = ap.parse_args()
+    if args.full and args.fast:
+        ap.error("--full and --fast are mutually exclusive")
     fast = not args.full
     if args.json:  # fail on an unwritable path now, not after the run —
         # without creating an empty file a no-row run would leave behind
@@ -267,7 +313,8 @@ def main() -> None:
 
     gate_checks = {
         "agg_kernel": _check_engine_fold_floor,
-        "control_overhead": _check_driver_dispatch_gate,
+        "control_overhead": lambda rows: (_check_driver_dispatch_gate(rows)
+                                          + _check_placement_gate(rows)),
         "net": lambda rows: (_check_net_traffic_gate(rows)
                              + _check_net_leak_gate(rows)),
         "obs": _check_obs_overhead_gate,
@@ -278,10 +325,15 @@ def main() -> None:
     json_rows = []
     fatal: list = []
     print("name,us_per_call,derived")
+    import inspect
+
     for name, fn in suites.items():
         t0 = time.time()
+        kwargs = {"fast": fast}
+        if args.fast and "profile" in inspect.signature(fn).parameters:
+            kwargs["profile"] = "ci"   # suites that support extra trimming
         try:
-            rows = fn(fast=fast)
+            rows = fn(**kwargs)
         except Exception as e:  # a failed suite must not hide the others
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             continue
@@ -305,7 +357,8 @@ def main() -> None:
             for r in json_rows:
                 r.setdefault("gates", {})
             with open(args.json, "w") as f:
-                json.dump({"mode": "full" if args.full else "fast",
+                json.dump({"mode": ("full" if args.full
+                                    else "ci" if args.fast else "fast"),
                            "rows": json_rows}, f, indent=2)
             print(f"# wrote {len(json_rows)} rows to {args.json}",
                   file=sys.stderr)

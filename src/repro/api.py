@@ -248,6 +248,7 @@ class Session:
                                       if self._gateway is not None
                                       else len(tr._external))
         out["fleet_nodes_alive"] = self._fleet_nodes_alive()
+        out["planner"] = dict(tr.coordinator.plan_cache_stats)
         return out
 
     def _fleet_nodes_alive(self) -> int:
@@ -311,6 +312,7 @@ class Session:
                        if tr._driver is not None else {}),
             "rounds_closed": len(tr.log),
             "monitor": None,   # the FleetMonitor belongs to the service
+            "planner": dict(tr.coordinator.plan_cache_stats),
         }
 
     def trace(self, round_id: Optional[int] = None):

@@ -52,11 +52,14 @@ from repro.core.placement import (
     FoldSite,
     NodeState,
     Placement,
+    PlacementState,
     build_fold_plan,
+    choose_fanout,
     choose_top_node,
     inter_node_transfers,
     measure_max_capacity,
     place_updates,
+    plan_cross_node_transfers,
 )
 from repro.core.reuse import AggregatorPool, ExecutableCache, Role, State
 from repro.core.routing import RoutingManager, SockMap, register_node, clear_registry

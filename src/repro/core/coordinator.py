@@ -20,7 +20,7 @@ from __future__ import annotations
 import random
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,13 +29,22 @@ from repro.core.placement import (
     FoldPlan,
     NodeState,
     Placement,
+    PlacementState,
     build_fold_plan,
+    choose_fanout,
     choose_top_node,
     inter_node_transfers,
     place_updates,
 )
 from repro.core.reuse import AggregatorPool, Role
 from repro.core.tag import TAG, build_two_level_tag
+
+#: relative EWMA-load drift (vs a node's MC) that invalidates a cached
+#: plan: the cache key quantizes each node's background load
+#: (queue_estimate + ship) into buckets of ``PLAN_DRIFT_REL × MC`` —
+#: sub-threshold drift keeps the key (and the plan) stable, a node
+#: drifting past it forces a replan.
+PLAN_DRIFT_REL = 0.05
 
 
 @dataclass
@@ -86,6 +95,16 @@ class RoundConfig:
     #                other nodes ship partials daemon→daemon (netrt) —
     #                only the final folded Σc·u returns to the controller
     topology: str = "controller"
+    # fold-tree fanout cap: None keeps the historical two-level plan
+    # (bit for bit); an int K folds >K mids through log-depth inner
+    # stages; "auto" picks K from the fleet's exec/wire EWMAs
+    # (placement.choose_fanout) at plan time
+    fold_fanout: Any = None
+    # reuse the previous round's placement + fold plan when the cohort
+    # shape (count, policy, topology, fleet signature) is unchanged —
+    # only the round tag is restamped.  False replans from scratch
+    # every round (the bit-exactness reference path).
+    plan_cache: bool = True
 
 
 @dataclass
@@ -149,6 +168,17 @@ class Coordinator:
         # NodeState.assigned so a concurrent job's packer sees real
         # occupancy; finish_round lifts exactly its own round's charge.
         self._charges: Dict[Tuple[str, int], Dict[str, float]] = {}
+        # incremental planning state (O(round-delta), not O(pool)):
+        # the persistent residual index the packer runs on (repaired
+        # by churn handlers + per-node drift compares, never rebuilt
+        # per round), the set of nodes actually carrying placement
+        # load (so the between-rounds reset touches only them), and a
+        # one-slot-per-job plan cache keyed on cohort shape
+        self.placement_state = PlacementState(nodes)
+        self._loaded: set = set()
+        self._plan_cache: Dict[str, Tuple] = {}   # job → (key, slot…)
+        self.plan_cache_stats = {"hits": 0, "misses": 0,
+                                 "invalidations": 0}
 
     # ------------------------------------------------------------------
     # multi-job registry (serve mode)
@@ -183,6 +213,31 @@ class Coordinator:
         return js.model_version if js is not None else self.model_version
 
     # ------------------------------------------------------------------
+    def _plan_key(self, cfg: RoundConfig, job: str, share: float,
+                  num_updates: int) -> Tuple:
+        """Cohort-shape signature a cached plan is keyed on: the round's
+        placement inputs (count, policy, topology, fanout, share) plus a
+        per-node fleet signature.  Capacity and already-charged load are
+        exact (a different in-flight charge is a different packing
+        problem); the EWMA-fed background load is drift-quantized so a
+        cached plan survives sub-threshold telemetry noise but not a
+        node drifting past ``PLAN_DRIFT_REL`` of its capacity."""
+        sig = tuple(
+            (n, ns.max_capacity, ns.assigned,
+             int((ns.queue_estimate
+                  + (ns.wire_time_s / ns.exec_time_s
+                     if ns.exec_time_s > 0 else 0.0))
+                 / (PLAN_DRIFT_REL * max(ns.max_capacity, 1e-9))))
+            for n, ns in self.nodes.items())
+        return (cfg.topology, cfg.placement_policy, cfg.fold_fanout,
+                share, num_updates, sig)
+
+    def _invalidate_plans(self) -> None:
+        """Node churn: every cached plan references the dead fleet."""
+        if self._plan_cache:
+            self.plan_cache_stats["invalidations"] += len(self._plan_cache)
+            self._plan_cache.clear()
+
     def plan_round(self, cfg: RoundConfig,
                    sampler: Optional[Callable] = None,
                    job: str = "",
@@ -215,21 +270,61 @@ class Coordinator:
         # reset per-round assignment, keep k/E from metrics — but only
         # while no other round holds a charge: with rounds in flight
         # (rolling rounds, a concurrent job) their placements are real
-        # occupancy the packer must see
+        # occupancy the packer must see.  O(loaded), not O(pool): only
+        # the nodes a charge ever touched can carry assignment.
         if not self._charges:
-            for ns in self.nodes.values():
-                ns.assigned = 0.0
-        assigned0 = {n: ns.assigned for n, ns in self.nodes.items()}
-        placement = place_updates(
-            len(selected), self.nodes, policy=cfg.placement_policy,
-            share=share,
-        )
-        self._charges[(job, rid)] = {
-            n: ns.assigned - assigned0.get(n, 0.0)
-            for n, ns in self.nodes.items()
-            if ns.assigned > assigned0.get(n, 0.0)
-        }
-        top = choose_top_node(self.nodes, placement.assignment)
+            for node in self._loaded:
+                ns = self.nodes.get(node)
+                if ns is not None:
+                    ns.assigned = 0.0
+            self._loaded.clear()
+
+        round_tag = rid if (job or tag_rounds) else None
+        key = self._plan_key(cfg, job, share, len(selected))
+        slot = self._plan_cache.get(job) if cfg.plan_cache else None
+        hit = slot is not None and slot["key"] == key
+        if hit:
+            # cache hit: same cohort shape against the same fleet state
+            # — reuse the placement and fold tree, restamp the round
+            # tag, and re-apply the placement charge (integer-valued
+            # adds, so the batch add reproduces the from-scratch floats
+            # bit for bit)
+            self.plan_cache_stats["hits"] += 1
+            placement, top = slot["placement"], slot["top"]
+            charge = slot["charge"]
+            for node, c in charge.items():
+                ns = self.nodes.get(node)
+                if ns is not None:
+                    ns.assigned += c
+            fold_plan = slot["plan"].restamp(round_tag)
+        else:
+            if cfg.plan_cache:
+                self.plan_cache_stats["misses"] += 1
+                if slot is not None:
+                    self.plan_cache_stats["invalidations"] += 1
+            placement = place_updates(
+                len(selected), self.nodes, policy=cfg.placement_policy,
+                share=share, state=self.placement_state,
+            )
+            top = choose_top_node(self.nodes, placement.assignment)
+            fanout = cfg.fold_fanout
+            if fanout == "auto":
+                fanout = choose_fanout(
+                    sum(1 for idxs in placement.assignment.values() if idxs),
+                    self.nodes)
+            fold_plan = build_fold_plan(
+                placement.assignment, top_node=top, topology=cfg.topology,
+                nodes=self.nodes, job=job, round_tag=round_tag,
+                fanout=fanout)
+            charge = {n: float(len(idxs))
+                      for n, idxs in placement.assignment.items() if idxs}
+            if cfg.plan_cache:
+                slot = {"key": key, "placement": placement, "top": top,
+                        "plan": fold_plan, "charge": charge,
+                        "leaves": None, "tag": None}
+                self._plan_cache[job] = slot
+        self._charges[(job, rid)] = dict(charge)
+        self._loaded.update(charge)
 
         queue_by_node = {
             node: float(len(idxs)) for node, idxs in placement.assignment.items()
@@ -249,20 +344,19 @@ class Coordinator:
         cold_starts = self.pool.stats.cold_starts - cold_before
         reused = self.pool.stats.reused - reused_before
 
-        tag = build_two_level_tag(
-            {n: p.num_leaves for n, p in hierarchy.per_node.items()},
-            clients_per_leaf=cfg.fan_in,
-            top_node=top or next(iter(self.nodes)),
-        )
-        # the explicit fold topology the driver executes: mids from the
-        # placement, root tier from the config, root node = the RC-aware
-        # busiest node (already chosen above).  Serve mode tags every
-        # site id with (job, round) so two in-flight rounds never
-        # collide on a runtime task id; untagged plans stay bit-exact.
-        fold_plan = build_fold_plan(
-            placement.assignment, top_node=top, topology=cfg.topology,
-            nodes=self.nodes, job=job,
-            round_tag=rid if (job or tag_rounds) else None)
+        # the TAG is a pure function of (leaf layout, fan-in, top): on a
+        # plan-cache hit with an unchanged hierarchy the cached TAG is
+        # reused instead of re-materializing O(cohort) channel entries
+        leaves = {n: p.num_leaves for n, p in hierarchy.per_node.items()}
+        if hit and slot["leaves"] == leaves:
+            tag = slot["tag"]
+        else:
+            tag = build_two_level_tag(
+                leaves, clients_per_leaf=cfg.fan_in,
+                top_node=top or next(iter(self.nodes)),
+            )
+        if cfg.plan_cache and slot is not None:
+            slot["leaves"], slot["tag"] = leaves, tag
         plan = RoundPlan(
             round_id=rid, selected=selected, placement=placement,
             hierarchy=hierarchy, tag=tag, top_node=top,
@@ -325,17 +419,26 @@ class Coordinator:
                                           PartialShipped, TopFolded)
 
         if isinstance(event, NodeJoined):
-            self.nodes[event.node] = NodeState(
-                node=event.node, max_capacity=event.capacity or 20.0)
+            ns = NodeState(node=event.node,
+                           max_capacity=event.capacity or 20.0)
+            self.nodes[event.node] = ns
+            self.placement_state.add(ns)
+            self._invalidate_plans()
         elif isinstance(event, NodeRejoined):
             # a restarted daemon re-adopted under its old name: put it
             # back in the RC capacity model iff NodeLost removed it
             # (same-epoch re-dials never lost capacity state)
             if event.node not in self.nodes:
-                self.nodes[event.node] = NodeState(
-                    node=event.node, max_capacity=event.capacity or 20.0)
+                ns = NodeState(node=event.node,
+                               max_capacity=event.capacity or 20.0)
+                self.nodes[event.node] = ns
+                self.placement_state.add(ns)
+                self._invalidate_plans()
         elif isinstance(event, NodeLost):
-            self.nodes.pop(event.node, None)
+            if self.nodes.pop(event.node, None) is not None:
+                self._invalidate_plans()
+            self.placement_state.remove(event.node)
+            self._loaded.discard(event.node)
             for agg_id, inst in list(self.pool.instances.items()):
                 if inst.node == event.node:
                     self.pool.terminate(agg_id)

@@ -26,8 +26,9 @@ to the controller).
 from __future__ import annotations
 
 import json
+from bisect import bisect_left, insort
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass
@@ -126,28 +127,13 @@ def _fit_nodes(nodes: List[NodeState], policy: str,
     raise ValueError(f"unknown placement policy {policy!r}")
 
 
-def place_updates(
-    num_updates: int,
-    nodes: Dict[str, NodeState],
-    policy: str = "bestfit",
-    weights: Optional[Sequence[float]] = None,
-    *,
-    share: float = 1.0,
-) -> Placement:
-    """Bin-pack ``num_updates`` model updates onto worker nodes.
-
-    Each update consumes 1 unit (or ``weights[i]``) of residual
-    capacity.  Returns node -> update-index lists; inter-node traffic is
-    minimized because any (src,dst) node pair exchanges at most one
-    intermediate update per round (§5.1).
-
-    ``share`` caps the placement at a weighted fair-share fraction of
-    every node (multi-job serve mode): each update must fit within
-    ``share × MC`` minus the node's current load, so concurrent jobs
-    split the fleet in proportion to their weights instead of the
-    first planner draining it.
-    """
-    weights = list(weights) if weights is not None else [1.0] * num_updates
+def _place_reference(num_updates: int, nodes: Dict[str, NodeState],
+                     policy: str, weights: List[float],
+                     share: float) -> Placement:
+    """The original O(U·N log N) packing loop: a full fleet sort per
+    update.  Kept verbatim as the behavioral reference — the indexed
+    path below must match it bit for bit (test-enforced), tie-breaks
+    included."""
     assignment: Dict[str, List[int]] = {}
     overflow: List[int] = []
     live = list(nodes.values())
@@ -167,6 +153,258 @@ def place_updates(
 
     used = [n for n in assignment]
     return Placement(assignment=assignment, nodes_used=used, overflow=overflow)
+
+
+def _place_firstfit(num_updates: int, nodes: Dict[str, NodeState],
+                    weights: List[float], share: float) -> Placement:
+    """FirstFit with the invariant work hoisted: the candidate order
+    never changes (fleet insertion order), so the reference loop's
+    per-update ``set(assignment)`` rebuild and identity "sort" are
+    lifted out of the loop entirely."""
+    assignment: Dict[str, List[int]] = {}
+    overflow: List[int] = []
+    live = list(nodes.values())
+    for idx in range(num_updates):
+        w = weights[idx]
+        for cand in live:
+            if cand.residual_for(share) >= w:
+                assignment.setdefault(cand.node, []).append(idx)
+                cand.assigned += w
+                break
+        else:
+            overflow.append(idx)
+    used = [n for n in assignment]
+    return Placement(assignment=assignment, nodes_used=used, overflow=overflow)
+
+
+class PlacementState:
+    """Persistent residual-capacity index over a node fleet.
+
+    The packer needs candidates ordered by residual capacity; sorting
+    the fleet once per update made a 10k-client round O(U·N log N)
+    (~2.6 s at 500 nodes).  This index keeps the fleet sorted by
+    ``(residual_for(share), rank)`` — ``rank`` is fleet-insertion
+    order, which replicates the reference loop's stable-sort tie-break
+    bit for bit — so one round packs in O(U log N), and the structure
+    is repaired by *deltas* instead of rebuilt per round:
+
+      * node join/leave/rejoin: :meth:`add` / :meth:`remove` (wired to
+        the coordinator's ``NodeJoined``/``NodeLost``/``NodeRejoined``
+        handlers);
+      * EWMA-capacity drift and charge lift/apply: :meth:`sync`
+        compares each cached residual against the live ``NodeState``
+        (one float compare per node — the consistency backstop for
+        mutations that bypass the handlers) and re-inserts only the
+        entries that moved.
+
+    Residuals are always read back through ``NodeState.residual_for``
+    — never carried incrementally — so every comparison the packer
+    makes uses the exact float the reference loop would compute.
+
+    One index serves one ``share`` at a time; a share change (jobs
+    joining/leaving a shared coordinator) rebuilds it in O(N log N),
+    still free next to the packing loop it feeds.
+    """
+
+    def __init__(self, nodes: Dict[str, NodeState]):
+        self.nodes = nodes
+        self._rank: Dict[str, int] = {}
+        self._next_rank = 0
+        self._share: Optional[float] = None
+        self._res: Dict[str, float] = {}      # node → cached residual
+        self._entries: List[Tuple[float, int, str]] = []  # sorted
+
+    # -- delta mutations ------------------------------------------------
+    def add(self, ns: NodeState) -> None:
+        """A node joined (or rejoined under a fresh NodeState)."""
+        if ns.node in self._res:
+            self.remove(ns.node)
+        if self._share is None:
+            return                       # never placed yet: lazy build
+        self._rank[ns.node] = self._next_rank
+        self._next_rank += 1
+        r = ns.residual_for(self._share)
+        self._res[ns.node] = r
+        insort(self._entries, (r, self._rank[ns.node], ns.node))
+
+    def remove(self, node: str) -> None:
+        """A node left: drop its entry (a later rejoin re-ranks it at
+        the end, matching the dict-insertion order the reference loop
+        iterates in)."""
+        r = self._res.pop(node, None)
+        rank = self._rank.pop(node, None)
+        if r is None or rank is None:
+            return
+        i = bisect_left(self._entries, (r, rank, ""))
+        if i < len(self._entries) and self._entries[i][1] == rank:
+            self._entries.pop(i)
+
+    def sync(self, share: float) -> None:
+        """Reconcile the index with the live fleet.  Same share: one
+        float compare per node, O(changed) list repairs.  New share:
+        full rebuild (the ordering key changed for every node)."""
+        if share != self._share:
+            self._share = share
+            self._res = {}
+            for node in self.nodes:
+                if node not in self._rank:
+                    self._rank[node] = self._next_rank
+                    self._next_rank += 1
+            self._rank = {n: k for n, k in self._rank.items()
+                          if n in self.nodes}
+            self._entries = []
+            for node, ns in self.nodes.items():
+                r = ns.residual_for(share)
+                self._res[node] = r
+                self._entries.append((r, self._rank[node], node))
+            self._entries.sort()
+            return
+        for node in [n for n in self._res if n not in self.nodes]:
+            self.remove(node)
+        for node, ns in self.nodes.items():
+            r = ns.residual_for(share)
+            old = self._res.get(node)
+            if old is None:
+                self._rank.setdefault(node, self._next_rank)
+                self._next_rank = max(self._next_rank,
+                                      self._rank[node] + 1)
+                self._res[node] = r
+                insort(self._entries, (r, self._rank[node], node))
+            elif old != r:
+                self._requote(node, r)
+
+    def _requote(self, node: str, r: float) -> None:
+        old, rank = self._res[node], self._rank[node]
+        i = bisect_left(self._entries, (old, rank, ""))
+        if i < len(self._entries) and self._entries[i][1] == rank:
+            self._entries.pop(i)
+        self._res[node] = r
+        insort(self._entries, (r, rank, node))
+
+    # -- packing --------------------------------------------------------
+    def place(self, num_updates: int, weights: List[float], policy: str,
+              share: float) -> Placement:
+        self.sync(share)
+        if policy in ("bestfit", "worstfit"):
+            return self._place_sorted(num_updates, weights, share,
+                                      worst=(policy == "worstfit"))
+        if policy == "locality":
+            return self._place_locality(num_updates, weights, share)
+        raise ValueError(f"unknown placement policy {policy!r}")
+
+    def _take(self, i: int, idx: int, w: float, share: float,
+              assignment: Dict[str, List[int]]) -> None:
+        """Assign update ``idx`` to the node at entry ``i`` and re-key
+        its entry from the post-placement residual."""
+        r, rank, node = self._entries.pop(i)
+        ns = self.nodes[node]
+        assignment.setdefault(node, []).append(idx)
+        ns.assigned += w
+        r2 = ns.residual_for(share)
+        self._res[node] = r2
+        insort(self._entries, (r2, rank, node))
+
+    def _place_sorted(self, num_updates: int, weights: List[float],
+                      share: float, *, worst: bool) -> Placement:
+        assignment: Dict[str, List[int]] = {}
+        overflow: List[int] = []
+        e = self._entries
+        for idx in range(num_updates):
+            w = weights[idx]
+            if worst:
+                # WorstFit = the max-residual node; among ties the
+                # reference's stable sort keeps the lowest rank, which
+                # is the leftmost entry of the max residual here
+                if not e or e[-1][0] < w:
+                    overflow.append(idx)
+                    continue
+                i = bisect_left(e, (e[-1][0], -1, ""))
+            else:
+                # BestFit = successor query: tightest residual ≥ w
+                i = bisect_left(e, (w, -1, ""))
+                if i >= len(e):
+                    overflow.append(idx)
+                    continue
+            self._take(i, idx, w, share, assignment)
+        used = [n for n in assignment]
+        return Placement(assignment=assignment, nodes_used=used,
+                         overflow=overflow)
+
+    def _place_locality(self, num_updates: int, weights: List[float],
+                        share: float) -> Placement:
+        """Locality = BestFit over the nodes already holding part of
+        the round, spilling to the *largest*-residual unused node only
+        when the used set saturates (every extra node costs one sealed
+        model-size partial on the wire)."""
+        assignment: Dict[str, List[int]] = {}
+        overflow: List[int] = []
+        # call-scoped views (the used set resets every round); the
+        # persistent index stays authoritative via _requote
+        used_list: List[Tuple[float, int, str]] = []
+        unused = sorted((-r, rank, node)
+                        for (r, rank, node) in self._entries)
+        for idx in range(num_updates):
+            w = weights[idx]
+            i = bisect_left(used_list, (w, -1, ""))
+            if i < len(used_list):
+                r, rank, node = used_list.pop(i)
+            elif unused and -unused[0][0] >= w:
+                nr, rank, node = unused.pop(0)
+                r = -nr
+            else:
+                overflow.append(idx)
+                continue
+            ns = self.nodes[node]
+            assignment.setdefault(node, []).append(idx)
+            ns.assigned += w
+            r2 = ns.residual_for(share)
+            self._requote(node, r2)
+            insort(used_list, (r2, rank, node))
+        used = [n for n in assignment]
+        return Placement(assignment=assignment, nodes_used=used,
+                         overflow=overflow)
+
+
+def place_updates(
+    num_updates: int,
+    nodes: Dict[str, NodeState],
+    policy: str = "bestfit",
+    weights: Optional[Sequence[float]] = None,
+    *,
+    share: float = 1.0,
+    state: Optional[PlacementState] = None,
+    method: str = "auto",
+) -> Placement:
+    """Bin-pack ``num_updates`` model updates onto worker nodes.
+
+    Each update consumes 1 unit (or ``weights[i]``) of residual
+    capacity.  Returns node -> update-index lists; inter-node traffic is
+    minimized because any (src,dst) node pair exchanges at most one
+    intermediate update per round (§5.1).
+
+    ``share`` caps the placement at a weighted fair-share fraction of
+    every node (multi-job serve mode): each update must fit within
+    ``share × MC`` minus the node's current load, so concurrent jobs
+    split the fleet in proportion to their weights instead of the
+    first planner draining it.
+
+    ``method="auto"`` packs through a sorted residual index
+    (:class:`PlacementState`) in O(U log N) — bit-identical to the
+    original per-update-sort loop, which ``method="reference"`` still
+    runs (the regression oracle).  Pass ``state`` to reuse a
+    persistent index across rounds (the coordinator does): the index
+    is then repaired by deltas instead of rebuilt.
+    """
+    weights = list(weights) if weights is not None else [1.0] * num_updates
+    if method == "reference":
+        return _place_reference(num_updates, nodes, policy, weights, share)
+    if policy == "firstfit":
+        return _place_firstfit(num_updates, nodes, weights, share)
+    if policy not in ("bestfit", "worstfit", "locality"):
+        raise ValueError(f"unknown placement policy {policy!r}")
+    if state is None or state.nodes is not nodes:
+        state = PlacementState(nodes)
+    return state.place(num_updates, weights, policy, share)
 
 
 def choose_top_node(nodes: Dict[str, NodeState],
@@ -282,12 +520,59 @@ class FoldPlan:
 
     @property
     def mids(self) -> Tuple[FoldSite, ...]:
-        """The non-root sites, in plan order (sorted by node)."""
-        return tuple(s for s in self.sites if s.agg_id != self.root)
+        """The client-fed leaf sites, in plan order (sorted by node).
+        Two-level plans have no inner sites, so this is every non-root
+        site — the historical meaning, unchanged."""
+        return tuple(s for s in self.sites
+                     if s.agg_id != self.root and not s.children)
+
+    @property
+    def inners(self) -> Tuple[FoldSite, ...]:
+        """Intermediate fold stages of a deep (fanout-capped) tree:
+        non-root sites whose inputs are other sites' partials, not
+        client updates.  Empty for two-level plans."""
+        return tuple(s for s in self.sites
+                     if s.agg_id != self.root and s.children)
+
+    @property
+    def depth(self) -> int:
+        """Fold levels above the mids (1 = two-level: just the root)."""
+        if not self.root:
+            return 0
+        sites = {s.agg_id: s for s in self.sites}
+
+        def d(agg_id: str) -> int:
+            s = sites[agg_id]
+            if not s.children:
+                return 0
+            return 1 + max(d(c) for c in s.children)
+
+        return d(self.root)
 
     @property
     def topology(self) -> str:
         return self.site(self.root).tier if self.root else "controller"
+
+    def restamp(self, round_tag: Optional[int]) -> "FoldPlan":
+        """Re-tag every site's agg_id with ``round_tag``, preserving
+        the tree shape — the plan-cache seam: an unchanged cohort shape
+        reuses the previous round's plan with only the round tag moved
+        (returns ``self`` when no tag changes, so the untagged
+        single-job path reuses the identical object)."""
+        if not self.root:
+            return self
+        ids: Dict[str, str] = {}
+        for s in self.sites:
+            kind, job, _rid, node = split_agg_id(s.agg_id)
+            ids[s.agg_id] = join_agg_id(kind, job, round_tag, node)
+        if all(new == old for old, new in ids.items()):
+            return self
+        return FoldPlan(
+            root=ids[self.root],
+            sites=tuple(FoldSite(
+                agg_id=ids[s.agg_id], node=s.node, tier=s.tier,
+                goal=s.goal, children=tuple(ids[c] for c in s.children),
+            ) for s in self.sites))
 
     # -- wire (same seam as events.to_wire: JSON bytes) -----------------
     def to_wire(self) -> bytes:
@@ -315,6 +600,35 @@ class FoldPlan:
         )
 
 
+def choose_fanout(n_sites: int, nodes: Optional[Dict[str, NodeState]] = None,
+                  cap: int = 16) -> Optional[int]:
+    """Pick a fold-tree fanout from the fleet's measured cost EWMAs.
+
+    The per-stage critical path is roughly ``K·E + W`` (K sequential
+    ``add_partial`` folds of exec cost E, plus one partial ship of
+    wire cost W to reach the stage's node) and the tree has
+    ``ceil(log_K M)`` stages, so expensive shipping favors a *wider*
+    tree (fewer hops) while expensive folding favors a narrower one.
+    E/W come from the same ``NodeState`` EWMAs the capacity model
+    runs on — ``exec_time_s`` is fed by ``PartialReady``/``TopFolded``
+    exec stamps, ``wire_time_s`` by ``PartialShipped``.
+
+    Baseline is ``K ≈ √M`` (two stages), widened by the measured
+    wire/exec ratio and clamped to ``[2, cap]``.  Returns ``None`` —
+    keep the two-level plan — when the site count is already a
+    reasonable root fan-in."""
+    if n_sites <= 4:
+        return None
+    exec_s = wire_s = 0.0
+    if nodes:
+        vals = list(nodes.values())
+        exec_s = sum(ns.exec_time_s for ns in vals) / len(vals)
+        wire_s = sum(ns.wire_time_s for ns in vals) / len(vals)
+    ratio = (wire_s / exec_s) if exec_s > 0 else 0.0
+    k = int(round(n_sites ** 0.5 * (1.0 + min(ratio, 3.0))))
+    return max(2, min(k, cap, n_sites))
+
+
 def build_fold_plan(
     assignment: Dict[str, List[int]],
     *,
@@ -323,6 +637,7 @@ def build_fold_plan(
     nodes: Optional[Dict[str, NodeState]] = None,
     job: str = "",
     round_tag: Optional[int] = None,
+    fanout: Optional[int] = None,
 ) -> FoldPlan:
     """Reify a placement into the fold tree the driver executes.
 
@@ -332,12 +647,27 @@ def build_fold_plan(
     busiest node, RC tie-break) so under ``node`` topology the largest
     share of partials is already local to the root.
 
+    ``fanout=K`` caps every fold's fan-in at K: more than K mids fold
+    through intermediate ``fold<level>.<i>`` sites — log-depth stages
+    of runtime aggregators — instead of one wide root fold.  Each
+    inner site lands on its heaviest child's node (largest subtree
+    update count, name tie-break), so the biggest input partial is
+    already local and every inner stage ships at most ``K−1``
+    partials; a trailing singleton group is hoisted to the next level
+    instead of wrapped in a one-input fold, and an unpinned root
+    co-locates with the heaviest final-level subtree — so plan-wide,
+    cross-node partial traffic stays within the ``≤ leaves − 1`` a
+    two-level plan ships (and under ``partial_traffic_bound``).
+    ``None`` keeps the historical two-level tree bit for bit.
+
     ``job``/``round_tag`` stamp every site's agg_id with the serve
     layer's tags (see the agg-id grammar above); untagged plans keep
     the legacy ``mid@node`` / ``top@node`` ids bit for bit."""
     if topology not in FOLD_TIERS:
         raise ValueError(f"unknown fold topology {topology!r} "
                          f"(expected one of {FOLD_TIERS})")
+    if fanout is not None and int(fanout) < 2:
+        raise ValueError(f"fold fanout must be ≥ 2, got {fanout!r}")
     planned = {node: len(idxs) for node, idxs in assignment.items() if idxs}
     if not planned:
         return FoldPlan()
@@ -347,12 +677,60 @@ def build_fold_plan(
     root_node = top_node or choose_top_node(nodes or {}, assignment)
     if root_node not in planned:
         root_node = max(planned, key=lambda n: (planned[n], n))
+    sites: List[FoldSite] = list(mids)
+    level: List[FoldSite] = list(mids)
+    if fanout is not None and len(mids) > fanout:
+        fanout = int(fanout)
+        # subtree update counts drive inner-site placement (heaviest
+        # child's node) the same way choose_top_node drives the root's
+        counts = {s.agg_id: s.goal for s in mids}
+        lvl = 0
+        while len(level) > fanout:
+            lvl += 1
+            nxt: List[FoldSite] = []
+            for gi in range(0, len(level), fanout):
+                grp = level[gi:gi + fanout]
+                if len(grp) == 1:
+                    # a trailing singleton folds nothing: hoist it to
+                    # the next level instead of paying a one-input
+                    # fold stage for a pass-through
+                    nxt.append(grp[0])
+                    continue
+                heavy = max(grp, key=lambda s: (counts[s.agg_id], s.node))
+                site = FoldSite(
+                    agg_id=join_agg_id(f"fold{lvl}.{gi // fanout}", job,
+                                       round_tag, heavy.node),
+                    node=heavy.node, tier="worker", goal=len(grp),
+                    children=tuple(s.agg_id for s in grp))
+                counts[site.agg_id] = sum(counts[s.agg_id] for s in grp)
+                sites.append(site)
+                nxt.append(site)
+            level = nxt
+        if top_node is None and level is not mids:
+            # no pinned root: co-locate it with the heaviest final-
+            # level subtree (the rule every inner stage follows), so
+            # the deep tree's total cross-node partial traffic stays
+            # at most a two-level plan's (≤ leaves − 1 ships)
+            root_node = max(level,
+                            key=lambda s: (counts[s.agg_id], s.node)).node
     root = FoldSite(
         agg_id=join_agg_id("top", job, round_tag, root_node),
         node=root_node, tier=topology,
-        goal=len(mids), children=tuple(s.agg_id for s in mids),
+        goal=len(level), children=tuple(s.agg_id for s in level),
     )
-    return FoldPlan(root=root.agg_id, sites=mids + (root,))
+    return FoldPlan(root=root.agg_id, sites=tuple(sites) + (root,))
+
+
+def plan_cross_node_transfers(plan: FoldPlan) -> int:
+    """Parent↔child fold edges that cross nodes — each one ships one
+    sealed model-size partial per round.  The deep-tree analogue of
+    :func:`inter_node_transfers`; for a two-level plan the two agree
+    exactly (every mid not on the root's node crosses once)."""
+    if not plan.root:
+        return 0
+    sites = {s.agg_id: s for s in plan.sites}
+    return sum(1 for s in plan.sites for c in s.children
+               if sites[c].node != s.node)
 
 
 def inter_node_transfers(assignment: Dict[str, List[int]], top_node: str) -> int:

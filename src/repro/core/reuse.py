@@ -14,6 +14,7 @@ promotion is free because every level runs the same jaxpr.
 """
 from __future__ import annotations
 
+import heapq
 import time
 from dataclasses import dataclass, field
 from enum import Enum
@@ -51,6 +52,9 @@ class AggregatorInstance:
     # are not pool-managed; they key warm engines by tree position —
     # see repro.runtime.driver InProcRuntime.engine_for.)
     engine: Optional[Any] = None
+    # creation sequence number: the idle index replays the historical
+    # "first created wins" reuse order through it
+    seq: int = 0
 
 
 @dataclass
@@ -71,6 +75,12 @@ class AggregatorPool:
         self.instances: Dict[str, AggregatorInstance] = {}
         self.stats = PoolStats()
         self._counter = 0
+        # per-node idle index: a min-heap of (seq, agg_id) with lazy
+        # deletion, so acquire is O(log idle) instead of a linear scan
+        # over EVERY instance in the cluster (O(pool²) per round at 10k
+        # clients).  The seq key reproduces the historical scan's
+        # "first created wins" selection exactly.
+        self._idle: Dict[str, List[Tuple[int, str]]] = {}
 
     # ------------------------------------------------------------------
     def acquire(self, node: str, role: Role) -> Tuple[AggregatorInstance, float]:
@@ -78,19 +88,25 @@ class AggregatorPool:
         instance on that node if any (role conversion is free — §5.3),
         else create one (pay the cold start).  Returns (instance,
         startup_delay_s)."""
-        for inst in self.instances.values():
-            if inst.node == node and inst.state == State.IDLE:
-                if inst.role != role:
-                    inst.promotions += 1
-                    self.stats.promoted += 1
-                inst.role = role
-                inst.state = State.BUSY
-                self.stats.reused += 1
-                return inst, 0.0
+        heap = self._idle.get(node)
+        while heap:
+            _seq, agg_id = heapq.heappop(heap)
+            inst = self.instances.get(agg_id)
+            if inst is None or inst.state != State.IDLE \
+                    or inst.node != node:
+                continue   # stale entry (terminated / re-acquired)
+            if inst.role != role:
+                inst.promotions += 1
+                self.stats.promoted += 1
+            inst.role = role
+            inst.state = State.BUSY
+            self.stats.reused += 1
+            return inst, 0.0
         self._counter += 1
         inst = AggregatorInstance(
             agg_id=f"agg{self._counter}@{node}", node=node, role=role,
             state=State.BUSY, created_ts=time.perf_counter(), cold_starts=1,
+            seq=self._counter,
         )
         self.instances[inst.agg_id] = inst
         self.stats.created += 1
@@ -111,6 +127,9 @@ class AggregatorPool:
     def release(self, agg_id: str) -> None:
         inst = self.instances.get(agg_id)
         if inst is not None:
+            if inst.state != State.IDLE:   # re-release: already indexed
+                heapq.heappush(self._idle.setdefault(inst.node, []),
+                               (inst.seq, inst.agg_id))
             inst.state = State.IDLE
             inst.tasks_done += 1
             if inst.engine is not None:

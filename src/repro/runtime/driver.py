@@ -523,6 +523,11 @@ class _RoundState:
     top_id: Optional[str] = None
     top_partial: Optional[PartialReady] = None
     top_crashed: bool = False
+    # deep (fanout-capped) plans: the inner fold stages in flight —
+    # their PartialReady results are intercepted like the root's
+    pending_tops: Set[str] = field(default_factory=set)
+    top_results: Dict[str, PartialReady] = field(default_factory=dict)
+    deep_crashed: bool = False
     # first-dispatch stamp per subtree (dispatch → PartialReady spans)
     first_dispatch: Dict[str, float] = field(default_factory=dict)
     # rolling-round bookkeeping: the owning job, the plan's agg-id tags
@@ -953,7 +958,11 @@ class RoundDriver:
                 else None
             tier = root.tier if root is not None else "controller"
             folded = False
-            if tier != "controller" and hasattr(rt, "deliver_partial"):
+            if (root is not None and fold_plan.inners
+                    and hasattr(rt, "deliver_partial")):
+                folded = yield from self._fold_deep(st, rt, order, root)
+            if (not folded and tier != "controller"
+                    and hasattr(rt, "deliver_partial")):
                 folded = yield from self._fold_on_runtime(
                     st, rt, order, root)
             if not folded:
@@ -1143,6 +1152,146 @@ class RoundDriver:
             # and re-collected, and the next attempt re-roots
         return False
 
+    def _fold_deep(self, st: "_RoundState", rt, order: List[str],
+                   root: FoldSite):
+        """Execute a deep (fanout-capped) plan's inner fold stages as
+        runtime aggregators, bottom-up: a stage spawns once every one
+        of its child partials is resolved, folds them in sorted-agg_id
+        order (explicit seq), and its published partial feeds the next
+        level — so a 100-mid round folds through log-depth stages
+        instead of one 100-way root fold.
+
+        The root's Σ weight/count are accumulated *flat over the sorted
+        leaf partials* — exactly the expression the two-level fold
+        evaluates — so the final division is bit-identical to the flat
+        plan whenever the partial sums are (integer-valued updates, or
+        any fanout that preserves the fold grouping).
+
+        Bails out (``False`` → the flat fallback) on a crashed stage,
+        an expired deadline, or a plan leaf that never published — the
+        degraded paths stay on the battle-tested flat fold."""
+        out = st.out
+        plan = st.plan
+        leaves = sorted(s.agg_id for s in plan.mids)
+        if set(order) != set(leaves):
+            return False          # lost subtree / deadline close-out
+        resolved: Dict[str, PartialReady] = {
+            a: st.partials[a] for a in leaves}
+        pending = {s.agg_id: s for s in plan.inners}
+        st.top_results, st.deep_crashed = {}, False
+        while pending:
+            batch = [a for a in sorted(pending)
+                     if all(c in resolved for c in pending[a].children)]
+            if not batch:
+                return False      # malformed plan: no resolvable stage
+            st.pending_tops = set(batch)
+            try:
+                for a in batch:
+                    s = pending.pop(a)
+                    rt.spawn_aggregator(a, goal=len(s.children),
+                                        n_elems=st.n_elems,
+                                        round_id=st.round_id, kind="top")
+                    for seq, c in enumerate(sorted(s.children)):
+                        p = resolved[c]
+                        rt.deliver_partial(a, p.key, p.weight, p.count,
+                                           round_id=st.round_id, seq=seq)
+            except BaseException:
+                st.pending_tops = set()
+                raise
+            while st.pending_tops - set(st.top_results) \
+                    and not st.deep_crashed:
+                if (st.deadline is not None
+                        and time.perf_counter() > st.deadline):
+                    st.pending_tops = set()
+                    return False
+                self._route(rt.poll_events(timeout=0.05), st,
+                            draining=True)
+                yield "fold"
+            st.pending_tops = set()
+            if st.deep_crashed:
+                return False
+            for a in batch:
+                p = st.top_results[a]
+                resolved[a] = p
+                st.partials[a] = p   # end-of-round sweep reclaims it
+                out.exec_s[a] = p.exec_s
+        # --- the root fold over the final level ------------------------
+        final = sorted(root.children)
+        if any(a not in resolved for a in final):
+            return False
+        w, c = 0.0, 0
+        for a in leaves:
+            w += st.partials[a].weight
+            c += st.partials[a].count
+            out.exec_s[a] = st.partials[a].exec_s
+        if root.tier != "controller":
+            st.top_id = root.agg_id
+            st.top_partial, st.top_crashed = None, False
+            try:
+                rt.spawn_aggregator(root.agg_id, goal=len(final),
+                                    n_elems=st.n_elems,
+                                    round_id=st.round_id, kind="top")
+                for seq, a in enumerate(final):
+                    p = resolved[a]
+                    rt.deliver_partial(root.agg_id, p.key, p.weight,
+                                       p.count, round_id=st.round_id,
+                                       seq=seq)
+            except BaseException:
+                st.top_id = None
+                raise
+            while st.top_partial is None and not st.top_crashed:
+                if (st.deadline is not None
+                        and time.perf_counter() > st.deadline):
+                    break
+                self._route(rt.poll_events(timeout=0.05), st,
+                            draining=True)
+                yield "fold"
+            st.top_id = None
+            if st.top_partial is None:
+                return False      # root crashed/expired: flat fallback
+            p = st.top_partial
+            view = rt.get_partial(p.key)
+            out.delta = np.asarray(view, dtype=np.float32) / np.float32(w)
+            rt.release_partial(p.key)
+            out.exec_s[root.agg_id] = p.exec_s
+            st.partials[root.agg_id] = p
+            fold_dt = p.exec_s
+        else:
+            engine = rt.engine_for(root.agg_id)
+            state = FedAvgState(engine=engine)
+            state._ensure_acc(st.n_elems)
+            sidecar = EventSidecar("top", self.metrics)
+            t0 = time.perf_counter()
+            for a in final:
+                p = st.partials[a]
+                view = rt.get_partial(p.key)
+                state.acc = engine.add_partial(state.acc, view)
+                rt.release_partial(p.key)
+            engine.sync(state.acc)
+            fold_dt = time.perf_counter() - t0
+            sidecar.on_aggregate(len(final), fold_dt)
+            state.weight, state.count = w, c
+            out.delta, _w = state.result()
+            sidecar.on_send(out.delta.nbytes)
+        out.weight, out.count = w, c
+        out.fold_tier, out.root_node = root.tier, root.node
+        if self.tracer.enabled:
+            self.tracer.point(
+                "fold.mid", sum(st.partials[a].exec_s for a in leaves),
+                owner="driver", round_id=st.round_id, n=float(len(leaves)))
+            self.tracer.point(
+                "fold.inner",
+                sum(resolved[s.agg_id].exec_s for s in plan.inners),
+                owner="driver", round_id=st.round_id,
+                n=float(len(plan.inners)))
+            self.tracer.point(
+                "fold.top", fold_dt, owner=root.agg_id, node=root.node,
+                round_id=st.round_id, n=float(len(final)))
+        self.dispatch(TopFolded(
+            round_id=st.round_id, agg_id=root.agg_id, node=root.node,
+            tier=root.tier, count=c, weight=w, exec_s=fold_dt))
+        return True
+
     # ------------------------------------------------------------------
     def _route(self, events: List[RoundEvent], st: "_RoundState", *,
                draining: bool) -> None:
@@ -1176,6 +1325,13 @@ class RoundDriver:
                 # placement would diverge between topologies.
                 st.top_partial = ev
                 return
+            if (ev.agg_id in st.pending_tops
+                    and ev.round_id == st.round_id
+                    and ev.agg_id not in st.top_results):
+                # an inner fold stage of a deep plan published its
+                # partial — absorbed silently, same as the root above
+                st.top_results[ev.agg_id] = ev
+                return
             if (ev.round_id != st.round_id or ev.agg_id not in st.sent
                     or ev.agg_id in st.partials):
                 # stale leftover (aborted round / force-released
@@ -1206,6 +1362,11 @@ class RoundDriver:
                 # the root fold died (node loss / ship failure):
                 # _fold_on_runtime re-roots; nothing to re-dispatch
                 st.top_crashed = True
+                return
+            if ev.agg_id in st.pending_tops:
+                # an inner fold stage died: the deep fold bails out
+                # and the round falls back to the flat root fold
+                st.deep_crashed = True
                 return
             self._redispatch(ev, st, draining=draining)
         else:

@@ -418,6 +418,7 @@ class AggregationService:
             "rounds_closed": len(self.round_log),
             "monitor": (self.monitor.counters()
                         if self.monitor is not None else None),
+            "planner": dict(self.coordinator.plan_cache_stats),
         }
 
     # ------------------------------------------------------------------

@@ -1,0 +1,518 @@
+"""O(round) control plane (PR 10): incremental placement, plan
+caching, deep fold trees.
+
+Four seams this file holds:
+
+  * **index ↔ reference parity** — the sorted-residual packing index
+    (`PlacementState`) and the hoisted FirstFit loop are bit-identical
+    to the original per-update-full-sort loop (``method="reference"``,
+    kept verbatim as the oracle), ties / custom weights / fair-share
+    values / overflow included, and the persistent index stays exact
+    across node churn and EWMA drift;
+  * **plan cache** — an unchanged cohort shape reuses the previous
+    round's `FoldPlan` object (restamp identity), while cohort-size
+    change, node churn through `handle_event`, and super-threshold
+    EWMA drift each force a fresh plan — and a multi-round churn
+    sequence driven through the public `Session` surface produces
+    bit-identical params with the cache on and off;
+  * **deep fold trees** — `build_fold_plan(fanout=K)` emits log-depth
+    trees whose inner stages are co-located with their heaviest child
+    (cross-node partial traffic stays within the two-level bound),
+    survive the wire, and fold bit-identically to the flat plan on
+    integer-valued updates under every root tier — with a crashed
+    inner stage bailing out to the flat fold;
+  * **pool index** — `AggregatorPool.acquire` through the per-node
+    idle heap keeps the historical first-created-wins reuse order.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.api import Session  # noqa: E402
+from repro.core import (  # noqa: E402
+    ClientInfo, Coordinator, NodeState, PlacementState, RoundConfig,
+    Selector, choose_fanout, place_updates,
+)
+from repro.core.coordinator import PLAN_DRIFT_REL  # noqa: E402
+from repro.core.placement import (  # noqa: E402
+    FoldPlan, build_fold_plan, partial_traffic_bound,
+    plan_cross_node_transfers,
+)
+from repro.core.reuse import AggregatorPool, Role  # noqa: E402
+from repro.runtime.driver import InProcRuntime, RoundDriver  # noqa: E402
+from repro.runtime.events import (  # noqa: E402
+    NodeJoined, NodeLost, NodeRejoined, WorkerCrashed,
+)
+from repro.runtime.trainer import ClientRuntime  # noqa: E402
+
+
+def _fleet(caps, **kw):
+    return {f"n{i}": NodeState(node=f"n{i}", max_capacity=float(c), **kw)
+            for i, c in enumerate(caps)}
+
+
+def _same_placement(a, b):
+    assert a.assignment == b.assignment
+    assert a.nodes_used == b.nodes_used
+    assert a.overflow == b.overflow
+
+
+# ---------------------------------------------------------------------------
+# index ↔ reference parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy",
+                         ["bestfit", "worstfit", "locality", "firstfit"])
+def test_indexed_placement_matches_reference_fuzz(policy):
+    """The O(U log N) index replays the O(U·N log N) loop bit for bit:
+    random fleets with residual ties (equal capacities), fractional
+    EWMA load, custom weights, fair-share caps, and overflow."""
+    for seed in range(12):
+        rng = np.random.default_rng(seed)
+        n_nodes = int(rng.integers(3, 14))
+        # half the fleets are all-equal capacity: every placement is a
+        # tie broken purely by fleet insertion order
+        if seed % 2:
+            caps = [10.0] * n_nodes
+        else:
+            caps = rng.choice([5.0, 10.0, 10.0, 25.0], n_nodes).tolist()
+        nodes = _fleet(caps)
+        for ns in nodes.values():
+            ns.arrival_rate = float(rng.choice([0.0, 0.3, 1.1]))
+            ns.exec_time_s = float(rng.choice([0.5, 1.0]))
+            ns.wire_time_s = float(rng.choice([0.0, 0.2]))
+        n_up = int(rng.integers(1, 60))
+        weights = (None if seed % 3 == 0
+                   else rng.choice([1.0, 1.0, 2.0, 3.5], n_up).tolist())
+        share = [1.0, 0.5, 0.37][seed % 3]
+        ref = place_updates(n_up, copy.deepcopy(nodes), policy=policy,
+                            weights=weights, share=share,
+                            method="reference")
+        got = place_updates(n_up, nodes, policy=policy,
+                            weights=weights, share=share)
+        _same_placement(got, ref)
+
+
+def test_firstfit_hoisted_loop_matches_reference():
+    """Satellite regression: the FirstFit path no longer rebuilds
+    ``set(assignment)`` / re-sorts per update — assignments must stay
+    bit-identical, overflow included."""
+    nodes = _fleet([3.0, 2.0, 4.0])
+    nodes["n1"].arrival_rate = 0.5     # fractional residual
+    ref = place_updates(12, copy.deepcopy(nodes), policy="firstfit",
+                        weights=[1.0, 2.0] * 6, method="reference")
+    got = place_updates(12, nodes, policy="firstfit",
+                        weights=[1.0, 2.0] * 6)
+    _same_placement(got, ref)
+    assert got.overflow                # capacity 9 < weight 18: spills
+
+
+def test_placement_state_persists_across_churn():
+    """One persistent index, repaired by deltas (remove/add/drift),
+    packs every round exactly like a from-scratch reference run on a
+    deep-copied fleet."""
+    nodes = _fleet([8.0, 8.0, 12.0, 6.0])
+    state = PlacementState(nodes)
+    policies = ["bestfit", "worstfit", "locality",
+                "bestfit", "locality", "worstfit"]
+    rng = np.random.default_rng(7)
+    for step, policy in enumerate(policies):
+        if step == 2:                  # NodeLost
+            del nodes["n1"]
+            state.remove("n1")
+        if step == 3:                  # NodeJoined (fresh name)
+            ns = NodeState(node="n9", max_capacity=10.0)
+            nodes["n9"] = ns
+            state.add(ns)
+        if step == 4:                  # EWMA drift behind sync's back
+            nodes["n2"].arrival_rate = 1.7
+            nodes["n0"].wire_time_s = 0.4
+        if step == 5:                  # NodeRejoined under the old name
+            ns = NodeState(node="n1", max_capacity=8.0)
+            nodes["n1"] = ns
+            state.add(ns)
+        n_up = int(rng.integers(5, 40))
+        weights = rng.choice([1.0, 1.0, 2.0], n_up).tolist()
+        ref = place_updates(n_up, copy.deepcopy(nodes), policy=policy,
+                            weights=weights, method="reference")
+        got = place_updates(n_up, nodes, policy=policy, weights=weights,
+                            state=state)
+        _same_placement(got, ref)
+        for ns in nodes.values():      # finish_round lifts the charge
+            ns.assigned = 0.0
+
+
+def test_placement_share_rebuild():
+    """A share change re-keys every entry: the index must rebuild and
+    still match the reference at the new share."""
+    nodes = _fleet([10.0, 10.0, 10.0])
+    state = PlacementState(nodes)
+    for share in (1.0, 0.5, 1.0):
+        ref = place_updates(9, copy.deepcopy(nodes), share=share,
+                            method="reference")
+        got = place_updates(9, nodes, share=share, state=state)
+        _same_placement(got, ref)
+        for ns in nodes.values():
+            ns.assigned = 0.0
+
+
+# ---------------------------------------------------------------------------
+# plan cache (coordinator level)
+# ---------------------------------------------------------------------------
+
+def _coord(n_nodes=4, cap=20.0, n_clients=40):
+    nodes = _fleet([cap] * n_nodes)
+    sel = Selector([ClientInfo(client_id=f"c{i}")
+                    for i in range(n_clients)], seed=0)
+    return Coordinator(sel, nodes)
+
+
+def _sampler(k):
+    def sample(rid, pool):
+        return pool[:k]
+    return sample
+
+
+def test_plan_cache_hit_restamps_same_object():
+    co = _coord()
+    cfg = RoundConfig(aggregation_goal=16, over_provision=1.0)
+    p1 = co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    p2 = co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    # untagged plans restamp to themselves: the identity is the proof
+    # the cache (not a replan) produced round 2
+    assert p2.fold_plan is p1.fold_plan
+    assert p2.placement.assignment == p1.placement.assignment
+    assert p2.tag is p1.tag
+    assert co.plan_cache_stats == {"hits": 1, "misses": 1,
+                                   "invalidations": 0}
+
+
+def test_plan_cache_misses_on_cohort_size_change():
+    co = _coord()
+    cfg = RoundConfig(aggregation_goal=16, over_provision=1.0)
+    co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    p2 = co.plan_round(cfg, sampler=_sampler(12))
+    co.finish_round()
+    assert sum(len(v) for v in p2.placement.assignment.values()) == 12
+    assert co.plan_cache_stats["hits"] == 0
+    assert co.plan_cache_stats["misses"] == 2
+    assert co.plan_cache_stats["invalidations"] == 1  # slot replaced
+
+
+@pytest.mark.parametrize("event", [
+    NodeLost(node="n1"),
+    NodeJoined(node="nX", capacity=20.0),
+])
+def test_plan_cache_invalidated_by_node_churn(event):
+    co = _coord()
+    cfg = RoundConfig(aggregation_goal=16, over_provision=1.0)
+    co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    co.handle_event(event)
+    assert co.plan_cache_stats["invalidations"] == 1
+    p2 = co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    assert co.plan_cache_stats["hits"] == 0
+    if isinstance(event, NodeLost):
+        assert "n1" not in p2.placement.assignment
+    ref = place_updates(16, copy.deepcopy(co.nodes), method="reference")
+    assert p2.placement.assignment == ref.assignment
+
+
+def test_plan_cache_invalidated_by_rejoin_after_loss():
+    co = _coord()
+    cfg = RoundConfig(aggregation_goal=16, over_provision=1.0)
+    co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    co.handle_event(NodeLost(node="n2"))
+    co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    co.handle_event(NodeRejoined(node="n2", epoch=2, capacity=20.0))
+    assert "n2" in co.nodes
+    p3 = co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    assert co.plan_cache_stats["invalidations"] >= 2
+    ref = place_updates(16, copy.deepcopy(co.nodes), method="reference")
+    assert p3.placement.assignment == ref.assignment
+
+
+def test_plan_cache_drift_threshold():
+    """Sub-threshold EWMA drift keeps the cached plan; a node drifting
+    past PLAN_DRIFT_REL of its capacity forces a replan."""
+    co = _coord(cap=20.0)        # bucket width = 0.05 * 20 = 1.0
+    cfg = RoundConfig(aggregation_goal=16, over_provision=1.0)
+    co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    co.nodes["n0"].arrival_rate = 0.4 * PLAN_DRIFT_REL * 20.0 / 1.0
+    co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    assert co.plan_cache_stats["hits"] == 1      # noise: plan survives
+    co.nodes["n0"].arrival_rate = 2.5 * PLAN_DRIFT_REL * 20.0 / 1.0
+    p3 = co.plan_round(cfg, sampler=_sampler(16))
+    co.finish_round()
+    assert co.plan_cache_stats["hits"] == 1      # drift: replanned
+    assert co.plan_cache_stats["misses"] == 2
+    ref = place_updates(16, copy.deepcopy(co.nodes), method="reference")
+    assert p3.placement.assignment == ref.assignment
+
+
+def test_plan_cache_off_is_bit_identical_with_on():
+    """The cache is a pure memo: over a churn + drift sequence the
+    cached coordinator and a cache-off twin produce identical plans
+    AND identical post-round capacity state."""
+    cfg_on = RoundConfig(aggregation_goal=12, over_provision=1.0)
+    cfg_off = RoundConfig(aggregation_goal=12, over_provision=1.0,
+                          plan_cache=False)
+    a, b = _coord(), _coord()
+    for step in range(5):
+        for co in (a, b):
+            if step == 2:
+                co.handle_event(NodeLost(node="n3"))
+            if step == 3:
+                co.nodes["n0"].arrival_rate = 2.0
+        pa = a.plan_round(cfg_on, sampler=_sampler(12))
+        pb = b.plan_round(cfg_off, sampler=_sampler(12))
+        assert pa.placement.assignment == pb.placement.assignment
+        assert pa.top_node == pb.top_node
+        assert pa.fold_plan == pb.fold_plan
+        assert {n: ns.assigned for n, ns in a.nodes.items()} \
+            == {n: ns.assigned for n, ns in b.nodes.items()}
+        a.finish_round()
+        b.finish_round()
+    assert a.plan_cache_stats["hits"] >= 2
+    assert b.plan_cache_stats["hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# plan cache (Session level, through the public surface)
+# ---------------------------------------------------------------------------
+
+class _Model:
+    def loss(self, params, batch):   # external-update-only session
+        raise NotImplementedError
+
+
+N = 64
+
+
+def _ext(cid):
+    rng = np.random.default_rng(abs(hash(cid)) % (1 << 31))
+    return rng.standard_normal(N).astype(np.float32)
+
+
+def _session(plan_cache):
+    clients = [ClientRuntime(ClientInfo(client_id=f"c{i}"), None)
+               for i in range(8)]
+    # roomy nodes: the drift bucket (PLAN_DRIFT_REL × MC = 2.0) then
+    # rides out the EWMA cold-start transient the first folds feed
+    # back, so the cache stabilizes right after round 0
+    nodes = _fleet([40.0] * 4)
+    return Session.open(
+        _Model(), {"w": jnp.zeros((N,), jnp.float32)}, clients,
+        nodes=nodes, seed=0,
+        round_cfg=RoundConfig(aggregation_goal=8, over_provision=1.0,
+                              plan_cache=plan_cache))
+
+
+def test_session_churn_sequence_bitexact_with_and_without_cache():
+    """Multi-round churn through the public Session surface: per-round
+    params are bitwise equal between a plan-cached session and a
+    cache-off twin, and the cached one actually hit."""
+    churn = {1: NodeLost(node="n1"),
+             3: NodeJoined(node="n8", capacity=40.0),
+             4: NodeRejoined(node="n1", epoch=2, capacity=40.0)}
+    with _session(True) as sa, _session(False) as sb:
+        for r in range(8):
+            ev = churn.get(r)
+            for s in (sa, sb):
+                if ev is not None:
+                    s.emit(ev)
+                for i in range(8):
+                    s.submit_update(f"r{r}u{i}", _ext(f"r{r}u{i}"),
+                                    weight=1.0 + i % 3)
+                s.run_round()
+            wa = np.asarray(sa.trainer.params["w"])
+            wb = np.asarray(sb.trainer.params["w"])
+            assert np.array_equal(wa, wb), f"round {r} diverged"
+        ma, mb = sa.metrics()["planner"], sb.metrics()["planner"]
+        assert ma["hits"] >= 2 and ma["invalidations"] >= 2
+        assert mb["hits"] == 0
+        assert "planner" in sa.status()
+
+
+# ---------------------------------------------------------------------------
+# deep fold trees
+# ---------------------------------------------------------------------------
+
+def _assignment(n_nodes, per_node=1):
+    return {f"n{i:02d}": list(range(i * per_node, (i + 1) * per_node))
+            for i in range(n_nodes)}
+
+
+def test_deep_plan_shape_and_heaviest_child_placement():
+    asg = _assignment(9)
+    asg["n03"] = [100, 101, 102]       # the heavy subtree
+    plan = build_fold_plan(asg, topology="worker", fanout=2)
+    assert len(plan.mids) == 9
+    assert plan.depth == 4             # 9 → 5 → 3 → 2 → root
+    # trailing singletons hoist instead of wrapping: 4 + 2 + 1 stages
+    assert len(plan.inners) == 7
+    sites = {s.agg_id: s for s in plan.sites}
+    for s in plan.inners + (plan.site(plan.root),):
+        assert 2 <= len(s.children) <= 2
+        # co-located with its heaviest child (subtree count, name tie)
+        child_nodes = {sites[c].node for c in s.children}
+        assert s.node in child_nodes
+    # n03's weight pulls its whole spine of inner folds onto n03
+    parent = {c: s for s in plan.sites for c in s.children}
+    spine = "mid@n03"
+    while spine in parent:
+        assert parent[spine].node == "n03"
+        spine = parent[spine].agg_id
+
+
+def test_deep_plan_fanout_noop_and_validation():
+    asg = _assignment(6)
+    flat = build_fold_plan(asg, topology="worker")
+    assert build_fold_plan(asg, topology="worker", fanout=8) == flat
+    assert flat.depth == 1 and not flat.inners
+    with pytest.raises(ValueError):
+        build_fold_plan(asg, fanout=1)
+
+
+def test_deep_plan_traffic_within_two_level_bound():
+    model_bytes = 4096 * 4
+    for fanout in (2, 3, 8):
+        plan = build_fold_plan(_assignment(40), topology="worker",
+                               fanout=fanout)
+        crossings = plan_cross_node_transfers(plan)
+        # every inner/root is co-located with ≥1 child, so the deep
+        # tree ships at most leaves−1 partials — within the same bound
+        # the flat plan is gated by
+        assert crossings <= len(plan.mids) - 1
+        assert crossings * model_bytes \
+            < partial_traffic_bound(40, model_bytes)
+
+
+def test_deep_plan_wire_roundtrip_and_restamp():
+    plan = build_fold_plan(_assignment(9), topology="worker", fanout=3,
+                           job="j", round_tag=1)
+    assert FoldPlan.from_wire(plan.to_wire()) == plan
+    re = plan.restamp(2)
+    assert re != plan and len(re.sites) == len(plan.sites)
+    assert all("#2@" in s.agg_id for s in re.sites)
+    assert {s.node for s in re.sites} == {s.node for s in plan.sites}
+    untagged = build_fold_plan(_assignment(9), topology="worker", fanout=3)
+    assert untagged.restamp(None) is untagged
+
+
+def _run(plan, n_nodes=12, per_node=2, n_elems=32):
+    rng = np.random.default_rng(5)
+    ups = [(f"n{i:02d}", f"c{i}.{j}",
+            rng.integers(-16, 16, n_elems).astype(np.float32), 1.0)
+           for i in range(n_nodes) for j in range(per_node)]
+    rt = InProcRuntime()
+    out = RoundDriver(rt).run_round(
+        round_id=0, assignment=_assignment(n_nodes, per_node),
+        updates=ups, goal=n_nodes * per_node, n_elems=n_elems,
+        fold_plan=plan)
+    rt.close()
+    return out
+
+
+def test_deep_fold_bitexact_across_tiers():
+    """Integer-valued f32 updates fold to the same bits through the
+    flat two-level plan and a fanout-3 deep tree, under both the
+    controller and worker root tiers."""
+    asg = _assignment(12, 2)
+    flat = _run(build_fold_plan(asg, topology="controller"))
+    outs = {}
+    for tier in ("controller", "worker"):
+        out = outs[tier] = _run(build_fold_plan(asg, topology=tier,
+                                                fanout=3))
+        assert out.count == 24 and out.fold_tier == tier
+        assert np.array_equal(out.delta, flat.delta)
+    # the inner stages actually ran: their exec stamps are recorded
+    deep_plan = build_fold_plan(asg, topology="worker", fanout=3)
+    assert any(s.agg_id in outs["worker"].exec_s
+               for s in deep_plan.inners)
+
+
+def test_deep_fold_crashed_inner_falls_back_to_flat():
+    """A crashed inner stage must not cost the round: the driver bails
+    to the battle-tested flat fold over the still-live leaf partials
+    and the delta is unchanged."""
+    class CrashInner(InProcRuntime):
+        def __init__(self):
+            super().__init__()
+            self.crashed = False
+
+        def spawn_aggregator(self, agg_id, **kw):
+            super().spawn_aggregator(agg_id, **kw)
+            if agg_id.startswith("fold") and not self.crashed:
+                self.crashed = True
+                self._open.pop(agg_id)
+                self._events.append(WorkerCrashed(
+                    round_id=kw.get("round_id", 0), agg_id=agg_id))
+
+        def deliver_partial(self, agg_id, *a, **kw):
+            if agg_id.startswith("fold") and agg_id not in self._open:
+                return                 # deliveries to the corpse vanish
+            super().deliver_partial(agg_id, *a, **kw)
+
+    asg = _assignment(12, 2)
+    flat = _run(build_fold_plan(asg, topology="controller"))
+    rng = np.random.default_rng(5)
+    ups = [(f"n{i:02d}", f"c{i}.{j}",
+            rng.integers(-16, 16, 32).astype(np.float32), 1.0)
+           for i in range(12) for j in range(2)]
+    rt = CrashInner()
+    out = RoundDriver(rt).run_round(
+        round_id=0, assignment=asg, updates=ups, goal=24, n_elems=32,
+        fold_plan=build_fold_plan(asg, topology="controller", fanout=3))
+    rt.close()
+    assert rt.crashed
+    assert out.fold_tier == "controller" and out.count == 24
+    assert np.array_equal(out.delta, flat.delta)
+
+
+def test_choose_fanout_policy():
+    assert choose_fanout(4) is None            # already a sane fan-in
+    ex = _fleet([10.0] * 4)                    # wire EWMAs at 0
+    assert choose_fanout(25, ex) == 5          # √M baseline
+    wire = _fleet([10.0] * 4, wire_time_s=1.0)
+    assert choose_fanout(25, wire) == 10       # shipping dear: widen
+    hot = _fleet([10.0] * 4, wire_time_s=50.0)
+    assert choose_fanout(100, hot) == 16       # clamped to the cap
+    assert choose_fanout(5, hot) == 5          # never above site count
+
+
+# ---------------------------------------------------------------------------
+# pool idle index
+# ---------------------------------------------------------------------------
+
+def test_pool_idle_heap_keeps_first_created_wins_order():
+    pool = AggregatorPool()
+    a, _ = pool.acquire("n0", Role.LEAF)
+    b, _ = pool.acquire("n0", Role.LEAF)
+    other, _ = pool.acquire("n1", Role.LEAF)
+    pool.release(b.agg_id)
+    pool.release(a.agg_id)
+    pool.release(a.agg_id)             # re-release: must not double-index
+    pool.release(other.agg_id)
+    got, delay = pool.acquire("n0", Role.MIDDLE)
+    assert got is a and delay == 0.0   # oldest creation wins, promoted
+    assert got.role == Role.MIDDLE
+    got2, _ = pool.acquire("n0", Role.LEAF)
+    assert got2 is b
+    pool.terminate(other.agg_id)       # stale heap entry: lazy-deleted
+    fresh, delay = pool.acquire("n1", Role.LEAF)
+    assert fresh is not other and delay == pool.cold_start_s
+    assert pool.stats.reused == 2 and pool.stats.promoted == 1
